@@ -1,0 +1,242 @@
+"""Exact analytic FLOP / byte / collective models per (arch x shape) cell.
+
+Why analytic: XLA's HLO cost analysis counts while/scan bodies ONCE
+(verified empirically in this container: an 8-iteration scan of matmuls
+reports 1 matmul of flops), so the layer-scanned train/prefill cells
+under-count ~n_layers x. Decode cells match HLO within ~10% (see
+EXPERIMENTS.md §Roofline). The formulas below mirror the implementation
+op-for-op — including its inefficiencies (full masked causal attention =
+2x useful attention FLOPs, remat recompute, MoE capacity slack) — so the
+MODEL_FLOPS/impl ratio honestly exposes overheads the compiler numbers
+cannot see.
+
+All values are GLOBAL per optimizer step / forward; roofline.py divides by
+chip count and peak rates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs import get_config, shape_for
+
+# hardware constants (v5e per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+LINK_BW = 50e9             # B/s per ICI link
+CHIPS = 256                # single-pod roofline mesh
+TP = 16                    # model axis
+DP = 16                    # data axis
+
+
+def _dense_layer_flops(cfg, tokens, attended, *, window=0):
+    """Forward FLOPs for one attention+MLP layer over `tokens` tokens, each
+    attending to `attended` kv positions (the IMPLEMENTATION cost: the
+    baseline computes all chunks then masks)."""
+    d, hd = cfg.d_model, cfg.hd
+    qd, kvd = cfg.n_heads * hd, cfg.n_kv * hd
+    proj = 2 * tokens * d * (qd + 2 * kvd) + 2 * tokens * qd * d
+    attn = 4 * tokens * cfg.n_heads * hd * attended
+    if cfg.n_experts:
+        cf = 1.25
+        ffn = 2 * tokens * d * cfg.n_experts  # router
+        ffn += 6 * tokens * d * cfg.expert_ff * cfg.top_k * cf
+    else:
+        ffn = 6 * tokens * d * cfg.d_ff
+    return proj + attn + ffn
+
+
+def _ssm_layer_flops(cfg, tokens):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh, hd, n, q = din // cfg.ssm_headdim, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_chunk
+    proj = 2 * tokens * d * (2 * din + 2 * n + nh) + 2 * tokens * din * d
+    conv = 2 * tokens * din * cfg.ssm_conv
+    intra = tokens * q * (2 * n + 2 * nh * hd)          # cb + att@x per token-pair row
+    inter = 4 * tokens * n * nh * hd                    # states in/out
+    return proj + conv + intra + inter
+
+
+def _lru_layer_flops(cfg, tokens):
+    d, dl = cfg.d_model, cfg.d_lru
+    branch = 2 * tokens * d * dl * 2 + 2 * tokens * dl * cfg.ssm_conv
+    gates = 2 * tokens * dl * dl * 2
+    out = 2 * tokens * dl * d
+    mlp = 6 * tokens * d * cfg.d_ff
+    return branch + gates + out + mlp
+
+
+def _layer_counts(cfg):
+    """(n_attn_global, n_attn_local, n_rec, n_ssm) layers."""
+    if cfg.family == "ssm":
+        return 0, 0, 0, cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        kinds = [pat[i % len(pat)] for i in range(cfg.n_layers)]
+        n_attn = sum(1 for k in kinds if "attn" in k)
+        return 0, n_attn, cfg.n_layers - n_attn, 0
+    if cfg.local_global_period == 2 and cfg.sliding_window:
+        return cfg.n_layers // 2, cfg.n_layers // 2, 0, 0
+    return cfg.n_layers, 0, 0, 0
+
+
+@dataclass
+class CellModel:
+    impl_flops: float          # implementation forward(+backward) FLOPs, global
+    model_flops: float         # 6*N*D / 2*N*D "useful" reference
+    hbm_bytes_per_chip: float  # per-device traffic per step
+    coll_bytes_per_chip: float  # per-device collective traffic per step
+    notes: str
+
+
+def cell_model(arch: str, shape: str, *, microbatches: int = 1,
+               remat: bool = True) -> CellModel:
+    cfg = get_config(arch)
+    sh = shape_for(shape)
+    b, s, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    d = cfg.d_model
+    wbytes = 2 * n  # bf16
+
+    if cfg.family == "encdec":
+        # encoder over frames + decoder over tokens
+        f = cfg.enc_frames
+        if kind in ("train", "prefill"):
+            tokens_dec, tokens_enc = b * s, b * f
+            fwd = cfg.enc_layers * _dense_layer_flops(cfg, tokens_enc, f)
+            fwd += cfg.n_layers * (_dense_layer_flops(cfg, tokens_dec, s)
+                                   + 4 * tokens_dec * cfg.n_heads * cfg.hd * f
+                                   + 2 * tokens_dec * d * (cfg.n_heads + 2 * cfg.n_kv) * cfg.hd)
+            fwd += 2 * tokens_dec * d * cfg.vocab
+            d_tok = b * s
+        else:
+            tokens_dec = b
+            fwd = cfg.n_layers * (_dense_layer_flops(cfg, tokens_dec, s)
+                                  + 4 * tokens_dec * cfg.n_heads * cfg.hd * f)
+            fwd += 2 * tokens_dec * d * cfg.vocab
+            d_tok = b
+    else:
+        ng, nl, nr, ns = _layer_counts(cfg)
+        if kind in ("train", "prefill"):
+            tokens = b * s
+            att_full = s            # baseline computes all chunks, masks
+            fwd = ng * _dense_layer_flops(cfg, tokens, att_full)
+            fwd += nl * _dense_layer_flops(cfg, tokens, att_full, window=cfg.sliding_window)
+            fwd += nr * _lru_layer_flops(cfg, tokens)
+            fwd += ns * _ssm_layer_flops(cfg, tokens)
+            fwd += 2 * tokens * d * cfg.vocab
+            d_tok = tokens
+        else:  # decode: one token, attends to cache
+            tokens = b
+            att = s
+            att_local = min(s, cfg.sliding_window or s)
+            fwd = ng * _dense_layer_flops(cfg, tokens, att)
+            fwd += nl * _dense_layer_flops(cfg, tokens, att_local, window=cfg.sliding_window)
+            fwd += nr * _lru_layer_flops(cfg, tokens)
+            fwd += ns * _ssm_layer_flops(cfg, tokens)
+            fwd += 2 * tokens * d * cfg.vocab
+            d_tok = b
+
+    if kind == "train":
+        mult = 4.0 if remat else 3.0   # fwd + 2x bwd (+1x remat refwd)
+        impl = fwd * mult
+        model = 6 * (n_active if cfg.n_experts else n) * d_tok
+    else:
+        impl = fwd
+        model = 2 * (n_active if cfg.n_experts else n) * d_tok
+
+    # ---- per-chip HBM traffic -------------------------------------------------
+    tokens_local = d_tok / DP if b >= DP else d_tok
+    act_unit = tokens_local * d * 2      # one bf16 activation tensor / chip
+    nlayers = cfg.n_layers + cfg.enc_layers
+    if kind == "train":
+        w_io = 3 * microbatches * wbytes / TP          # fwd+bwd+remat reads of gathered shard
+        opt_io = 20 * n / CHIPS                         # f32 m,v,p read+write
+        act_io = 10 * nlayers * act_unit / microbatches * microbatches
+        hbm = w_io + opt_io + act_io
+    elif kind == "prefill":
+        hbm = wbytes / TP + 10 * nlayers * act_unit
+        # cache writes
+        hbm += 2 * nlayers * tokens_local * cfg.n_kv * cfg.hd * 2 * 2
+    else:  # decode: weights re-read per token + cache read
+        hbm = wbytes / TP
+        blocal = max(1, b // DP)
+        if cfg.family == "ssm":
+            din = cfg.ssm_expand * d
+            state = cfg.n_layers * blocal * (din // cfg.ssm_headdim) * cfg.ssm_state * cfg.ssm_headdim * 4
+            hbm += 2 * state / TP * 2
+        elif cfg.family == "hybrid":
+            _, nl, nr, _ = _layer_counts(cfg)
+            kvb = nl * blocal * min(s, cfg.sliding_window) * cfg.n_kv * cfg.hd * 2 * 2
+            lru = nr * blocal * cfg.d_lru * 4 * 2
+            hbm += (kvb + lru) / TP * 2
+        else:
+            ng, nl, _, _ = _layer_counts(cfg)
+            kvb = (ng * s + nl * min(s, cfg.sliding_window or s)) * blocal * cfg.n_kv * cfg.hd * 2 * 2
+            hbm += kvb / TP   # kv heads or hd sharded over model
+
+    # ---- per-chip collective traffic -------------------------------------------
+    if kind == "train":
+        ag = 2 * microbatches * wbytes / TP            # FSDP AG fwd+bwd(remat)
+        rs = 4 * n / CHIPS                             # grad reduce-scatter (f32), per-chip
+        tp_ar = 4 * nlayers * act_unit                 # TP activation all-reduces
+        coll = ag + rs + tp_ar
+    elif kind == "prefill":
+        coll = 4 * nlayers * act_unit
+    else:
+        blocal = max(1, b // DP)
+        coll = 4 * nlayers * blocal * d * 2
+
+    return CellModel(
+        impl_flops=impl,
+        model_flops=model,
+        hbm_bytes_per_chip=hbm,
+        coll_bytes_per_chip=coll,
+        notes=f"kind={kind} mb={microbatches}",
+    )
+
+
+def irreducible_memory_bytes(arch: str, shape: str) -> float:
+    """Per-chip traffic that NO implementation of this cell can avoid:
+    weights touched once (+opt state for train, +cache once for decode) and
+    two activation passes per layer. The decode numerator of the roofline
+    fraction (decode is intrinsically memory-bound; its score is how close
+    the step sits to this floor, not to the compute roof)."""
+    cfg = get_config(arch)
+    sh = shape_for(shape)
+    b, s, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    n = cfg.param_count()
+    m = cell_model(arch, shape)
+    if kind == "decode":
+        return m.hbm_bytes_per_chip          # already minimal: weights + state
+    d_tok = b * s
+    act_unit = d_tok / DP * cfg.d_model * 2
+    nlayers = cfg.n_layers + cfg.enc_layers
+    base = 2 * n / TP + 2 * nlayers * act_unit
+    if kind == "train":
+        base += 20 * n / CHIPS
+    return base
+
+
+def roofline_terms(arch: str, shape: str, *, microbatches: int = 1):
+    """Three roofline terms + fraction. fraction = attainable-floor time /
+    max(term): floor = max(MODEL_FLOPS time, irreducible HBM time)."""
+    m = cell_model(arch, shape, microbatches=microbatches)
+    compute_s = m.impl_flops / CHIPS / PEAK_FLOPS
+    memory_s = m.hbm_bytes_per_chip / HBM_BW
+    coll_s = m.coll_bytes_per_chip / LINK_BW
+    model_s = m.model_flops / CHIPS / PEAK_FLOPS
+    floor_s = max(model_s, irreducible_memory_bytes(arch, shape) / HBM_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, coll_s)
+    frac = floor_s / bound if bound > 0 else 0.0
+    return dict(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        model_flops=m.model_flops, impl_flops=m.impl_flops,
+        useful_ratio=m.model_flops / m.impl_flops,
+        model_s=model_s, floor_s=floor_s, dominant=dominant,
+        roofline_fraction=min(frac, 1.0),
+        hbm_bytes_per_chip=m.hbm_bytes_per_chip,
+        coll_bytes_per_chip=m.coll_bytes_per_chip,
+    )

@@ -1,0 +1,70 @@
+"""Paper Fig. 10 analogue: workload mixes WITH 2% GetPath reachability queries.
+
+Reproduces the paper's second experiment set: the same three mixes with 2%
+GetPath (the paper caps queries at 2% "considering that its overhead in
+comparison to other operations is significant"). Queries run the
+double-collect session against the live state between mutation batches —
+the obstruction-free protocol, so we also report the mean collect-rounds
+per query (2 = clean double collect; >2 = retries forced by concurrent
+mutations), which is the paper's progress story quantified.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import apply_ops_fast, apply_ops, get_path_session, make_op_batch
+from benchmarks.fig9_throughput import MIXES, gen_ops, seed_graph
+
+
+def run_mix(engine, g0, mix, lanes, nv, *, total_ops=2048, getpath_frac=0.02, seed=2):
+    rng = np.random.default_rng(seed)
+    state = {"g": g0}
+    n_ops = 0
+    n_queries = 0
+    rounds = 0
+    found = 0
+    # warmup (engine AND the query path's collect/compare jits)
+    engine(g0, make_op_batch(gen_ops(rng, mix, lanes, nv), lanes))
+    get_path_session(lambda: g0, 0, 1, max_rounds=4)
+    t0 = time.perf_counter()
+    while n_ops < total_ops:
+        batch = make_op_batch(gen_ops(rng, mix, lanes, nv), lanes)
+        state["g"], _ = engine(state["g"], batch)
+        n_ops += lanes
+        if rng.random() < getpath_frac * lanes:
+            s, d = (int(x) for x in rng.integers(0, nv, 2))
+            pr = get_path_session(lambda: state["g"], s, d, max_rounds=16)
+            n_queries += 1
+            rounds += int(pr.rounds)
+            found += int(bool(pr.found))
+    jax.block_until_ready(state["g"].adj)
+    dt = time.perf_counter() - t0
+    return (n_ops + n_queries) / dt, n_queries, rounds / max(n_queries, 1), found
+
+
+def main(quick=False):
+    g0, oracle, nv = seed_graph()
+    total = 512 if quick else 2048
+    out = []
+    print(f'{"mix":8s} {"lanes":>6s} {"engine":>12s} {"ops/s":>10s} '
+          f'{"queries":>8s} {"avg_rounds":>10s}')
+    for mix_name, mix in MIXES.items():
+        for lanes in (16, 64, 256):
+            for name, engine in (("nonblocking", apply_ops_fast),
+                                 ("coarselock", apply_ops)):
+                tput, nq, avg_r, found = run_mix(engine, g0, mix, lanes, nv,
+                                                 total_ops=total)
+                print(f"{mix_name:8s} {lanes:6d} {name:>12s} {tput:10.0f} "
+                      f"{nq:8d} {avg_r:10.2f}")
+                out.append(f"fig10/{mix_name}/{name}/lanes{lanes},"
+                           f"{1e6/tput:.1f},queries={nq};rounds={avg_r:.2f}")
+        if quick:
+            break
+    return out
+
+
+if __name__ == "__main__":
+    main()

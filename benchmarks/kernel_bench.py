@@ -1,0 +1,74 @@
+"""BFS kernel benchmark: structural FLOP/byte accounting + wall time of the
+jnp reference path (Pallas runs in interpret mode on CPU: its wall time is
+meaningless, so the derived column reports the kernel's roofline-relevant
+arithmetic intensity instead — tile mat-vec FLOPs vs HBM tile traffic)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import add_edge, add_vertex, bfs, make_graph
+from repro.core.bfs import bfs_step_jnp
+
+
+def build_graph(v, avg_deg, seed=0):
+    rng = np.random.default_rng(seed)
+    g = make_graph(v)
+    for k in range(v - 2):
+        g, _ = add_vertex(g, k)
+    for _ in range(v * avg_deg):
+        a, b = rng.integers(0, v - 2, 2)
+        g, _ = add_edge(g, int(a), int(b))
+    return g
+
+
+def bench_step(v=1024, density=0.05, iters=20):
+    rng = np.random.default_rng(0)
+    adj = jnp.asarray((rng.random((v, v)) < density).astype(np.uint8))
+    frontier = jnp.asarray(rng.random(v) < 0.2)
+    alive = jnp.ones(v, bool)
+    visited = jnp.zeros(v, bool)
+    f = jax.jit(bfs_step_jnp)
+    r = f(frontier, adj, alive, visited)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = f(frontier, adj, alive, visited)
+    jax.block_until_ready(r)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    flops = 2 * v * v              # tile mat-vec
+    bytes_hbm = v * v * 1 + v * 16  # adj int8 + vectors
+    return us, flops, bytes_hbm
+
+
+def bench_full_bfs(v=512, avg_deg=8):
+    g = build_graph(v, avg_deg)
+    r = bfs(g, jnp.int32(0), jnp.int32(-1))
+    jax.block_until_ready(r.parent)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        r = bfs(g, jnp.int32(0), jnp.int32(-1))
+    jax.block_until_ready(r.parent)
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    return us, int(r.steps)
+
+
+def main(quick=False):
+    out = []
+    for v in ((256, 1024) if quick else (256, 1024, 2048)):
+        us, flops, by = bench_step(v)
+        ai = flops / by
+        out.append(f"bfs_step/V{v},{us:.1f},AI={ai:.2f}flop_per_byte")
+        print(f"bfs_step V={v}: {us:8.1f} us/step  AI={ai:.2f} flop/B "
+              f"(TPU tile mat-vec feeds MXU at {flops/1e6:.1f} MFLOP/step)")
+    us, steps = bench_full_bfs()
+    out.append(f"bfs_full/V512,{us:.1f},supersteps={steps}")
+    print(f"bfs full V=512: {us:.1f} us ({steps} supersteps)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

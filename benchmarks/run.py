@@ -1,0 +1,57 @@
+"""Benchmark driver — one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
+  python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    csv: list[str] = []
+
+    print("=" * 72)
+    print("Fig. 9 analogue — throughput vs lanes, 3 mixes, no GetPath")
+    print("=" * 72)
+    from benchmarks import fig9_throughput
+    csv += fig9_throughput.main(quick=args.quick)
+
+    print("\n" + "=" * 72)
+    print("Fig. 10 analogue — mixes + 2% GetPath (double-collect sessions)")
+    print("=" * 72)
+    from benchmarks import fig10_getpath
+    csv += fig10_getpath.main(quick=args.quick)
+
+    print("\n" + "=" * 72)
+    print("BFS kernel — structural intensity + jnp-path wall time")
+    print("=" * 72)
+    from benchmarks import kernel_bench
+    csv += kernel_bench.main(quick=args.quick)
+
+    print("\n" + "=" * 72)
+    print("Roofline — per (arch x shape), single-pod 256 chips (see EXPERIMENTS.md)")
+    print("=" * 72)
+    from benchmarks import roofline
+    rows = roofline.build_table()
+    print(roofline.format_table(rows))
+    for r in rows:
+        if not r.get("skipped"):
+            csv.append(f'roofline/{r["arch"]}/{r["shape"]},'
+                       f'{r["compute_s"]*1e6:.1f},'
+                       f'dominant={r["dominant"]};frac={r["roofline_fraction"]:.3f}')
+
+    print("\n" + "=" * 72)
+    print("CSV (name,us_per_call,derived)")
+    print("=" * 72)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

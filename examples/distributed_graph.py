@@ -1,0 +1,52 @@
+"""Distributed graph example: row-sharded state, collective BFS, owner-routed
+mutations — the paper's algorithm as a multi-device service.
+
+    PYTHONPATH=src python examples/distributed_graph.py          # 1 device
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/distributed_graph.py      # 8 shards
+
+(The env var must be set before launch; on a real fleet the same code runs
+under jax.distributed with one process per host.)
+"""
+import numpy as np
+
+import jax
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, OP_REM_E, GraphOracle, make_graph, make_op_batch,
+)
+from repro.core.distributed import (
+    dapply_ops, dget_path_session, make_graph_mesh, shard_graph,
+)
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    mesh = make_graph_mesh()
+    g = shard_graph(mesh, make_graph(128))
+    oracle = GraphOracle(128)
+    rng = np.random.default_rng(0)
+
+    ops = [(OP_ADD_V, k, -1, -1) for k in range(32)]
+    ops += [((OP_ADD_E if rng.random() < 0.8 else OP_REM_E),
+             int(a), int(b), -1) for a, b in rng.integers(0, 32, (96, 2))]
+    for i in range(0, len(ops), 16):
+        chunk = ops[i:i + 16]
+        g, res = dapply_ops(mesh, g, make_op_batch(chunk))
+        want = oracle.apply_batch(chunk)
+        assert [int(x) for x in np.asarray(res)] == want
+    print(f"applied {len(ops)} owner-routed ops across "
+          f"{mesh.devices.size} shard(s); results match the oracle")
+
+    hits = 0
+    for (s, d) in [(0, 31), (5, 9), (30, 2), (1, 17)]:
+        ok, n, keys, rounds = dget_path_session(mesh, lambda: g, s, d)
+        assert ok == oracle.reachable(s, d)
+        status = "->".join(map(str, keys)) if ok else "unreachable"
+        print(f"GetPath({s},{d}) [{rounds} collects, psum-validated]: {status}")
+        hits += ok
+    print(f"{hits}/4 reachable; distributed double-collect verified vs oracle")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: Chatterjee et al. (2018)'s concurrent non-blocking unbounded graph
+with reachability queries, as a TPU-native multi-pod JAX framework.
+
+Subpackages: core (the paper's ADT), kernels (Pallas), models, configs,
+parallel, optim, checkpoint, data, runtime, launch. See README.md.
+"""
+
+__version__ = "0.1.0"

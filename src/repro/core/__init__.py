@@ -1,0 +1,71 @@
+"""Core library: the paper's concurrent non-blocking graph ADT in JAX.
+
+Public surface:
+  GraphState, OpBatch, make_graph, grow, make_op_batch   (graph.py)
+  apply_ops, apply_ops_fast, compact, add_vertex, ...     (ops.py)
+  bfs, extract_path                                       (bfs.py)
+  collect, compare_collects, get_path, get_path_session,
+  interleaved_getpath                                     (snapshot.py)
+  ShardedGraph / distributed BFS                          (distributed.py)
+  GraphOracle                                             (oracle.py)
+"""
+from repro.core.graph import (  # noqa: F401
+    EMPTY_KEY,
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_CON_E,
+    OP_CON_V,
+    OP_NOP,
+    OP_REM_E,
+    OP_REM_V,
+    R_CAS_FAIL,
+    R_EDGE_ADDED,
+    R_EDGE_NOT_PRESENT,
+    R_EDGE_PRESENT,
+    R_EDGE_REMOVED,
+    R_FALSE,
+    R_PENDING,
+    R_TABLE_FULL,
+    R_TRUE,
+    R_VERTEX_NOT_PRESENT,
+    RESULT_NAMES,
+    GraphState,
+    OpBatch,
+    contains_edge,
+    contains_vertex,
+    find_slot,
+    find_slots,
+    grow,
+    make_graph,
+    make_op_batch,
+    num_edges,
+    num_vertices,
+    version_vector,
+)
+from repro.core.ops import (  # noqa: F401
+    add_edge,
+    add_edge_undirected,
+    add_vertex,
+    apply_ops,
+    apply_ops_fast,
+    compact,
+    degree,
+    neighbors,
+    remove_edge,
+    remove_edge_undirected,
+    remove_vertex,
+)
+from repro.core.bfs import bfs, extract_path, reachable_count  # noqa: F401
+from repro.core.snapshot import (  # noqa: F401
+    Collect,
+    PathResult,
+    collect,
+    collect_batch,
+    compare_collect_batches,
+    compare_collects,
+    get_path,
+    get_path_session,
+    get_paths_session,
+    interleaved_getpath,
+)
+from repro.core.oracle import GraphOracle  # noqa: F401

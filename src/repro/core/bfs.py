@@ -1,0 +1,134 @@
+"""BFS traversal as tiled mat-vec — the TPU-native replacement for pointer chasing.
+
+The paper's TreeCollect walks edge-lists node by node. On TPU the same
+traversal is a sequence of *frontier expansion* steps over adjacency tiles:
+
+    reach[j]  = OR_i  frontier[i] AND adj[i, j]          (MXU tile mat-vec)
+    parent[j] = min_i { i : frontier[i] AND adj[i, j] }  (VPU masked min)
+    new       = reach AND alive AND NOT visited
+
+One step costs O(V^2 / P) dense work with high arithmetic intensity instead of
+O(E) random accesses — the hardware-adaptation core of this reproduction
+(DESIGN.md §1). ``step_fn`` is pluggable: ``"jnp"`` (pure reference, always
+available) or ``"pallas"`` (kernels/bfs_step, interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GraphState
+
+INT32_MAX = jnp.int32(2**31 - 1)
+
+
+def bfs_step_jnp(frontier, adj, alive, visited):
+    """Reference frontier expansion. Returns (new_frontier[V] bool, parent[V] int32).
+
+    parent[j] = smallest frontier index i with an edge i->j (or -1).
+    """
+    f = frontier.astype(jnp.float32)
+    reach = (f @ adj.astype(jnp.float32)) > 0
+    new = reach & alive & ~visited
+    v = adj.shape[0]
+    idx = jnp.arange(v, dtype=jnp.int32)
+    # candidate parent rows: masked min over i of (frontier_i & adj_ij)
+    cand = jnp.where(frontier[:, None] & (adj > 0), idx[:, None], INT32_MAX)
+    parent = jnp.min(cand, axis=0)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new, parent
+
+
+def _get_step_fn(backend: str):
+    if backend == "jnp":
+        return bfs_step_jnp
+    if backend == "pallas":
+        from repro.kernels.bfs_step.ops import bfs_step as bfs_step_pallas
+
+        return bfs_step_pallas
+    raise ValueError(f"unknown bfs backend {backend!r}")
+
+
+class BFSResult(NamedTuple):
+    found: jax.Array    # bool   — dst reached
+    parent: jax.Array   # int32[V] — BFS tree (slot -> parent slot, -1 root/unvisited)
+    dist: jax.Array     # int32[V] — BFS depth (-1 unvisited)
+    expanded: jax.Array  # bool[V] — rows whose adjacency was read (visited set)
+    steps: jax.Array    # int32  — number of frontier expansions
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def bfs(state: GraphState, src_slot, dst_slot, backend: str = "jnp") -> BFSResult:
+    """Full BFS from ``src_slot``; early exit when ``dst_slot`` is reached.
+
+    ``dst_slot < 0`` explores the full reachable set (used by benchmarks).
+    Traversable edge: adj[u, w] & alive[u] & alive[w] — a dead endpoint makes
+    the ENode logically absent, exactly the paper's marked-ptv rule.
+    """
+    v = state.capacity
+    alive = state.valive
+    src_ok = (src_slot >= 0) & alive[jnp.maximum(src_slot, 0)]
+    s = jnp.maximum(src_slot, 0)
+
+    frontier0 = jnp.zeros((v,), jnp.bool_).at[s].set(src_ok)
+    visited0 = frontier0
+    parent0 = jnp.full((v,), -1, jnp.int32)
+    dist0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
+    expanded0 = jnp.zeros((v,), jnp.bool_)
+    step_fn = _get_step_fn(backend)
+
+    def cond(c):
+        frontier, visited, parent, dist, expanded, step = c
+        hit_dst = (dst_slot >= 0) & visited[jnp.maximum(dst_slot, 0)]
+        return jnp.any(frontier) & ~hit_dst & (step < v)
+
+    def body(c):
+        frontier, visited, parent, dist, expanded, step = c
+        expanded = expanded | frontier
+        new, par = step_fn(frontier, state.adj, alive, visited)
+        parent = jnp.where(new, par, parent)
+        dist = jnp.where(new, step + 1, dist)
+        visited = visited | new
+        return new, visited, parent, dist, expanded, step + 1
+
+    frontier, visited, parent, dist, expanded, steps = jax.lax.while_loop(
+        cond, body, (frontier0, visited0, parent0, dist0, expanded0, jnp.int32(0))
+    )
+    found = (dst_slot >= 0) & visited[jnp.maximum(dst_slot, 0)] & src_ok
+    return BFSResult(found, parent, dist, expanded, steps)
+
+
+@jax.jit
+def extract_path(parent: jax.Array, src_slot, dst_slot):
+    """Walk the BFS tree from dst back to src.
+
+    Returns (length, slots[V]) — ``slots[:length]`` is the path src..dst in
+    order, padded with -1. This is the paper's p-pointer trace in GetPath.
+    """
+    v = parent.shape[0]
+    # reversed walk: collect dst, parent(dst), ...
+    def cond(c):
+        cur, n, _ = c
+        return (cur >= 0) & (n < v)
+
+    def body(c):
+        cur, n, buf = c
+        buf = buf.at[n].set(cur)
+        nxt = jnp.where(cur == src_slot, -1, parent[cur])
+        return nxt, n + 1, buf
+
+    _, n, rev = jax.lax.while_loop(
+        cond, body, (jnp.asarray(dst_slot, jnp.int32), jnp.int32(0), jnp.full((v,), -1, jnp.int32))
+    )
+    idx = jnp.arange(v, dtype=jnp.int32)
+    fwd = jnp.where(idx < n, rev[jnp.clip(n - 1 - idx, 0, v - 1)], -1)
+    return n, fwd
+
+
+def reachable_count(state: GraphState, src_slot, backend: str = "jnp") -> jax.Array:
+    """|{w : src ->* w}| — exercised by benchmarks."""
+    r = bfs(state, src_slot, jnp.int32(-1), backend=backend)
+    return jnp.sum((r.dist >= 0).astype(jnp.int32))

@@ -1,0 +1,243 @@
+"""Device-resident dynamic directed graph state — the TPU-native analogue of the
+paper's linked-list-of-linked-lists adjacency structure.
+
+The paper (Chatterjee et al. 2018) stores the graph as a sorted lock-free
+vertex-list where each VNode roots a sorted lock-free edge-list, and uses
+marked pointers (bit-stolen CAS descriptors) for logical removal plus a
+per-vertex modification counter ``ecnt`` to validate double-collect snapshots.
+
+On a TPU there are no pointers or CAS; the same *logical* state is held in
+dense, tiled device arrays:
+
+  vkey[V]   : key occupying each slot (EMPTY_KEY if slot free) — the VNode key
+  valive[V] : logical presence (True = unmarked VNode, False = "marked")
+  vver[V]   : slot epoch, bumped on every vertex add AND logical remove.
+              Plays the role the memory allocator plays in the paper (fresh
+              address per allocation => no ABA); a (slot, vver) pair is the
+              analogue of a unique VNode address.
+  ecnt[V]   : the paper's ``ecnt`` — bumped by every edge add/remove whose
+              source row is this vertex, and by logical vertex removal.
+  adj[V,V]  : adjacency matrix tiles, adj[i, j] = 1 iff edge slot_i -> slot_j.
+              The edge-list of v is row i; an ENode's ``ptv`` is implicit
+              (column index), and "ENode marked" is adj[i,j] == 0.
+
+"Unbounded" growth is functional capacity doubling (``grow``), amortized like
+a vector; the paper's unboundedness is heap allocation, ours is reallocation.
+Logical vertex removal leaves the adjacency row/column in place (the paper's
+optimization of leaving ENodes whose ``ptv`` is marked); ``core.ops.compact``
+is the physical-removal / helping analogue.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------------
+# Constants
+# ----------------------------------------------------------------------------
+EMPTY_KEY = jnp.int32(-1)
+
+# Op codes for batched operations (structure-of-arrays op batches).
+OP_NOP = 0
+OP_ADD_V = 1
+OP_REM_V = 2
+OP_CON_V = 3
+OP_ADD_E = 4
+OP_REM_E = 5
+OP_CON_E = 6
+
+# Result codes — the paper's indicative strings, as integers.
+R_PENDING = -1
+R_FALSE = 0                 # vertex ops: false
+R_TRUE = 1                  # vertex ops: true
+R_VERTEX_NOT_PRESENT = 2    # "VERTEX NOT PRESENT"
+R_EDGE_NOT_PRESENT = 3      # "EDGE NOT PRESENT"
+R_EDGE_PRESENT = 4          # "EDGE PRESENT" / "EDGE FOUND"
+R_EDGE_ADDED = 5            # "EDGE ADDED"
+R_EDGE_REMOVED = 6          # "EDGE REMOVED"
+R_TABLE_FULL = 7            # out of slots — host must grow() and resubmit
+R_CAS_FAIL = 8              # versioned op saw a stale ecnt (CAS-failure analogue)
+
+RESULT_NAMES = {
+    R_PENDING: "PENDING",
+    R_FALSE: "false",
+    R_TRUE: "true",
+    R_VERTEX_NOT_PRESENT: "VERTEX NOT PRESENT",
+    R_EDGE_NOT_PRESENT: "EDGE NOT PRESENT",
+    R_EDGE_PRESENT: "EDGE PRESENT",
+    R_EDGE_ADDED: "EDGE ADDED",
+    R_EDGE_REMOVED: "EDGE REMOVED",
+    R_TABLE_FULL: "TABLE FULL",
+    R_CAS_FAIL: "CAS FAIL",
+}
+
+
+class GraphState(NamedTuple):
+    """Dense dynamic graph state. All fields are device arrays."""
+
+    vkey: jax.Array    # int32[V]
+    valive: jax.Array  # bool[V]
+    vver: jax.Array    # int32[V]
+    ecnt: jax.Array    # int32[V]
+    adj: jax.Array     # uint8[V, V]
+
+    @property
+    def capacity(self) -> int:
+        return self.vkey.shape[0]
+
+
+class OpBatch(NamedTuple):
+    """A batch of B operations from B logical actors ("threads").
+
+    Lane order is the linearization order (see core.ops). ``expect`` >= 0
+    turns the op into a compare-and-set on the source vertex's ``ecnt``.
+    """
+
+    opcode: jax.Array  # int32[B]
+    key1: jax.Array    # int32[B]
+    key2: jax.Array    # int32[B]  (edge target; ignored by vertex ops)
+    expect: jax.Array  # int32[B]  (-1 = unconditional)
+
+    @property
+    def lanes(self) -> int:
+        return self.opcode.shape[0]
+
+
+# ----------------------------------------------------------------------------
+# Construction / growth
+# ----------------------------------------------------------------------------
+def make_graph(capacity: int = 256) -> GraphState:
+    """Fresh empty graph with the given slot capacity."""
+    v = int(capacity)
+    return GraphState(
+        vkey=jnp.full((v,), EMPTY_KEY, dtype=jnp.int32),
+        valive=jnp.zeros((v,), dtype=jnp.bool_),
+        vver=jnp.zeros((v,), dtype=jnp.int32),
+        ecnt=jnp.zeros((v,), dtype=jnp.int32),
+        adj=jnp.zeros((v, v), dtype=jnp.uint8),
+    )
+
+
+def grow(state: GraphState, new_capacity: int) -> GraphState:
+    """Functionally grow capacity (the 'unbounded' part of the paper's title).
+
+    Amortized O(V^2) like a vector doubling; existing slots, versions and
+    edges are preserved, new slots are free.
+    """
+    old = state.capacity
+    if new_capacity <= old:
+        return state
+    pad = new_capacity - old
+    return GraphState(
+        vkey=jnp.concatenate([state.vkey, jnp.full((pad,), EMPTY_KEY, jnp.int32)]),
+        valive=jnp.concatenate([state.valive, jnp.zeros((pad,), jnp.bool_)]),
+        vver=jnp.concatenate([state.vver, jnp.zeros((pad,), jnp.int32)]),
+        ecnt=jnp.concatenate([state.ecnt, jnp.zeros((pad,), jnp.int32)]),
+        adj=jnp.pad(state.adj, ((0, pad), (0, pad))),
+    )
+
+
+def make_op_batch(ops, lanes: int | None = None) -> OpBatch:
+    """Build an OpBatch from a python list of (opcode, k1[, k2[, expect]])."""
+    import numpy as np
+
+    b = lanes if lanes is not None else len(ops)
+    opc = np.zeros((b,), np.int32)
+    k1 = np.full((b,), -1, np.int32)
+    k2 = np.full((b,), -1, np.int32)
+    exp = np.full((b,), -1, np.int32)
+    for i, op in enumerate(ops):
+        opc[i] = op[0]
+        if len(op) > 1:
+            k1[i] = op[1]
+        if len(op) > 2:
+            k2[i] = op[2]
+        if len(op) > 3:
+            exp[i] = op[3]
+    return OpBatch(jnp.asarray(opc), jnp.asarray(k1), jnp.asarray(k2), jnp.asarray(exp))
+
+
+# ----------------------------------------------------------------------------
+# Lookups (the LocV / LocC analogues)
+# ----------------------------------------------------------------------------
+def find_slot(state: GraphState, key: jax.Array) -> jax.Array:
+    """Slot index of the *alive* vertex with ``key``; -1 if absent.
+
+    This is the LocC/LocV analogue. The paper traverses a sorted list; here
+    membership is a single vectorized compare over the slot table — bounded
+    work, hence the wait-free-lookup property (paper Thm 4.2(i)) is trivially
+    inherited.
+    """
+    hit = (state.vkey == key) & state.valive
+    # At most one alive slot holds a key (ops.py maintains this invariant).
+    idx = jnp.argmax(hit)
+    return jnp.where(jnp.any(hit), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+def find_slots(state: GraphState, keys: jax.Array) -> jax.Array:
+    """Vectorized find_slot for a key vector [B] -> slot ids [B] (-1 absent)."""
+    hit = (state.vkey[None, :] == keys[:, None]) & state.valive[None, :]
+    idx = jnp.argmax(hit, axis=1)
+    return jnp.where(jnp.any(hit, axis=1), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+def contains_vertex(state: GraphState, key) -> jax.Array:
+    """ContainsVertex(k) — wait-free lookup."""
+    return find_slot(state, jnp.asarray(key, jnp.int32)) >= 0
+
+
+def contains_edge(state: GraphState, k, l) -> jax.Array:
+    """ContainsEdge(k, l) — returns a result code (R_EDGE_PRESENT etc.)."""
+    sk = find_slot(state, jnp.asarray(k, jnp.int32))
+    sl = find_slot(state, jnp.asarray(l, jnp.int32))
+    both = (sk >= 0) & (sl >= 0)
+    present = state.adj[jnp.maximum(sk, 0), jnp.maximum(sl, 0)] > 0
+    return jnp.where(
+        both,
+        jnp.where(present, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT),
+        R_VERTEX_NOT_PRESENT,
+    ).astype(jnp.int32)
+
+
+def num_vertices(state: GraphState) -> jax.Array:
+    return jnp.sum(state.valive.astype(jnp.int32))
+
+
+def num_edges(state: GraphState) -> jax.Array:
+    """Edges between *alive* endpoints (lazy rows of dead vertices excluded,
+    mirroring the paper: an ENode whose ptv is marked is logically absent)."""
+    m = state.valive
+    live = state.adj * (m[:, None] & m[None, :]).astype(state.adj.dtype)
+    return jnp.sum(live.astype(jnp.int32))
+
+
+def to_networkx_like(state: GraphState) -> tuple[list[int], list[tuple[int, int]]]:
+    """Host-side export for tests: (vertex keys, edge key-pairs)."""
+    import numpy as np
+
+    vkey = np.asarray(state.vkey)
+    valive = np.asarray(state.valive)
+    adj = np.asarray(state.adj)
+    verts = [int(vkey[i]) for i in range(len(vkey)) if valive[i]]
+    edges = []
+    for i in range(len(vkey)):
+        if not valive[i]:
+            continue
+        for j in np.nonzero(adj[i])[0]:
+            if valive[j]:
+                edges.append((int(vkey[i]), int(vkey[j])))
+    return verts, edges
+
+
+@functools.partial(jax.jit, static_argnums=())
+def version_vector(state: GraphState) -> jax.Array:
+    """The collect-validation vector: (ecnt, vver) stacked as int32[V, 2].
+
+    Two reads of this vector bracketing a traversal implement the paper's
+    double-collect validation (ecnt check in CompareTree/ComparePath plus the
+    VNode-identity check, which vver subsumes).
+    """
+    return jnp.stack([state.ecnt, state.vver], axis=-1)

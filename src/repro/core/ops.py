@@ -1,0 +1,458 @@
+"""Batched, linearizable graph mutations — the lock-free update engine.
+
+Concurrency model (DESIGN.md §3): a batch of B ops from B logical actors is
+applied in one device step. Lane order is the linearization order. Two engines:
+
+``apply_ops``       exact reference engine: a ``lax.fori_loop`` over lanes where
+                    each lane's op is itself fully vectorized. This is the
+                    executable *sequential specification* of the batch
+                    semantics (paper §2.2) and the ground truth for tests.
+
+``apply_ops_fast``  disjoint-access-parallel engine: lanes whose referenced
+                    keys collide with no other lane are applied in ONE
+                    vectorized step (they commute with every other lane, so
+                    any interleaving is linearizable); colliding lanes are
+                    then applied in lane order by a masked correction loop.
+                    This mirrors the paper's performance model exactly —
+                    lock-free threads only serialize on CAS contention, i.e.
+                    on same-location conflicts — and is where the 5-7x-style
+                    scaling over a serialized engine comes from (Fig. 9/10
+                    analogues in benchmarks/).
+
+CAS semantics: ``OpBatch.expect >= 0`` makes an edge op conditional on the
+source vertex's ``ecnt`` equalling ``expect`` (else R_CAS_FAIL) — the direct
+analogue of the paper's CAS-with-retry protocol, surfaced to clients.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import (
+    EMPTY_KEY,
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_CON_E,
+    OP_CON_V,
+    OP_NOP,
+    OP_REM_E,
+    OP_REM_V,
+    R_CAS_FAIL,
+    R_EDGE_ADDED,
+    R_EDGE_NOT_PRESENT,
+    R_EDGE_PRESENT,
+    R_EDGE_REMOVED,
+    R_FALSE,
+    R_TABLE_FULL,
+    R_TRUE,
+    R_VERTEX_NOT_PRESENT,
+    GraphState,
+    OpBatch,
+    find_slot,
+)
+
+
+# ----------------------------------------------------------------------------
+# Single-op primitives (each fully vectorized over the slot table)
+# ----------------------------------------------------------------------------
+def _free_slot(state: GraphState) -> jax.Array:
+    """First truly-free slot (never-used or physically removed). -1 if full."""
+    free = state.vkey == EMPTY_KEY
+    idx = jnp.argmax(free)
+    return jnp.where(jnp.any(free), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+def _add_vertex(state: GraphState, k: jax.Array):
+    slot = find_slot(state, k)
+    exists = slot >= 0
+    new = _free_slot(state)
+    full = (~exists) & (new < 0)
+    do = (~exists) & (new >= 0)
+    tgt = jnp.maximum(new, 0)
+    vkey = state.vkey.at[tgt].set(jnp.where(do, k, state.vkey[tgt]))
+    valive = state.valive.at[tgt].set(jnp.where(do, True, state.valive[tgt]))
+    vver = state.vver.at[tgt].add(jnp.where(do, 1, 0))
+    # A reused slot may carry stale adjacency from a dead predecessor: clear.
+    adj = jnp.where(
+        do,
+        state.adj.at[tgt, :].set(0).at[:, tgt].set(0),
+        state.adj,
+    )
+    ecnt = state.ecnt.at[tgt].set(jnp.where(do, 0, state.ecnt[tgt]))
+    res = jnp.where(exists, R_FALSE, jnp.where(full, R_TABLE_FULL, R_TRUE))
+    return GraphState(vkey, valive, vver, ecnt, adj), res.astype(jnp.int32)
+
+
+def _remove_vertex(state: GraphState, k: jax.Array):
+    slot = find_slot(state, k)
+    do = slot >= 0
+    tgt = jnp.maximum(slot, 0)
+    # Logical removal (paper line 21): mark the vertex; leave edges lazily.
+    valive = state.valive.at[tgt].set(jnp.where(do, False, state.valive[tgt]))
+    vver = state.vver.at[tgt].add(jnp.where(do, 1, 0))
+    ecnt = state.ecnt.at[tgt].add(jnp.where(do, 1, 0))
+    # Incoming edges must invalidate their sources' collects: removing v
+    # changes reachability through every u with (u -> v), and the paper's
+    # adversary argument needs those rows' versions to move. Bump ecnt of all
+    # sources of live in-edges (vectorized FAA over the column).
+    in_src = (state.adj[:, tgt] > 0) & state.valive & do
+    ecnt = ecnt + in_src.astype(jnp.int32)
+    res = jnp.where(do, R_TRUE, R_FALSE)
+    return GraphState(state.vkey, valive, vver, ecnt, state.adj), res.astype(jnp.int32)
+
+
+def _edge_op(state: GraphState, k, l, expect, *, add: bool):
+    sk = find_slot(state, k)
+    sl = find_slot(state, l)
+    both = (sk >= 0) & (sl >= 0)
+    rk, rl = jnp.maximum(sk, 0), jnp.maximum(sl, 0)
+    cas_ok = (expect < 0) | (state.ecnt[rk] == expect)
+    present = state.adj[rk, rl] > 0
+    if add:
+        do = both & cas_ok & ~present
+        ok_res = jnp.where(present, R_EDGE_PRESENT, R_EDGE_ADDED)
+        newval = jnp.uint8(1)
+    else:
+        do = both & cas_ok & present
+        ok_res = jnp.where(present, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT)
+        newval = jnp.uint8(0)
+    adj = state.adj.at[rk, rl].set(jnp.where(do, newval, state.adj[rk, rl]))
+    ecnt = state.ecnt.at[rk].add(jnp.where(do, 1, 0))  # the paper's FAA
+    res = jnp.where(
+        both,
+        jnp.where(cas_ok, ok_res, R_CAS_FAIL),
+        R_VERTEX_NOT_PRESENT,
+    )
+    return GraphState(state.vkey, state.valive, state.vver, ecnt, adj), res.astype(jnp.int32)
+
+
+def _contains_edge_op(state: GraphState, k, l):
+    sk = find_slot(state, k)
+    sl = find_slot(state, l)
+    both = (sk >= 0) & (sl >= 0)
+    present = state.adj[jnp.maximum(sk, 0), jnp.maximum(sl, 0)] > 0
+    res = jnp.where(
+        both,
+        jnp.where(present, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT),
+        R_VERTEX_NOT_PRESENT,
+    )
+    return state, res.astype(jnp.int32)
+
+
+def _apply_one(state: GraphState, opcode, k1, k2, expect):
+    """Apply a single op; returns (state', result). Branch-free lax.switch."""
+
+    def do_nop(s):
+        return s, jnp.int32(R_FALSE)
+
+    def do_addv(s):
+        return _add_vertex(s, k1)
+
+    def do_remv(s):
+        return _remove_vertex(s, k1)
+
+    def do_conv(s):
+        return s, jnp.where(find_slot(s, k1) >= 0, R_TRUE, R_FALSE).astype(jnp.int32)
+
+    def do_adde(s):
+        return _edge_op(s, k1, k2, expect, add=True)
+
+    def do_reme(s):
+        return _edge_op(s, k1, k2, expect, add=False)
+
+    def do_cone(s):
+        return _contains_edge_op(s, k1, k2)
+
+    return jax.lax.switch(
+        jnp.clip(opcode, 0, 6),
+        [do_nop, do_addv, do_remv, do_conv, do_adde, do_reme, do_cone],
+        state,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Reference engine: exact lane-order linearization
+# ----------------------------------------------------------------------------
+@jax.jit
+def apply_ops(state: GraphState, ops: OpBatch):
+    """Apply a batch with exact lane-order linearization (reference engine)."""
+    b = ops.lanes
+
+    def body(i, carry):
+        st, res = carry
+        st, r = _apply_one(st, ops.opcode[i], ops.key1[i], ops.key2[i], ops.expect[i])
+        return st, res.at[i].set(r)
+
+    res0 = jnp.full((b,), R_FALSE, jnp.int32)
+    return jax.lax.fori_loop(0, b, body, (state, res0))
+
+
+# ----------------------------------------------------------------------------
+# Fast engine: disjoint-access parallelism
+# ----------------------------------------------------------------------------
+def _lane_conflicts(ops: OpBatch) -> jax.Array:
+    """True for lanes whose referenced key-set intersects another lane's.
+
+    Sort-based O(B log B): flatten the (up to) two keys per lane, sort, mark
+    duplicates, scatter the mark back to lanes. NOP/lookup-only dedup note:
+    read-only lanes (contains) still count as conflicting when they share a
+    key with a writer — conservative and simple (reads that conflict only
+    with reads are still routed to the serial pass; rare in benchmarks).
+    """
+    b = ops.lanes
+    is_edge = (ops.opcode == OP_ADD_E) | (ops.opcode == OP_REM_E) | (ops.opcode == OP_CON_E)
+    is_vert = (ops.opcode == OP_ADD_V) | (ops.opcode == OP_REM_V) | (ops.opcode == OP_CON_V)
+    k1 = jnp.where(is_edge | is_vert, ops.key1, -1)
+    k2 = jnp.where(is_edge, ops.key2, -1)
+    keys = jnp.concatenate([k1, k2])  # [2B]
+    lane = jnp.concatenate([jnp.arange(b), jnp.arange(b)])
+    order = jnp.argsort(keys)
+    sk, sl = keys[order], lane[order]
+    same_prev = jnp.concatenate([jnp.array([False]), (sk[1:] == sk[:-1]) & (sk[1:] >= 0)])
+    same_next = jnp.concatenate([(sk[:-1] == sk[1:]) & (sk[:-1] >= 0), jnp.array([False])])
+    dup = same_prev | same_next
+    conflict = jnp.zeros((b,), jnp.bool_)
+    conflict = conflict.at[sl].max(dup)
+    return conflict
+
+
+def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array):
+    """One vectorized pass applying all ``active`` lanes.
+
+    Precondition: active lanes reference pairwise-disjoint key sets, so all
+    scatters below are conflict-free and the pass equals any interleaving.
+    """
+    b = ops.lanes
+    cap = state.capacity
+    s1 = _find_slots_masked(state, ops.key1)
+    s2 = _find_slots_masked(state, ops.key2)
+
+    is_addv = active & (ops.opcode == OP_ADD_V)
+    is_remv = active & (ops.opcode == OP_REM_V)
+    is_conv = active & (ops.opcode == OP_CON_V)
+    is_adde = active & (ops.opcode == OP_ADD_E)
+    is_reme = active & (ops.opcode == OP_REM_E)
+    is_cone = active & (ops.opcode == OP_CON_E)
+
+    res = jnp.full((b,), R_FALSE, jnp.int32)
+
+    # --- AddVertex: parallel free-slot allocation by rank --------------------
+    exists = s1 >= 0
+    want_slot = is_addv & ~exists
+    rank = jnp.cumsum(want_slot.astype(jnp.int32)) - 1          # 0-based rank
+    free = state.vkey == EMPTY_KEY
+    free_cum = jnp.cumsum(free.astype(jnp.int32))               # 1-based counts
+    n_free = free_cum[-1]
+    have_slot = want_slot & (rank < n_free)
+    # slot for rank r = first index where free_cum == r+1 and free
+    alloc = jnp.searchsorted(free_cum, rank + 1, side="left").astype(jnp.int32)
+    alloc = jnp.where(have_slot, alloc, cap)                    # drop if none
+    vkey = state.vkey.at[alloc].set(ops.key1, mode="drop")
+    valive = state.valive.at[alloc].set(True, mode="drop")
+    vver = state.vver.at[alloc].add(1, mode="drop")
+    ecnt = state.ecnt.at[alloc].set(0, mode="drop")
+    adj = state.adj.at[alloc, :].set(0, mode="drop").at[:, alloc].set(0, mode="drop")
+    res = jnp.where(is_addv, jnp.where(exists, R_FALSE, jnp.where(have_slot, R_TRUE, R_TABLE_FULL)), res)
+
+    # --- RemoveVertex ---------------------------------------------------------
+    rem_t = jnp.where(is_remv & (s1 >= 0), s1, cap)
+    valive = valive.at[rem_t].set(False, mode="drop")
+    vver = vver.at[rem_t].add(1, mode="drop")
+    ecnt = ecnt.at[rem_t].add(1, mode="drop")
+    # bump in-edge sources (vectorized over lanes then reduced)
+    rem_mask = jnp.zeros((cap + 1,), jnp.bool_).at[rem_t].set(True, mode="promise_in_bounds")[:cap]
+    in_src_bump = ((state.adj > 0) & rem_mask[None, :] & state.valive[:, None]).sum(axis=1)
+    ecnt = ecnt + in_src_bump.astype(jnp.int32)
+    res = jnp.where(is_remv, jnp.where(s1 >= 0, R_TRUE, R_FALSE), res)
+
+    # --- ContainsVertex -------------------------------------------------------
+    res = jnp.where(is_conv, jnp.where(s1 >= 0, R_TRUE, R_FALSE), res)
+
+    # --- Edge ops -------------------------------------------------------------
+    both = (s1 >= 0) & (s2 >= 0)
+    r1, r2 = jnp.maximum(s1, 0), jnp.maximum(s2, 0)
+    cur = state.adj[r1, r2] > 0
+    cas_ok = (ops.expect < 0) | (state.ecnt[r1] == ops.expect)
+
+    do_add = is_adde & both & cas_ok & ~cur
+    do_rem = is_reme & both & cas_ok & cur
+    tgt_r = jnp.where(do_add | do_rem, r1, cap)
+    tgt_c = jnp.where(do_add | do_rem, r2, cap)
+    adj = adj.at[tgt_r, tgt_c].set(do_add.astype(state.adj.dtype), mode="drop")
+    ecnt = ecnt.at[tgt_r].add(1, mode="drop")
+
+    res = jnp.where(
+        is_adde,
+        jnp.where(both, jnp.where(cas_ok, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_ADDED), R_CAS_FAIL), R_VERTEX_NOT_PRESENT),
+        res,
+    )
+    res = jnp.where(
+        is_reme,
+        jnp.where(both, jnp.where(cas_ok, jnp.where(cur, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT), R_CAS_FAIL), R_VERTEX_NOT_PRESENT),
+        res,
+    )
+    res = jnp.where(
+        is_cone,
+        jnp.where(both, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT), R_VERTEX_NOT_PRESENT),
+        res,
+    )
+    return GraphState(vkey, valive, vver, ecnt, adj), res
+
+
+def _find_slots_masked(state: GraphState, keys: jax.Array) -> jax.Array:
+    hit = (state.vkey[None, :] == keys[:, None]) & state.valive[None, :] & (keys[:, None] >= 0)
+    idx = jnp.argmax(hit, axis=1)
+    return jnp.where(jnp.any(hit, axis=1), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+@jax.jit
+def apply_ops_fast(state: GraphState, ops: OpBatch):
+    """Disjoint-access-parallel batch application (linearizable; see module doc).
+
+    Linearization order: all conflict-free lanes (which commute with every
+    lane) at the batch start in lane order, then conflicting lanes in lane
+    order via the masked correction loop.
+    """
+    conflict = _lane_conflicts(ops)
+    clean = ~conflict & (ops.opcode != OP_NOP)
+    state, res = _apply_clean_vectorized(state, ops, clean)
+
+    def serial_pass(args):
+        st, rs = args
+
+        def body(i, carry):
+            s, r = carry
+
+            def run(s):
+                s2, ri = _apply_one(s, ops.opcode[i], ops.key1[i], ops.key2[i], ops.expect[i])
+                return s2, r.at[i].set(ri)
+
+            return jax.lax.cond(conflict[i], run, lambda s: (s, r), s)
+
+        return jax.lax.fori_loop(0, ops.lanes, body, (st, rs))
+
+    state, res = jax.lax.cond(
+        jnp.any(conflict), serial_pass, lambda a: a, (state, res)
+    )
+    return state, res
+
+
+# ----------------------------------------------------------------------------
+# Undirected extension (paper footnote a: "directly extended")
+# ----------------------------------------------------------------------------
+def _edge_op_undirected(state: GraphState, k, l, expect, *, add: bool):
+    """Both directions mutate atomically at one linearization point; both
+    endpoint rows take the FAA (so double collects through either endpoint
+    observe the mutation)."""
+    sk = find_slot(state, k)
+    sl = find_slot(state, l)
+    both = (sk >= 0) & (sl >= 0)
+    rk, rl = jnp.maximum(sk, 0), jnp.maximum(sl, 0)
+    cas_ok = (expect < 0) | (state.ecnt[rk] == expect)
+    present = state.adj[rk, rl] > 0
+    if add:
+        do = both & cas_ok & ~present
+        ok_res = jnp.where(present, R_EDGE_PRESENT, R_EDGE_ADDED)
+        newval = jnp.uint8(1)
+    else:
+        do = both & cas_ok & present
+        ok_res = jnp.where(present, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT)
+        newval = jnp.uint8(0)
+    cur_kl = state.adj[rk, rl]
+    cur_lk = state.adj[rl, rk]
+    adj = state.adj.at[rk, rl].set(jnp.where(do, newval, cur_kl))
+    adj = adj.at[rl, rk].set(jnp.where(do, newval, cur_lk))
+    ecnt = state.ecnt.at[rk].add(jnp.where(do, 1, 0))
+    ecnt = ecnt.at[rl].add(jnp.where(do & (rk != rl), 1, 0))
+    res = jnp.where(
+        both,
+        jnp.where(cas_ok, ok_res, R_CAS_FAIL),
+        R_VERTEX_NOT_PRESENT,
+    )
+    return GraphState(state.vkey, state.valive, state.vver, ecnt, adj), res.astype(jnp.int32)
+
+
+@jax.jit
+def add_edge_undirected(state: GraphState, k, l):
+    return _edge_op_undirected(state, jnp.asarray(k, jnp.int32),
+                               jnp.asarray(l, jnp.int32), jnp.int32(-1), add=True)
+
+
+@jax.jit
+def remove_edge_undirected(state: GraphState, k, l):
+    return _edge_op_undirected(state, jnp.asarray(k, jnp.int32),
+                               jnp.asarray(l, jnp.int32), jnp.int32(-1), add=False)
+
+
+# ----------------------------------------------------------------------------
+# Wait-free neighborhood queries (the traversal-return the paper's related
+# work, Kallimanis & Kanellou 2015, could not provide)
+# ----------------------------------------------------------------------------
+@jax.jit
+def neighbors(state: GraphState, k):
+    """Out-neighbor keys of v(k): (count, keys int32[V] padded with -1).
+
+    Single bounded vectorized pass over the slot table — wait-free in the
+    same sense as ContainsVertex (paper Thm 4.2(i))."""
+    slot = find_slot(state, jnp.asarray(k, jnp.int32))
+    ok = slot >= 0
+    row = state.adj[jnp.maximum(slot, 0)] > 0
+    live = row & state.valive & ok
+    n = jnp.sum(live.astype(jnp.int32))
+    order = jnp.argsort(~live)  # live slots first (stable)
+    keys = jnp.where(live[order], state.vkey[order], -1)
+    return n, keys
+
+
+@jax.jit
+def degree(state: GraphState, k):
+    """(out_degree, in_degree) of v(k); (-1, -1) if absent."""
+    slot = find_slot(state, jnp.asarray(k, jnp.int32))
+    ok = slot >= 0
+    s = jnp.maximum(slot, 0)
+    live = state.valive
+    out_d = jnp.sum(((state.adj[s] > 0) & live).astype(jnp.int32))
+    in_d = jnp.sum(((state.adj[:, s] > 0) & live & live[s]).astype(jnp.int32))
+    return (jnp.where(ok, out_d, -1), jnp.where(ok, in_d, -1))
+
+
+# ----------------------------------------------------------------------------
+# Physical removal — the helping / compaction analogue
+# ----------------------------------------------------------------------------
+@jax.jit
+def compact(state: GraphState) -> GraphState:
+    """Physically remove logically-deleted vertices (paper: the deferred
+    physical unlink any helping thread may perform). Frees slots and clears
+    their adjacency rows/columns; versions are retained so outstanding
+    double-collects still detect the change (vver moved at logical removal).
+    """
+    dead = (~state.valive) & (state.vkey != EMPTY_KEY)
+    keep = ~dead
+    vkey = jnp.where(dead, EMPTY_KEY, state.vkey)
+    adj = state.adj * (keep[:, None] & keep[None, :]).astype(state.adj.dtype)
+    return GraphState(vkey, state.valive, state.vver, state.ecnt, adj)
+
+
+# ----------------------------------------------------------------------------
+# Convenience single-op API (host-facing, used by examples/benchmarks)
+# ----------------------------------------------------------------------------
+@jax.jit
+def add_vertex(state: GraphState, k):
+    return _add_vertex(state, jnp.asarray(k, jnp.int32))
+
+
+@jax.jit
+def remove_vertex(state: GraphState, k):
+    return _remove_vertex(state, jnp.asarray(k, jnp.int32))
+
+
+@jax.jit
+def add_edge(state: GraphState, k, l):
+    return _edge_op(state, jnp.asarray(k, jnp.int32), jnp.asarray(l, jnp.int32), jnp.int32(-1), add=True)
+
+
+@jax.jit
+def remove_edge(state: GraphState, k, l):
+    return _edge_op(state, jnp.asarray(k, jnp.int32), jnp.asarray(l, jnp.int32), jnp.int32(-1), add=False)

@@ -1,0 +1,230 @@
+"""Obstruction-free GetPath via double collect — the paper's §3.5, vectorized.
+
+A *collect* = one BFS TreeCollect plus a snapshot of the validation vector
+(ecnt, vver fused; see graph.version_vector) over the rows the traversal
+depended on. Two consecutive collects *match* iff their dependency sets,
+parent trees, found-flags and masked version vectors are equal. Matching
+collects prove the traversal observed a graph state that existed unchanged
+across the second collect's lifetime => the return is linearizable at any
+point inside it (paper Thm 4.1 case 7a: last read of the (m-1)st collect).
+
+Version-validated matching is *strictly stronger* than the paper's
+node-by-node CompareTree/ComparePath: equal versions over the dependency set
+imply byte-identical adjacency rows read, which implies identical trees; and
+the §3.5 adversary (add edge, remove it between collects) necessarily bumps a
+source-row ecnt it shares with the dependency set, so it is always caught.
+
+Three surfaces:
+  * ``collect`` / ``compare_collects`` / ``get_path``   — pure building blocks
+  * ``get_path_session``      — host-level protocol against a live mutable
+    state reference (the true concurrent setting; obstruction-free: completes
+    as soon as one round-trip sees no effective mutation)
+  * ``interleaved_getpath``   — a single jitted program interleaving mutation
+    batches with a pending query, demonstrating the protocol *inside* one
+    device program (used by tests/benchmarks to replay paper Fig. 10).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as gops
+from repro.core.bfs import bfs, extract_path
+from repro.core.graph import GraphState, OpBatch, find_slot, version_vector
+
+
+class Collect(NamedTuple):
+    found: jax.Array     # bool
+    parent: jax.Array    # int32[V]
+    touched: jax.Array   # bool[V]  — dependency set (expanded ∪ {src,dst})
+    versions: jax.Array  # int32[V, 2] — (ecnt, vver) masked to touched
+    src_slot: jax.Array  # int32
+    dst_slot: jax.Array  # int32
+    present: jax.Array   # bool — both endpoints alive at collect start
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def collect(state: GraphState, k, l, backend: str = "jnp") -> Collect:
+    """One TreeCollect: locate endpoints (ConCPlus analogue), BFS, snapshot."""
+    k = jnp.asarray(k, jnp.int32)
+    l = jnp.asarray(l, jnp.int32)
+    sk = find_slot(state, k)
+    sl = find_slot(state, l)
+    present = (sk >= 0) & (sl >= 0)
+    res = bfs(state, sk, sl, backend=backend)
+    v = state.capacity
+    touched = res.expanded
+    touched = touched.at[jnp.maximum(sk, 0)].set(touched[jnp.maximum(sk, 0)] | (sk >= 0))
+    touched = touched.at[jnp.maximum(sl, 0)].set(touched[jnp.maximum(sl, 0)] | (sl >= 0))
+    vv = jnp.where(touched[:, None], version_vector(state), jnp.int32(0))
+    return Collect(res.found & present, res.parent, touched, vv, sk, sl, present)
+
+
+@jax.jit
+def compare_collects(a: Collect, b: Collect) -> jax.Array:
+    """Paper's CompareTree + ComparePath, subsumed by version equality."""
+    same_sets = jnp.all(a.touched == b.touched)
+    same_vers = jnp.all(a.versions == b.versions)
+    same_tree = jnp.all(jnp.where(a.touched, a.parent, -1) == jnp.where(b.touched, b.parent, -1))
+    same_slots = (a.src_slot == b.src_slot) & (a.dst_slot == b.dst_slot)
+    return (a.found == b.found) & (a.present == b.present) & same_sets & same_vers & same_tree & same_slots
+
+
+class PathResult(NamedTuple):
+    found: jax.Array   # bool — a path existed (linearizably)
+    length: jax.Array  # int32 — number of vertices on the path (0 if none)
+    keys: jax.Array    # int32[V] — vertex keys along the path, -1 padded
+    rounds: jax.Array  # int32 — collects performed (>=2 in concurrent surfaces)
+
+
+def _materialize(state: GraphState, c: Collect, rounds) -> PathResult:
+    n, slots = extract_path(c.parent, c.src_slot, c.dst_slot)
+    keys = jnp.where(slots >= 0, state.vkey[jnp.clip(slots, 0, state.capacity - 1)], -1)
+    n = jnp.where(c.found, n, 0)
+    keys = jnp.where(c.found, keys, -1)
+    return PathResult(c.found, n, keys.astype(jnp.int32), jnp.asarray(rounds, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def get_path(state: GraphState, k, l, backend: str = "jnp") -> PathResult:
+    """GetPath against a *static* state (pure function — no concurrency, so a
+    single collect is trivially a valid double collect)."""
+    c = collect(state, k, l, backend=backend)
+    return _materialize(state, c, 1)
+
+
+# ----------------------------------------------------------------------------
+# Beyond-paper: batched multi-query GetPath under ONE shared double collect
+# ----------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("backend",))
+def collect_batch(state: GraphState, ks, ls, backend: str = "jnp"):
+    """Vectorized TreeCollect for Q query pairs. Returns a Collect whose
+    leading axis is the query index; the dependency set / versions are the
+    UNION over queries, so one version comparison validates all of them
+    against the same pair of states — every answer linearizes at the same
+    point (a consistent multi-query snapshot, strictly stronger than Q
+    independent GetPaths and Q x cheaper in validation traffic)."""
+    cs = jax.vmap(lambda k, l: collect(state, k, l, backend=backend))(
+        jnp.asarray(ks, jnp.int32), jnp.asarray(ls, jnp.int32))
+    return cs
+
+
+@jax.jit
+def compare_collect_batches(a, b) -> jax.Array:
+    """True iff EVERY query's collect matches between the two rounds."""
+    per_q = jax.vmap(compare_collects)(a, b)
+    return jnp.all(per_q)
+
+
+def get_paths_session(fetch_state, pairs, *, max_rounds: int | None = None,
+                      backend: str = "jnp"):
+    """Multi-query obstruction-free GetPath: the double-collect loop runs
+    ONCE for the whole batch. Returns a list of (found, keys) per pair."""
+    ks = [p[0] for p in pairs]
+    ls = [p[1] for p in pairs]
+    state = fetch_state()
+    prev = collect_batch(state, ks, ls, backend=backend)
+    rounds = 1
+    while True:
+        state = fetch_state()
+        cur = collect_batch(state, ks, ls, backend=backend)
+        rounds += 1
+        if bool(compare_collect_batches(prev, cur)):
+            out = []
+            for qi in range(len(pairs)):
+                cq = jax.tree.map(lambda x: x[qi], cur)
+                pr = _materialize(state, cq, rounds)
+                keys = [int(x) for x in pr.keys[: int(pr.length)]] if bool(pr.found) else []
+                out.append((bool(pr.found), keys))
+            return out, rounds
+        prev = cur
+        if max_rounds is not None and rounds >= max_rounds:
+            return [(False, []) for _ in pairs], rounds
+
+
+# ----------------------------------------------------------------------------
+# Host-level concurrent protocol (the paper's Scan loop)
+# ----------------------------------------------------------------------------
+def get_path_session(
+    fetch_state: Callable[[], GraphState],
+    k: int,
+    l: int,
+    max_rounds: int | None = None,
+    backend: str = "jnp",
+) -> PathResult:
+    """The paper's GetPath/Scan against a live state reference.
+
+    ``fetch_state()`` returns the mutator's latest published GraphState (the
+    runtime swaps a reference; each fetch is a consistent functional snapshot,
+    but consecutive fetches differ under concurrent mutation — exactly the
+    adversary model of §3.5).
+
+    Obstruction-free: terminates at the first pair of consecutive collects
+    with no effective mutation in between. ``max_rounds=None`` loops forever
+    (the paper's semantics); a finite bound returns found=False, rounds=bound
+    and the caller resubmits (bounded-retry deviation, DESIGN.md §1).
+    """
+    state = fetch_state()
+    prev = collect(state, k, l, backend=backend)
+    rounds = 1
+    while True:
+        state = fetch_state()
+        cur = collect(state, k, l, backend=backend)
+        rounds += 1
+        if bool(compare_collects(prev, cur)):
+            res = _materialize(state, cur, rounds)
+            return res
+        prev = cur
+        if max_rounds is not None and rounds >= max_rounds:
+            v = state.capacity
+            return PathResult(
+                jnp.asarray(False), jnp.int32(0), jnp.full((v,), -1, jnp.int32), jnp.int32(rounds)
+            )
+
+
+# ----------------------------------------------------------------------------
+# In-program interleaving (one jitted device program)
+# ----------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("backend", "engine"))
+def interleaved_getpath(
+    state: GraphState,
+    batches: OpBatch,          # leading axis T: one mutation batch per round
+    k,
+    l,
+    backend: str = "jnp",
+    engine: str = "fast",
+):
+    """Run T rounds: (apply mutation batch t) then (advance the query).
+
+    The query performs one collect per round and completes at the first round
+    whose collect matches the previous round's. Returns
+    (final_state, PathResult, per-round results of the mutation batches).
+    This is the batch-granularity realization of 'threads running
+    concurrently': mutator lanes and the query make progress in every round.
+    """
+    apply = gops.apply_ops_fast if engine == "fast" else gops.apply_ops
+    c0 = collect(state, k, l, backend=backend)
+
+    def step(carry, batch_t):
+        st, prev, done, ans_c, done_round, rnd = carry
+        st, res = apply(st, OpBatch(*batch_t))
+        cur = collect(st, k, l, backend=backend)
+        match = compare_collects(prev, cur) & ~done
+        # freeze the answer at the first match
+        ans_c = jax.tree.map(lambda a, b: jnp.where(match, b, a), ans_c, cur)
+        done_round = jnp.where(match, rnd + 1, done_round)
+        done = done | match
+        return (st, cur, done, ans_c, done_round, rnd + 1), res
+
+    carry0 = (state, c0, jnp.asarray(False), c0, jnp.int32(-1), jnp.int32(0))
+    (state, last, done, ans, done_round, _), mut_results = jax.lax.scan(
+        step, carry0, tuple(batches)
+    )
+    # If never matched within T rounds, report not-done (caller resubmits).
+    ans = jax.tree.map(lambda a, b: jnp.where(done, a, b), ans, last)
+    pr = _materialize(state, ans, jnp.where(done, done_round + 1, -1))
+    pr = PathResult(pr.found & done, jnp.where(done, pr.length, 0), pr.keys, pr.rounds)
+    return state, pr, mut_results

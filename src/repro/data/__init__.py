@@ -1,0 +1,1 @@
+from repro.data import pathgen, pipeline, tokenizer  # noqa: F401

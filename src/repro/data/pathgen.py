@@ -1,0 +1,68 @@
+"""Graph -> LM corpus: reachability-query supervision from the live engine.
+
+This is the paper-integration workload (DESIGN.md §5(i)): a mutator stream
+evolves a concurrent graph (core.ops batches); each training example
+serializes the current edge set, a (src, dst) query, and the GetPath answer
+obtained from the snapshot engine — teaching an LM the reachability task the
+paper's data structure serves, while exercising the engine's concurrent API
+as a production data pipeline would.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_REM_E,
+    GraphState,
+    apply_ops_fast,
+    get_path,
+    make_graph,
+    make_op_batch,
+)
+from repro.core.graph import to_networkx_like
+from repro.data import tokenizer as tok
+
+
+class PathTaskGenerator:
+    """Deterministic, restart-safe stream of (tokens, loss_mask) examples."""
+
+    def __init__(self, *, n_vertices: int = 24, capacity: int = 64,
+                 mutate_lanes: int = 16, seed: int = 0, backend: str = "jnp"):
+        self.nv = n_vertices
+        self.capacity = capacity
+        self.lanes = mutate_lanes
+        self.backend = backend
+        self.rng = np.random.default_rng(seed)
+        self.state = make_graph(capacity)
+        boot = [(OP_ADD_V, k) for k in range(n_vertices)]
+        for i in range(0, len(boot), mutate_lanes):
+            self.state, _ = apply_ops_fast(
+                self.state, make_op_batch(boot[i : i + mutate_lanes], mutate_lanes))
+
+    def _mutate(self):
+        ops = []
+        for _ in range(self.lanes):
+            u, v = self.rng.integers(0, self.nv, 2)
+            op = OP_ADD_E if self.rng.random() < 0.7 else OP_REM_E
+            ops.append((op, int(u), int(v)))
+        self.state, _ = apply_ops_fast(self.state, make_op_batch(ops, self.lanes))
+
+    def example(self) -> list[int]:
+        self._mutate()
+        src, dst = (int(x) for x in self.rng.integers(0, self.nv, 2))
+        pr = get_path(self.state, src, dst, backend=self.backend)
+        path = [int(k) for k in np.asarray(pr.keys)[: int(pr.length)]] if bool(pr.found) else []
+        verts, edges = to_networkx_like(self.state)
+        return tok.encode_example(edges, src, dst, path)
+
+    def batch(self, batch_size: int, seq_len: int):
+        """-> tokens int32 [batch, seq_len] padded/truncated."""
+        out = np.zeros((batch_size, seq_len), np.int32)
+        for i in range(batch_size):
+            ex = self.example()[:seq_len]
+            out[i, : len(ex)] = ex
+        return out

@@ -1,0 +1,78 @@
+"""Host data pipeline: deterministic, restart-safe, prefetching, shard-aware.
+
+Determinism: batch b is a pure function of (seed, b), so a restarted worker
+resumes mid-epoch exactly; the train loop passes its step counter. On a
+fleet every host builds only its process-local slice (here: single process
+builds the global batch and device_puts it with the batch sharding).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+from repro.data.pathgen import PathTaskGenerator
+
+
+class SyntheticLMData:
+    """Random-token LM batches (benchmarks, memory tests)."""
+
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = vocab
+        self.seed = seed
+
+    def batch(self, step: int, batch_size: int, seq_len: int):
+        rng = np.random.default_rng((self.seed, step))
+        return rng.integers(0, self.vocab, (batch_size, seq_len), dtype=np.int32)
+
+
+class GraphPathData:
+    """Reachability-task batches from the concurrent graph engine."""
+
+    def __init__(self, *, n_vertices=24, seed=0):
+        self.kw = dict(n_vertices=n_vertices)
+        self.seed = seed
+        self._gens: dict[int, PathTaskGenerator] = {}
+
+    def batch(self, step: int, batch_size: int, seq_len: int):
+        gen = self._gens.get(step)
+        if gen is None:
+            gen = PathTaskGenerator(seed=self.seed + step, **self.kw)
+            self._gens = {step: gen}  # keep only current (deterministic per step)
+        return gen.batch(batch_size, seq_len)
+
+
+class Prefetcher:
+    """Background-thread prefetch + device placement."""
+
+    def __init__(self, source, *, batch_size: int, seq_len: int,
+                 sharding=None, depth: int = 2, start_step: int = 0):
+        self.source = source
+        self.bs, self.sl = batch_size, seq_len
+        self.sharding = sharding
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = False
+        self.t = threading.Thread(target=self._run, daemon=True)
+        self.t.start()
+
+    def _run(self):
+        while not self._stop:
+            arr = self.source.batch(self.step, self.bs, self.sl)
+            if self.sharding is not None:
+                arr = jax.device_put(arr, self.sharding)
+            self.q.put({"tokens": arr, "step": self.step})
+            self.step += 1
+
+    def __next__(self):
+        return self.q.get()
+
+    def stop(self):
+        self._stop = True
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,2 @@
+from repro.kernels.bfs_step.ops import bfs_step  # noqa: F401
+from repro.kernels.bfs_step.ref import bfs_step_ref  # noqa: F401

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: one BFS frontier-expansion superstep.
+
+The hot loop of the paper's TreeCollect, re-thought for the TPU memory
+hierarchy (DESIGN.md §4): instead of chasing ENode pointers through HBM, we
+stream (TR x TC) adjacency tiles HBM->VMEM and feed the MXU a rank-1-ish
+mat-vec per tile:
+
+    reach[c-tile]  |= any_r ( frontier[r-tile] @ adj[r-tile, c-tile] )   (MXU)
+    parent[c-tile]  = min_r  first set row index                          (VPU)
+
+Grid = (col_tiles, row_tiles), row axis innermost so each output tile is
+produced once and revisited across the reduction ("arbitrary" dimension
+semantics). Empty frontier tiles are skipped with @pl.when — the sparse-
+frontier optimization that makes late BFS supersteps cheap (most tiles have
+no active rows), the analogue of the paper only walking live edge-lists.
+
+VMEM footprint per program instance (TR=TC=256, defaults):
+    adj tile      256*256 f32   = 256 KiB
+    frontier tile 256 f32       =   1 KiB
+    out tiles     2 * 256 i32   =   2 KiB          << 16 MiB VMEM
+MXU alignment: TR, TC multiples of 128 (f32/bf16 tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT32_MAX = 2**31 - 1  # python int: pallas kernels must not capture tracers
+
+
+def _bfs_step_kernel(f_ref, adj_ref, alive_ref, visited_ref, reach_ref, parent_ref, *, tr: int):
+    c, r = pl.program_id(0), pl.program_id(1)
+    nr = pl.num_programs(1)
+
+    @pl.when(r == 0)
+    def _init():
+        reach_ref[...] = jnp.zeros_like(reach_ref)
+        parent_ref[...] = jnp.full_like(parent_ref, INT32_MAX)
+
+    f = f_ref[...]  # f32[TR]
+
+    @pl.when(jnp.any(f > 0))
+    def _accumulate():
+        a = adj_ref[...].astype(jnp.float32)          # [TR, TC] (bf16 on MXU)
+        hits = jnp.dot(f[None, :], a, preferred_element_type=jnp.float32)[0]
+        reach_ref[...] = jnp.maximum(reach_ref[...], (hits > 0).astype(jnp.int32))
+        row_ids = (r * tr + jax.lax.iota(jnp.int32, tr))[:, None]
+        cand = jnp.where((f[:, None] > 0) & (a > 0), row_ids, INT32_MAX)
+        parent_ref[...] = jnp.minimum(parent_ref[...], jnp.min(cand, axis=0))
+
+    @pl.when(r == nr - 1)
+    def _epilogue():
+        new = (reach_ref[...] > 0) & (alive_ref[...] > 0) & (visited_ref[...] == 0)
+        reach_ref[...] = new.astype(jnp.int32)
+        parent_ref[...] = jnp.where(new, parent_ref[...], jnp.int32(-1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tr", "tc", "interpret")
+)
+def bfs_step_pallas(frontier, adj, alive, visited, *, tr: int = 256, tc: int = 256,
+                    interpret: bool = True):
+    """One frontier expansion. All inputs length-V / VxV, V % max(tr,tc) == 0.
+
+    frontier: f32[V] (0/1)   adj: int8/uint8[V, V]
+    alive:    int32[V] (0/1) visited: int32[V] (0/1)
+    Returns (new_frontier int32[V], parent int32[V]).
+    """
+    v = adj.shape[0]
+    assert v % tr == 0 and v % tc == 0, (v, tr, tc)
+    grid = (v // tc, v // tr)
+    return pl.pallas_call(
+        functools.partial(_bfs_step_kernel, tr=tr),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr,), lambda c, r: (r,)),
+            pl.BlockSpec((tr, tc), lambda c, r: (r, c)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v,), jnp.int32),
+            jax.ShapeDtypeStruct((v,), jnp.int32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(frontier, adj, alive, visited)

@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the bfs_step kernel (adapts GraphState dtypes)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bfs_step.kernel import bfs_step_pallas
+
+
+def _pick_tile(v: int) -> int:
+    for t in (256, 128, 64, 32, 16, 8):
+        if v % t == 0:
+            return t
+    return v
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bfs_step(frontier, adj, alive, visited):
+    """Drop-in replacement for core.bfs.bfs_step_jnp (bool interface).
+
+    frontier/alive/visited: bool[V]; adj: uint8[V, V]
+    -> (new_frontier bool[V], parent int32[V])
+    """
+    v = adj.shape[0]
+    t = _pick_tile(v)
+    new, parent = bfs_step_pallas(
+        frontier.astype(jnp.float32),
+        adj,
+        alive.astype(jnp.int32),
+        visited.astype(jnp.int32),
+        tr=t,
+        tc=t,
+        interpret=True,  # CPU container; on TPU set interpret=False
+    )
+    return new > 0, parent

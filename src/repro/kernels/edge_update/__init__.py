@@ -1,0 +1,2 @@
+from repro.kernels.edge_update.ops import edge_update  # noqa: F401
+from repro.kernels.edge_update.ref import edge_update_ref  # noqa: F401

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the edge_update kernel (lane-order write semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_update_ref(adj, ecnt, rows, cols, vals, mask):
+    """Same contract as kernel.edge_update_pallas.
+
+    Duplicate (row, col) targets: LAST masked lane wins (lane order =
+    linearization order). ecnt gains one increment per masked lane on its row.
+    """
+    v = adj.shape[0]
+    b = rows.shape[0]
+    lane = jnp.arange(b, dtype=jnp.int32)
+    live = mask > 0
+    flat = jnp.where(live, rows * v + cols, -1)
+    # stable sort by target; within a target group lanes ascend, so a lane is
+    # the group's winner iff the next sorted entry targets something else.
+    order = jnp.argsort(flat, stable=True)
+    sflat = flat[order]
+    last_of_group = jnp.concatenate([sflat[:-1] != sflat[1:], jnp.array([True])])
+    winner = order[last_of_group & (sflat >= 0)] if b else order[:0]
+    # jnp.where with size: use boolean scatter instead (jit-safe)
+    win_mask = jnp.zeros((b,), bool).at[order].set(last_of_group & (sflat >= 0))
+    wrows = jnp.where(win_mask, rows, v)  # drop non-winners
+    wcols = jnp.where(win_mask, cols, v)
+    adj2 = adj.at[wrows, wcols].set(jnp.asarray(vals, adj.dtype), mode="drop")
+    erow = jnp.where(live, rows, v)
+    ecnt2 = ecnt.at[erow].add(1, mode="drop")
+    return adj2, ecnt2

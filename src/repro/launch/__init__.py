@@ -1,0 +1,1 @@
+# launchers: mesh.py dryrun.py train.py serve.py steps.py

@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_EXTRA", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell, jit the appropriate step function with explicit in_shardings
+on the production mesh, ``.lower()`` it against ShapeDtypeStruct inputs (no
+allocation anywhere), ``.compile()``, and record:
+  * memory_analysis()  — per-device bytes (proves the cell fits HBM)
+  * cost_analysis()    — HLO FLOPs / bytes accessed (roofline numerator)
+  * collective bytes   — parsed from the optimized HLO (see _collective_bytes)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --cells all --mesh both --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --cells all --subprocess   # 1 proc / cell
+
+NOTE the XLA_FLAGS assignment above MUST precede any jax import: jax locks
+the device count at first backend init. Do not replicate this env var in
+conftest/pyproject — smoke tests and benchmarks must see the real device.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_for
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.parallel import sharding
+
+_COLL_RE = re.compile(
+    r"(\S+)\s*=\s*(\((?:[^()]|\([^()]*\))*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _replica_group_factor(line: str, op: str) -> int:
+    """Estimated per-device traffic multiplier for reduce-scatter (operand =
+    result x group size); 1 otherwise."""
+    if op != "reduce-scatter":
+        return 1
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind per-device traffic estimate, from optimized HLO.
+
+    Methodology (documented for §Roofline): bytes = result-tensor size for
+    all-gather / all-reduce / all-to-all / collective-permute (ring traffic
+    ~ (n-1)/n x result, we report the upper bound), and result x group_size
+    for reduce-scatter (its operand is the large tensor). `while` bodies
+    appear once in the HLO; trip counts multiply in benchmarks/roofline.py
+    via the loop-bound annotation when present, else are reported as-is.
+    """
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(", s)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        ty, op = m.group(1), m.group(2)
+        out[op] += _tensor_bytes(ty) * _replica_group_factor(s, op)
+        out["count"] += 1
+    return out
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def build_cell(arch: str, shape: str, mesh, *, microbatches: int = 1,
+               layout: str = "auto", decode_unroll: bool = False):
+    """Returns (step_fn, in_shardings, abstract_args, donate_argnums).
+
+    ``layout``: "auto" (train: fsdp x tp; serve: tp) | "tp" | "fsdp"
+    (ZeRO over all axes, no TP) | "tokpar" (replicated weights, batch x
+    sequence parallelism — small-model serving). §Perf iterates layouts.
+    """
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    kind = shape_for(shape)["kind"]
+    params_abs = model.init_abstract()
+
+    if kind == "train":
+        pmode = {"auto": "train", "tp": "train", "fsdp": "fsdp",
+                 "tokpar": "replicated", "zero1": "replicated"}[layout]
+        scheme = {"auto": "tp", "tp": "tp", "fsdp": "fsdp", "tokpar": "tokpar",
+                  "zero1": "fsdp"}[layout]
+        pspecs = sharding.param_specs(params_abs, mesh, pmode)
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        # zero1: replicated params, SHARDED optimizer moments (ZeRO-1)
+        mspecs = sharding.param_specs(params_abs, mesh, "fsdp") if layout == "zero1" else pspecs
+        ospecs = adamw.AdamWState(
+            step=jax.sharding.PartitionSpec(),
+            mu=mspecs, nu=mspecs)
+        bspecs_in = model.input_specs(shape)
+        bspecs = sharding.batch_specs(bspecs_in, mesh, scheme)
+        step = steps_mod.make_train_step(
+            model, microbatches=microbatches,
+            grad_specs=sharding.to_named(pspecs, mesh))
+        # outputs (params', opt', metrics) mirror the input layouts -> donation
+        P = jax.sharding.PartitionSpec
+        out_shard = (pspecs, ospecs, {"loss": P(), "aux": P()})
+        return (step, (pspecs, ospecs, bspecs), (params_abs, opt_abs, bspecs_in),
+                (0, 1), out_shard)
+
+    pmode = {"auto": "serve", "tp": "serve", "fsdp": "fsdp",
+             "tokpar": "replicated", "zero1": "replicated"}[layout]
+    scheme = {"auto": "tp", "tp": "tp", "fsdp": "fsdp", "tokpar": "tokpar",
+              "zero1": "fsdp"}[layout]
+
+    if kind == "prefill":
+        pspecs = sharding.param_specs(params_abs, mesh, pmode)
+        bspecs_in = model.input_specs(shape)
+        bspecs = sharding.batch_specs(bspecs_in, mesh, scheme)
+        step = steps_mod.make_prefill_step(model)
+        return (step, (pspecs, bspecs), (params_abs, bspecs_in), (), None)
+
+    # decode
+    sh = shape_for(shape)
+    pspecs = sharding.param_specs(params_abs, mesh, pmode)
+    cache_abs = model.abstract_cache(sh["global_batch"], sh["seq_len"])
+    cspecs = sharding.cache_specs(cache_abs, mesh)
+    ispecs = model.input_specs(shape)
+    if decode_unroll:
+        def step(params, caches, tokens, pos):
+            return model.decode_step(params, caches, tokens, pos, unroll=True)
+    else:
+        step = steps_mod.make_decode_step(model)
+    in_shard = (pspecs, cspecs,
+                sharding.batch_spec(mesh, "tokens", ispecs["tokens"].shape),
+                jax.sharding.PartitionSpec())
+    args = (params_abs, cache_abs, ispecs["tokens"], ispecs["pos"])
+    # out_shardings must mirror the input cache layout or XLA cannot alias
+    # the donated cache buffers (observed: a full extra cache copy as temp)
+    b = ispecs["tokens"].shape[0]
+    logits_spec = sharding.batch_spec(mesh, "logits", (b, cfg.vocab))
+    out_shard = (logits_spec, cspecs)
+    return (step, in_shard, args, (1,), out_shard)
+
+
+def auto_microbatches(arch: str, shape: str, mesh) -> int:
+    """Grad-accumulation factor keeping per-device live activations bounded.
+
+    Heuristic: split until tokens_local x d_model <= 48M elements (~0.2 GB
+    bf16 residual per layer plus working set under full remat). Recorded per
+    cell; §Perf iterates on it explicitly.
+    """
+    cfg = get_config(arch)
+    sh = shape_for(shape)
+    if sh["kind"] != "train":
+        return 1
+    import numpy as np
+    da = sharding.axis_size(mesh, sharding.data_axes(mesh))
+    b_local = max(1, sh["global_batch"] // da)
+    tokens_local = b_local * sh["seq_len"]
+    # enc-dec archs also hold encoder activations whose attention cannot
+    # shard on this mesh (frames=1500, heads=8 vs TP=16): weight them in
+    eff_d = cfg.d_model
+    if cfg.enc_layers:
+        tokens_local += b_local * cfg.enc_frames * max(1, cfg.enc_frames // 256)
+    mb = 1
+    while tokens_local // mb * eff_d > 48_000_000 and mb < min(32, b_local):
+        mb *= 2
+    return mb
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, microbatches=1,
+             layout: str = "auto", decode_unroll: bool = False,
+             keep_hlo: bool = False) -> dict:
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "ok": False,
+           "layout": layout, "decode_unroll": decode_unroll}
+    cfg = get_config(arch)
+    if shape in cfg.skip_shapes:
+        rec.update(skipped=True, reason="full attention excludes long-context decode")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        scheme = {"auto": "tp", "tp": "tp", "fsdp": "fsdp", "tokpar": "tokpar",
+                  "zero1": "fsdp"}[layout]
+        sharding.set_activation_mesh(mesh, scheme)
+        if microbatches == 0:  # auto
+            microbatches = auto_microbatches(arch, shape, mesh)
+        step, in_shardings, args, donate, out_shardings = build_cell(
+            arch, shape, mesh, microbatches=microbatches, layout=layout,
+            decode_unroll=decode_unroll)
+        in_shardings = sharding.to_named(in_shardings, mesh)
+        kw = {}
+        if out_shardings is not None:
+            kw["out_shardings"] = sharding.to_named(out_shardings, mesh)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             donate_argnums=donate, **kw)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        hlo = compiled.as_text()
+        rec.update(
+            ok=True,
+            devices=int(mesh.size),
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_analysis(compiled),
+            cost=_cost_analysis(compiled),
+            collectives=collective_bytes(hlo),
+            microbatches=microbatches,
+        )
+        if keep_hlo:
+            rec["hlo_len"] = len(hlo)
+        print(compiled.memory_analysis())
+        del compiled, lowered, jitted
+    except Exception as e:
+        rec.update(error=f"{type(e).__name__}: {e}", trace=traceback.format_exc()[-2000:])
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--cells", default=None, help="'all' or comma list arch:shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto", "tp", "fsdp", "tokpar", "zero1"])
+    ap.add_argument("--decode-unroll", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh process (bounded memory)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.cells == "all":
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    elif args.cells:
+        for c in args.cells.split(","):
+            arch, shape = c.split(":")
+            cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    outf = open(args.out, "a") if args.out else None
+
+    for arch, shape in cells:
+        for mk in meshes:
+            if args.subprocess:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mk,
+                       "--microbatches", str(args.microbatches),
+                       "--layout", args.layout]
+                if args.decode_unroll:
+                    cmd += ["--decode-unroll"]
+                if args.out:
+                    cmd += ["--out", args.out]
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                tail = (r.stdout + r.stderr).strip().splitlines()[-1:]
+                print(f"[{arch} x {shape} x {mk}] rc={r.returncode} {tail}")
+                continue
+            rec = run_cell(arch, shape, mk, microbatches=args.microbatches,
+                           layout=args.layout, decode_unroll=args.decode_unroll)
+            line = json.dumps(rec)
+            print(line[:400])
+            if outf:
+                outf.write(line + "\n")
+                outf.flush()
+    if outf:
+        outf.close()
+
+
+if __name__ == "__main__":
+    main()

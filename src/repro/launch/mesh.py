@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run force-creates
+512 host devices while tests/benches must see the real device list.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production mesh: one pod = 16x16 = 256 chips; two pods = 512.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    "model" (TP/EP) stays intra-pod on ICI; "pod" x "data" carry FSDP/DP and
+    may cross DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Dev mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,97 @@
+"""Step functions lowered by the dry-run and driven by the runtime loops.
+
+  train_step(params, opt_state, batch) -> (params', opt_state', metrics)
+  prefill_step(params, batch)          -> (last_logits, caches)
+  decode_step(params, caches, tokens, pos) -> (logits, caches')
+
+Microbatched gradient accumulation (``microbatches > 1``) runs under a
+lax.scan so XLA's latency-hiding scheduler can overlap microbatch i's
+gradient reduce-scatter with microbatch i+1's compute — the standard
+compute/comm overlap at scale (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, grad_compress
+
+
+def make_train_step(model, *, lr=3e-4, microbatches: int = 1, remat: bool = True,
+                    compress: bool = False, weight_decay: float = 0.1,
+                    grad_specs=None):
+    """``grad_specs``: optional tree of NamedShardings (= the param specs).
+    Gradient sharding normally propagates from the params, but MoE expert
+    grads lose it through the dispatch scatter/einsum transposes (observed
+    ~100 GB/device replicated expert grads on the 256-chip dry-run);
+    pinning grads to the param layout keeps ZeRO semantics."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_and_metrics(params, batch, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _pin(grads):
+        if grad_specs is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = _pin(grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mbatch)
+                g = _pin(g)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros = _pin(zeros)
+            (g_sum, l_sum), _ = jax.lax.scan(acc, (zeros, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = l_sum / microbatches
+            metrics = {"loss": loss, "aux": jnp.float32(0.0)}
+
+        if compress:
+            ef = opt_state["ef"]
+            grads, ef = grad_compress.compress_decompress(grads, ef)
+            new_params, new_adam = adamw.update(
+                params, grads, opt_state["adam"], lr=lr, weight_decay=weight_decay)
+            return new_params, {"adam": new_adam, "ef": ef}, metrics
+
+        new_params, new_opt = adamw.update(params, grads, opt_state, lr=lr,
+                                           weight_decay=weight_decay)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_opt_state(model_params, *, compress: bool = False):
+    if compress:
+        return {"adam": adamw.init(model_params), "ef": grad_compress.init(model_params)}
+    return adamw.init(model_params)
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+
+    return decode_step

@@ -1,0 +1,53 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Examples:
+  # smoke-size run on CPU
+  python -m repro.launch.train --arch qwen3-4b --smoke --steps 50 --batch 8 --seq 128
+  # graph path-task corpus (the paper-integration workload)
+  python -m repro.launch.train --arch olmo-1b --smoke --data graph --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import GraphPathData, SyntheticLMData
+from repro.models.model import build_model
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--data", default="synthetic", choices=["synthetic", "graph"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    if args.data == "graph":
+        data = GraphPathData(seed=0)
+    else:
+        data = SyntheticLMData(cfg.vocab, seed=0)
+
+    tl = TrainLoopConfig(
+        total_steps=args.steps, checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir, microbatches=args.microbatches, lr=args.lr)
+    params, opt_state, history = train(
+        model, data, batch_size=args.batch, seq_len=args.seq, cfg=tl)
+    print(f"done; final loss {history[-1][1]:.4f}" if history else "done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""GQA attention: chunked online-softmax forward, KV-cache decode, options.
+
+One implementation serves all assigned archs via config flags:
+  qk_norm (qwen3) · qkv_bias (qwen2) · attn_softcap (gemma2) ·
+  sliding_window + local/global alternation (gemma2, recurrentgemma) ·
+  MQA kv=1 (recurrentgemma) · non-causal / cross attention (whisper).
+
+The train/prefill path is memory-efficient (flash-style): KV is consumed in
+chunks under a lax.scan with running (max, denom, acc) — no S x S score
+materialization, which is what lets 32k prefill and 4k x 256 training fit the
+v5e HBM budget in the dry-run. The baseline masks instead of skipping
+acausal KV chunks (2x causal FLOP overcount, visible in §Roofline's
+useful-FLOPs ratio); §Perf hillclimbs this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_norm, apply_rope, dense_init, dtype_of, softcap
+
+NEG_INF = -2.3819763e38
+
+
+# ----------------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------------
+def init_attn(key, cfg, *, cross: bool = False):
+    dt = dtype_of(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    qd, kvd = cfg.n_heads * hd, cfg.n_kv * hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dt),
+        "wk": dense_init(ks[1], (d, kvd), dt),
+        "wv": dense_init(ks[2], (d, kvd), dt),
+        "wo": dense_init(ks[3], (qd, d), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    if cfg.qk_norm and not cross:
+        p["qnorm"] = jnp.ones((hd,), jnp.float32)
+        p["knorm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_q(cfg, p, x):
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    b, s, _ = q.shape
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd)
+    if "qnorm" in p:
+        q = _headnorm(cfg, q, p["qnorm"])
+    return q
+
+
+def _project_kv(cfg, p, x):
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"].astype(k.dtype), v + p["bv"].astype(v.dtype)
+    b, s, _ = k.shape
+    k = k.reshape(b, s, cfg.n_kv, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv, cfg.hd)
+    if "knorm" in p:
+        k = _headnorm(cfg, k, p["knorm"])
+    return k, v
+
+
+def _headnorm(cfg, x, scale):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + cfg.norm_eps) * scale).astype(x.dtype)
+
+
+def _qscale(cfg):
+    return cfg.query_scale if cfg.query_scale else cfg.hd ** -0.5
+
+
+# ----------------------------------------------------------------------------
+# chunked attention core (train / prefill)
+# ----------------------------------------------------------------------------
+def _shard_act(x, kind):
+    from repro.parallel import sharding as _sh
+
+    return _sh.shard_activation(x, kind)
+
+
+def _pick_chunk(t: int, chunk: int) -> int:
+    """Largest divisor of t that is <= chunk (KV-chunk length)."""
+    if t <= chunk:
+        return t
+    for c in range(chunk, 0, -1):
+        if t % c == 0:
+            return c
+    return t
+
+
+def _attend_chunked(cfg, q, k, v, *, causal: bool, window: int, q_pos0=0, chunk: int = 1024):
+    """q: [B,S,H,hd], k/v: [B,T,Kv,hd] -> [B,S,H,hd].
+
+    Online-softmax scan over KV chunks. GQA is made uniform by repeating KV
+    heads to full H *after* projection (cheap per chunk; keeps every einsum
+    head-major so the head axis shards over "model" whenever H divides the
+    TP size — the sharding hooks fall back to sequence sharding otherwise).
+    ``window``>0 restricts to a trailing window (sliding-window attention).
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    g = h // cfg.n_kv
+    ck = _pick_chunk(t, chunk)
+    nck = t // ck
+
+    # Keep q/k/v in the model dtype (bf16 on TPU) and accumulate in f32 via
+    # preferred_element_type — an f32 cast here materializes 2x-size copies
+    # of the full K/V (§Perf iteration D2).
+    cdt = k.dtype
+    qf = (q.astype(jnp.float32) * _qscale(cfg)).astype(cdt)
+    qf = _shard_act(qf, "attn_q")                    # [B,S,H,hd]
+    kr = jnp.repeat(k, g, axis=2)                    # [B,T,H,hd]
+    vr = jnp.repeat(v, g, axis=2)
+    kr = _shard_act(kr, "attn_kv")
+    vr = _shard_act(vr, "attn_kv")
+    kc = jnp.moveaxis(kr.reshape(b, nck, ck, h, hd), 1, 0)  # [nck,B,ck,H,hd]
+    vc = jnp.moveaxis(vr.reshape(b, nck, ck, h, hd), 1, 0)
+
+    q_ids = q_pos0 + jnp.arange(s, dtype=jnp.int32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kci, vci, c = xs
+        sc = jnp.einsum("bshd,bchd->bshc", qf, kci,
+                        preferred_element_type=jnp.float32)  # [B,S,H,ck] f32
+        sc = softcap(sc, cfg.attn_softcap)
+        kv_ids = c * ck + jnp.arange(ck, dtype=jnp.int32)
+        mask = jnp.ones((s, ck), jnp.bool_)
+        if causal:
+            mask &= kv_ids[None, :] <= q_ids[:, None]
+        if window:
+            mask &= (q_ids[:, None] - kv_ids[None, :]) < window
+        sc = jnp.where(mask[None, :, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bshc,bchd->bshd", p.astype(cdt), vci,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, s, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, h), jnp.float32)
+    a0 = jnp.zeros((b, s, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(nck, dtype=jnp.int32))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# public forward paths
+# ----------------------------------------------------------------------------
+def attn_forward(cfg, p, x, positions, *, causal=True, window=0, memory=None, use_rope=True):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    x: [B,S,d]; memory: [B,T,d] for cross attention (kv source).
+    Returns (out [B,S,d], (k, v) fp cache entries [B,T,Kv,hd]).
+    """
+    q = _project_q(cfg, p, x)
+    src = memory if memory is not None else x
+    k, v = _project_kv(cfg, p, src)
+    if use_rope and memory is None:
+        q = apply_rope(cfg, q, positions[None, :])
+        k = apply_rope(cfg, k, positions[None, :])
+    out = _attend_chunked(cfg, q, k, v, causal=causal, window=window)
+    b, s = x.shape[0], x.shape[1]
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, (k, v)
+
+
+def attn_decode(cfg, p, x, cache_k, cache_v, pos, *, window=0, use_rope=True, update_cache=True):
+    """Single-token decode. x: [B,1,d]; cache_k/v: [B,L,Kv,hd]; pos: int32 scalar.
+
+    Global layers: cache is absolute-position indexed (L >= pos+1); mask is
+    ids <= pos. Sliding-window layers with L < full context use the cache as
+    a RING buffer of size L == window: the new token writes slot pos % L,
+    keys carry their absolute RoPE rotation, and after warm-up every slot is
+    in-window (mask = slot <= pos covers warm-up) — O(window) memory at any
+    context length.
+    """
+    b, _, d = x.shape
+    L = cache_k.shape[1]
+    ring = bool(window) and window <= L and L != 0 and window == L
+    q = _project_q(cfg, p, x)            # [B,1,H,hd]
+    k_new, v_new = _project_kv(cfg, p, x)  # [B,1,Kv,hd]
+    if use_rope:
+        ppos = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(cfg, q, ppos[None, :])
+        k_new = apply_rope(cfg, k_new, ppos[None, :])
+    widx = (pos % L) if ring else pos
+    if update_cache:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, widx, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, widx, 0, 0))
+
+    kv = cfg.n_kv
+    g = cfg.n_heads // kv
+    qf = (q.astype(jnp.float32) * _qscale(cfg)).astype(cache_k.dtype)
+    qf = qf.reshape(b, kv, g, cfg.hd)
+    # Contract against the cache IN ITS STORED DTYPE with f32 accumulation —
+    # an .astype(f32) here materializes a 2x-size copy of the whole cache
+    # every decode step (§Perf iteration A1: dominant decode HBM term).
+    sc = jnp.einsum("bkgd,blkd->bkgl", qf, cache_k,
+                    preferred_element_type=jnp.float32)
+    sc = softcap(sc, cfg.attn_softcap)
+    ids = jnp.arange(L, dtype=jnp.int32)
+    mask = ids <= pos                    # ring: warm-up gate; then all-valid
+    if window and not ring:
+        mask &= (pos - ids) < window
+    sc = jnp.where(mask[None, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", pr.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd).astype(x.dtype) @ p["wo"]
+    return out, cache_k, cache_v

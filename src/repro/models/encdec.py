@@ -1,0 +1,135 @@
+"""Whisper-style encoder-decoder backbone (conv audio frontend STUBBED).
+
+``input_specs`` supplies precomputed frame embeddings [B, F, d] (the conv1d
+x2 + GELU frontend of Whisper is a modality stub per the assignment); the
+encoder is a bidirectional transformer over frames with sinusoidal
+positions, the decoder a causal transformer with cross-attention. Decode
+carries a self-attn KV cache plus precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+def _enc_cfg(cfg):
+    return cfg  # same widths for enc/dec in whisper-base
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, 6)
+
+    def stack(k, n, maker):
+        leaves = [maker(jax.random.fold_in(k, i)) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.init_norm(cfg, cfg.d_model),
+            "attn": attn.init_attn(k1, cfg),
+            "norm2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg, cfg.d_model, cfg.d_ff),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": L.init_norm(cfg, cfg.d_model),
+            "self": attn.init_attn(k1, cfg),
+            "norm_x": L.init_norm(cfg, cfg.d_model),
+            "cross": attn.init_attn(k2, cfg, cross=True),
+            "norm2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(k3, cfg, cfg.d_model, cfg.d_ff),
+        }
+
+    return {
+        "embed": L.init_embed(ks[0], cfg),
+        "enc": stack(ks[1], cfg.enc_layers, enc_layer),
+        "enc_norm": L.init_norm(cfg, cfg.d_model),
+        "dec": stack(ks[2], cfg.n_layers, dec_layer),
+        "dec_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: [B, F, d] (stub embeddings) -> [B, F, d]."""
+    f = frames.shape[1]
+    x = frames + L.sinusoidal_positions(f, cfg.d_model).astype(frames.dtype)[None]
+    positions = jnp.arange(f, dtype=jnp.int32)
+
+    def layer(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        a, _ = attn.attn_forward(cfg, p["attn"], h, positions, causal=False, use_rope=False)
+        x = x + a
+        h = L.apply_norm(cfg, p["norm2"], x)
+        return x + L.apply_mlp(cfg, p["mlp"], h), None
+
+    x, _ = jax.lax.scan(layer, x, params["enc"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_fwd(cfg, params, tokens, enc_out, *, want_cache: bool):
+    """Full decoder pass. tokens: [B,S] -> (logits [B,S,V], caches|None)."""
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def layer(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        a, kv = attn.attn_forward(cfg, p["self"], h, positions, causal=True, use_rope=True)
+        x = x + a
+        h = L.apply_norm(cfg, p["norm_x"], x)
+        c, ckv = attn.attn_forward(cfg, p["cross"], h, positions, causal=False,
+                                   memory=enc_out, use_rope=False)
+        x = x + c
+        h = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.apply_mlp(cfg, p["mlp"], h)
+        return x, ((kv, ckv) if want_cache else None)
+
+    x, caches = jax.lax.scan(layer, x, params["dec"])
+    x = L.apply_norm(cfg, params["dec_norm"], x)
+    return L.unembed(cfg, params["embed"], x), caches
+
+
+def decode_step(cfg, params, tokens, caches, cross_kv, pos):
+    """One-token decode. tokens: [B]; caches: stacked (k,v) self caches;
+    cross_kv: stacked (k,v) over enc frames. -> (logits [B,V], caches')."""
+    x = L.embed_tokens(cfg, params["embed"], tokens[:, None])
+
+    def layer(x, xs):
+        p, (ck, cv), (xk, xv) = xs
+        h = L.apply_norm(cfg, p["norm1"], x)
+        a, ck, cv = attn.attn_decode(cfg, p["self"], h, ck, cv, pos)
+        x = x + a
+        h = L.apply_norm(cfg, p["norm_x"], x)
+        # cross attention against fixed encoder K/V
+        b = x.shape[0]
+        q = h @ p["cross"]["wq"]
+        q = q.reshape(b, 1, cfg.n_heads, cfg.hd)
+        kv, g = cfg.n_kv, cfg.n_heads // cfg.n_kv
+        qf = q.astype(jnp.float32).reshape(b, kv, g, cfg.hd) * (cfg.hd ** -0.5)
+        sc = jnp.einsum("bkgd,blkd->bkgl", qf, xk.astype(jnp.float32))
+        pr = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bkgl,blkd->bkgd", pr, xv.astype(jnp.float32))
+        o = o.reshape(b, 1, cfg.n_heads * cfg.hd).astype(x.dtype) @ p["cross"]["wo"]
+        x = x + o
+        h = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.apply_mlp(cfg, p["mlp"], h)
+        return x, (ck, cv)
+
+    x, new_caches = jax.lax.scan(layer, x, (params["dec"], caches, cross_kv))
+    x = L.apply_norm(cfg, params["dec_norm"], x)
+    return L.unembed(cfg, params["embed"], x)[:, 0], new_caches
+
+
+def init_dec_cache(cfg, batch: int, cache_len: int, dtype):
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv, cfg.hd)
+    xshape = (cfg.n_layers, batch, cfg.enc_frames, cfg.n_kv, cfg.hd)
+    return (
+        (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+        (jnp.zeros(xshape, dtype), jnp.zeros(xshape, dtype)),
+    )

@@ -1,0 +1,121 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary, init helpers.
+
+Pure-functional: ``init_*`` returns a param dict, ``apply`` functions take
+(params, x). Layer-stacked params (leading ``L`` axis) are consumed via
+``lax.scan`` in transformer.py to keep HLO size and compile time flat in
+depth — essential for 46-80 layer archs on the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+def init_norm(cfg, dim: int):
+    if not cfg.parametric_norm:
+        return {}
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def apply_norm(cfg, params, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        xf = xf - jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    if cfg.parametric_norm and params:
+        xf = xf * params["scale"]
+    return xf.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ----------------------------------------------------------------------------
+def init_mlp(key, cfg, d_in: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    return {
+        "wi": dense_init(k1, (d_in, d_ff), dt),
+        "wg": dense_init(k2, (d_in, d_ff), dt),
+        "wo": dense_init(k3, (d_ff, d_in), dt),
+    }
+
+
+def apply_mlp(cfg, params, x):
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    h = act(x @ params["wg"]) * (x @ params["wi"])
+    return h @ params["wo"]
+
+
+# ----------------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------------
+def rope_freqs(cfg, hd: int):
+    half = hd // 2
+    return cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(cfg, x, positions):
+    """x: [..., S, H, hd]; positions: int32 broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    inv = rope_freqs(cfg, hd)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, hd/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = 10000.0 ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# embeddings / unembedding
+# ----------------------------------------------------------------------------
+def init_embed(key, cfg):
+    dt = dtype_of(cfg)
+    p = {"tok": embed_init(key, (cfg.vocab, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab), dt)
+    return p
+
+
+def embed_tokens(cfg, params, tokens):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["tok"].T
+    else:
+        logits = x @ params["unembed"]
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)

@@ -1,0 +1,231 @@
+"""Unified model API: build(config) -> Model with init/loss/prefill/decode.
+
+The three step functions lowered by the dry-run (launch/dryrun.py):
+  train:   loss_and_metrics(params, batch)         batch from input_specs
+  prefill: prefill(params, batch) -> (logits, caches)
+  decode:  decode_step(params, caches, tokens, pos) -> (logits, caches)
+
+``input_specs(shape_name)`` returns jax.ShapeDtypeStruct stand-ins for every
+input — weak-type-correct, shardable, zero allocation — including modality
+stubs (whisper frames, internvl2 patch embeddings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, shape_for
+from repro.models import encdec as ed
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _sharding():
+    from repro.parallel import sharding as _sh
+
+    return _sh
+
+
+def cross_entropy(logits, targets, mask=None):
+    """logits: [B,S,V]; targets: [B,S] int32; mask: [B,S] or None.
+
+    Sharding-friendly form: no gather over the (model-sharded) vocab axis —
+    logsumexp reduces over V locally + psum, and the target logit comes from
+    a fused one-hot contraction. take_along_axis here would force GSPMD to
+    all-gather the full [B,S,V] logits per device (observed: 182 GB/device
+    temp on the 256-chip dry-run; this form brings it back to ~C/shards).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    oh = jax.nn.one_hot(targets, logits.shape[-1], dtype=lf.dtype)
+    tgt = jnp.sum(lf * oh, axis=-1)
+    ll = tgt - lse
+    if mask is None:
+        return -jnp.mean(ll)
+    m = mask.astype(jnp.float32)
+    return -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+class Model:
+    """Decoder-only LM families (dense / moe / ssm / hybrid / vlm-backbone)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ke, kt = jax.random.split(rng)
+        return {"embed": L.init_embed(ke, cfg), "trunk": T.init_trunk(kt, cfg)}
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- forward --------------------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_tokens(cfg, params["embed"], batch["tokens"])
+        if cfg.n_vis_tokens:
+            vis = batch["vis_embeds"].astype(x.dtype)
+            x = jnp.concatenate([vis, x], axis=1)
+        return _sharding().shard_activation(x, "hidden")
+
+    def forward(self, params, batch, *, want_cache=False, remat=False,
+                last_only=False):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        x, caches, aux = T.trunk_fwd(cfg, params["trunk"], x, positions,
+                                     want_cache=want_cache, remat=remat)
+        if cfg.n_vis_tokens:
+            x = x[:, cfg.n_vis_tokens:, :]
+        if last_only:
+            # prefill only needs the final position's logits; unembedding the
+            # whole sequence materializes a [B,S,V] f32 tensor for nothing
+            # (§Perf iteration D1: 2.1 GB/chip on internvl2 prefill_32k)
+            x = x[:, -1:, :]
+        logits = L.unembed(cfg, params["embed"], x)
+        logits = _sharding().shard_activation(logits, "logits")
+        return logits, caches, aux
+
+    def loss_and_metrics(self, params, batch, *, remat=True):
+        logits, _, aux = self.forward(params, batch, remat=remat)
+        tok = batch["tokens"]
+        loss = cross_entropy(logits[:, :-1], tok[:, 1:]) + aux
+        return loss, {"loss": loss, "aux": aux}
+
+    # -- serving --------------------------------------------------------------
+    def prefill(self, params, batch):
+        logits, caches, _ = self.forward(params, batch, want_cache=True,
+                                         last_only=True)
+        return logits[:, -1, :], caches
+
+    def decode_step(self, params, caches, tokens, pos, *, unroll: bool = False):
+        """tokens: int32[B]; pos: int32 scalar. -> (logits [B,V], caches')."""
+        cfg = self.cfg
+        x = L.embed_tokens(cfg, params["embed"], tokens[:, None])
+        x, caches = T.trunk_decode(cfg, params["trunk"], x, caches, pos, unroll=unroll)
+        logits = L.unembed(cfg, params["embed"], x)[:, 0]
+        return logits, caches
+
+    def init_cache(self, batch: int, cache_len: int):
+        return T.init_cache(self.cfg, batch, cache_len, L.dtype_of(self.cfg))
+
+    def cache_from_prefill(self, caches, cache_len: int):
+        """Convert prefill caches (length S entries) into decode caches of
+        ``cache_len``. Attention entries are padded on the length axis (ring
+        layers scatter the last `window` positions to slot p % window);
+        ssm/rec entries pass through."""
+        cfg = self.cfg
+        out = []
+        for (pat, _), gc in zip(T._pattern(cfg), caches):
+            group = {}
+            for li, kind in enumerate(pat):
+                entry = gc[str(li)]
+                if kind in ("global", "local", "moe"):
+                    k, v = entry
+                    s = k.shape[2]
+                    ln = cache_len
+                    if kind == "local" and cfg.sliding_window:
+                        ln = min(cache_len, cfg.sliding_window)
+                    if ln >= s:
+                        pad = [(0, 0), (0, 0), (0, ln - s), (0, 0), (0, 0)]
+                        group[str(li)] = (jnp.pad(k, pad), jnp.pad(v, pad))
+                    else:  # ring: keep last ln positions at slot p % ln
+                        pos = jnp.arange(s - ln, s)
+                        slots = pos % ln
+                        zk = jnp.zeros(k.shape[:2] + (ln,) + k.shape[3:], k.dtype)
+                        group[str(li)] = (
+                            zk.at[:, :, slots].set(k[:, :, s - ln:]),
+                            zk.at[:, :, slots].set(v[:, :, s - ln:]),
+                        )
+                else:
+                    group[str(li)] = entry
+            out.append(group)
+        return out
+
+    def abstract_cache(self, batch: int, cache_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, cache_len))
+
+    # -- dry-run inputs ---------------------------------------------------------
+    def input_specs(self, shape_name: str) -> dict[str, Any]:
+        cfg = self.cfg
+        sh = shape_for(shape_name)
+        b, s = sh["global_batch"], sh["seq_len"]
+        kind = sh["kind"]
+        tok = jnp.int32
+        if kind in ("train", "prefill"):
+            s_text = s - cfg.n_vis_tokens
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s_text), tok)}
+            if cfg.n_vis_tokens:
+                specs["vis_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_vis_tokens, cfg.d_model), L.dtype_of(cfg))
+            return specs
+        # decode: one new token against a cache of length s
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), tok),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+class EncDecModel:
+    """Whisper-style enc-dec; frames stub via input_specs."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, rng) -> dict:
+        return ed.init_encdec(rng, self.cfg)
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def loss_and_metrics(self, params, batch, *, remat=True):
+        cfg = self.cfg
+        enc = ed.encode(cfg, params, batch["frames"])
+        logits, _ = ed.decode_fwd(cfg, params, batch["tokens"], enc, want_cache=False)
+        loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+        return loss, {"loss": loss, "aux": jnp.float32(0.0)}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        enc = ed.encode(cfg, params, batch["frames"])
+        logits, caches = ed.decode_fwd(cfg, params, batch["tokens"], enc, want_cache=True)
+        return logits[:, -1, :], caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        self_c, cross_c = caches
+        logits, new_self = ed.decode_step(self.cfg, params, tokens, self_c, cross_c, pos)
+        return logits, (new_self, cross_c)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return ed.init_dec_cache(self.cfg, batch, cache_len, L.dtype_of(self.cfg))
+
+    def abstract_cache(self, batch: int, cache_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, cache_len))
+
+    def input_specs(self, shape_name: str):
+        cfg = self.cfg
+        sh = shape_for(shape_name)
+        b, s = sh["global_batch"], sh["seq_len"]
+        kind = sh["kind"]
+        if kind in ("train", "prefill"):
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "frames": jax.ShapeDtypeStruct((b, cfg.enc_frames, cfg.d_model),
+                                               L.dtype_of(cfg)),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return Model(cfg)

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [branch a: linear -> conv1d(4) -> RG-LRU] ⊙ gelu(branch b) -> out.
+RG-LRU per channel:  r_t = σ(W_a x_t + b_a);  i_t = σ(W_x x_t + b_x)
+                     a_t = exp(c·softplus(Λ)·(-r_t))        (c = 8)
+                     h_t = a_t h_{t-1} + sqrt(1 - a_t²)·(i_t ⊙ x_t)
+
+Train/prefill uses an associative scan over the diagonal linear recurrence
+(log-depth on TPU); decode is one elementwise update — constant state, so
+the hybrid runs ``long_500k``. Hybrid stacking (2 recurrent : 1 local-attn)
+lives in transformer.py via cfg.block_pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+_C = 8.0
+
+
+def init_rglru(key, cfg):
+    dt = dtype_of(cfg)
+    d, dl = cfg.d_model, cfg.d_lru
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], (d, dl), dt),     # recurrent branch input
+        "in_g": dense_init(ks[1], (d, dl), dt),     # multiplicative gate branch
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, dl), dt, scale=0.5),
+        "conv_b": jnp.zeros((dl,), jnp.float32),
+        "w_a": dense_init(ks[3], (dl, dl), dt),
+        "b_a": jnp.zeros((dl,), jnp.float32),
+        "w_i": dense_init(ks[4], (dl, dl), dt),
+        "b_i": jnp.zeros((dl,), jnp.float32),
+        "lam": jnp.full((dl,), 0.7, jnp.float32),
+        "out": dense_init(ks[5], (dl, d), dt),
+    }
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * uf)
+    return a, gated
+
+
+def _conv(p, u, tail=None):
+    """Causal depthwise conv, optionally warm-started with cached tail."""
+    w = p["conv_w"].astype(jnp.float32)
+    k = w.shape[0]
+    uf = u.astype(jnp.float32)
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), jnp.float32)
+    else:
+        pad = tail.astype(jnp.float32)
+    seq = jnp.concatenate([pad, uf], axis=1)
+    out = sum(seq[:, i : i + u.shape[1], :] * w[i] for i in range(k))
+    return (out + p["conv_b"]).astype(u.dtype), seq[:, -(k - 1):, :].astype(u.dtype)
+
+
+def apply_rglru(cfg, p, x, h0=None):
+    """x: [B,S,d] -> (y [B,S,d], h_last [B,d_lru], conv_tail [B,K-1,d_lru])."""
+    b, s, _ = x.shape
+    u = x @ p["in_x"]
+    g = jax.nn.gelu((x @ p["in_g"]).astype(jnp.float32))
+    u, conv_tail = _conv(p, u)
+    a, gated = _gates(p, u)                      # [B,S,dl] each (f32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aT = jnp.moveaxis(a, 1, 0)
+    gT = jnp.moveaxis(gated, 1, 0)
+    if h0 is not None:
+        gT = gT.at[0].add(aT[0] * h0.astype(jnp.float32))
+    _, hs = jax.lax.associative_scan(combine, (aT, gT), axis=0)
+    h = jnp.moveaxis(hs, 0, 1)                   # [B,S,dl]
+    y = (h * g).astype(x.dtype) @ p["out"]
+    return y, h[:, -1, :], conv_tail
+
+
+def apply_rglru_decode(cfg, p, x, h, conv_cache):
+    """One-token update. x: [B,1,d]; h: [B,d_lru]; conv_cache: [B,K-1,d_lru]."""
+    u = x @ p["in_x"]
+    g = jax.nn.gelu((x @ p["in_g"]).astype(jnp.float32))
+    u, conv_cache = _conv(p, u, tail=conv_cache)
+    a, gated = _gates(p, u)                      # [B,1,dl]
+    h = a[:, 0] * h.astype(jnp.float32) + gated[:, 0]
+    y = (h[:, None, :] * g).astype(x.dtype) @ p["out"]
+    return y, h, conv_cache

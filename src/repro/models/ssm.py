@@ -1,0 +1,170 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill + O(1) decode.
+
+Follows the SSD dual form (arXiv:2405.21060): within a chunk of length Q the
+output is a masked quadratic form (MXU-friendly), across chunks a linear
+state recurrence carries [H, hd, N] states. Decode is a single recurrent
+update — constant memory in context length, which is why mamba2 runs the
+``long_500k`` cell the full-attention archs skip.
+
+Layout: d_inner = expand * d_model; H = d_inner / headdim heads; state N.
+Params per layer: in_proj d->(2*d_inner + 2*N + H), depthwise conv (causal,
+width 4) on x-branch, per-head A (scalar decay), D skip, gated RMSNorm-free
+output via silu(z), out_proj d_inner->d.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+
+def _dims(cfg):
+    din = cfg.ssm_expand * cfg.d_model
+    nh = din // cfg.ssm_headdim
+    return din, nh, cfg.ssm_headdim, cfg.ssm_state
+
+
+def init_ssm(key, cfg):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    din, nh, hd, n = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din + 2 * n + nh), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, din), dt, scale=0.5),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "dskip": jnp.ones((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], (din, d), dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    din, nh, hd, n = _dims(cfg)
+    z = zxbcdt[..., :din]
+    x = zxbcdt[..., din : 2 * din]
+    bmat = zxbcdt[..., 2 * din : 2 * din + n]
+    cmat = zxbcdt[..., 2 * din + n : 2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n :]
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(cfg, p, x):
+    """Depthwise causal conv along time. x: [B, S, din]."""
+    w = p["conv_w"].astype(jnp.float32)  # [K, din]
+    k = w.shape[0]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"]).astype(x.dtype)
+
+
+def apply_ssm(cfg, p, x):
+    """Chunked SSD forward. x: [B, S, d] -> (y [B, S, d], final_state, conv_tail).
+
+    final_state: [B, H, hd, N]; conv_tail: [B, K-1, din] (decode warm-start).
+    """
+    b, s, d = x.shape
+    din, nh, hd, n = _dims(cfg)
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    zxbcdt = x @ p["in_proj"]
+    z, xb_raw, bmat, cmat, dtr = _split_proj(cfg, zxbcdt)
+    # decode warm-start caches the PRE-conv tail (the conv consumes raw inputs)
+    conv_tail = xb_raw[:, s - (cfg.ssm_conv - 1):, :]
+    xb = _causal_conv(cfg, p, xb_raw)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])        # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                            # [H]
+    da = dt * a                                                         # [B,S,H] (log decay)
+    xh = xb.astype(jnp.float32).reshape(b, s, nh, hd)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    # chunk views
+    xc = xh.reshape(b, nc, q, nh, hd)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+    dac = da.reshape(b, nc, q, nh)
+    dtc = dt.reshape(b, nc, q, nh)
+
+    seg = jnp.cumsum(dac, axis=2)                                        # [B,nc,Q,H]
+    # intra-chunk: L[i,j] = exp(seg_i - seg_j) for i >= j.
+    # Mask BEFORE exp: for j > i the difference is positive and exp overflows;
+    # an overflow inside the unselected where-branch poisons the gradient
+    # (inf * 0 = NaN in the VJP), which NaN'd mamba2's first train step.
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]                   # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    li = jnp.where(tri[None, None, :, :, None], li, -jnp.inf)
+    lmask = jnp.exp(li)
+    # pin the dominant intra-chunk tensor's layout: batch over data, heads
+    # over model (GSPMD loses the head sharding through the cumsum/tril path
+    # and replicates ~GBs per layer otherwise; §Perf cell B3)
+    from repro.parallel import sharding as _sh
+    lmask = _sh.shard_activation(lmask, "ssm_intra")
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)                           # [B,nc,Q,Q]
+    att = cb[..., None] * lmask                                          # [B,nc,Q,Q,H]
+    att = _sh.shard_activation(att, "ssm_intra")
+    y_intra = jnp.einsum("bcijh,bcjhd,bcjh->bcihd", att, xc, dtc)
+
+    # chunk-final states: S_c = sum_j exp(seg_Q - seg_j) * dt_j * B_j x_j^T
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)                      # [B,nc,Q,H]
+    sstates = jnp.einsum("bcjh,bcjn,bcjhd->bchnd", decay_to_end * dtc, bc, xc)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                              # [B,nc,H]
+
+    def scan_fn(h0, xs):
+        s_c, g_c = xs  # [B,H,N,hd], [B,H]
+        h1 = h0 * g_c[..., None, None] + s_c
+        return h1, h0  # emit state BEFORE the chunk
+
+    h_init = jnp.zeros((b, nh, n, hd), jnp.float32)
+    h_last, h_before = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (jnp.moveaxis(sstates, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)                              # [B,nc,H,N,hd]
+
+    # inter-chunk contribution: y_j += C_j exp(seg_j) h_before
+    y_inter = jnp.einsum("bcin,bcih,bchnd->bcihd", cc, jnp.exp(seg), h_before)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    y = y + xh * p["dskip"][None, None, :, None]
+    y = (y.reshape(b, s, din) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], h_last, conv_tail
+
+
+def apply_ssm_decode(cfg, p, x, state, conv_cache):
+    """One-token recurrent update.
+
+    x: [B,1,d]; state: [B,H,N,hd]; conv_cache: [B,K-1,din]
+    -> (y [B,1,d], state', conv_cache')
+    """
+    b = x.shape[0]
+    din, nh, hd, n = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xb, bmat, cmat, dtr = _split_proj(cfg, zxbcdt)
+
+    # conv with cached tail
+    w = p["conv_w"].astype(jnp.float32)
+    k = w.shape[0]
+    seq = jnp.concatenate([conv_cache.astype(jnp.float32), xb.astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bkd,kd->bd", seq[:, -k:, :], w) + p["conv_b"]
+    xcv = jax.nn.silu(conv_out)                                         # [B,din]
+    conv_cache = seq[:, -(k - 1):, :].astype(conv_cache.dtype)
+
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    g = jnp.exp(dt * a)                                                 # [B,H]
+    xh = xcv.reshape(b, nh, hd)
+    bv = bmat[:, 0].astype(jnp.float32)                                 # [B,N]
+    cv = cmat[:, 0].astype(jnp.float32)
+    state = state * g[..., None, None] + jnp.einsum(
+        "bh,bn,bhd->bhnd", dt, bv, xh
+    )
+    y = jnp.einsum("bn,bhnd->bhd", cv, state) + xh * p["dskip"][None, :, None]
+    y = (y.reshape(b, 1, din) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], state, conv_cache

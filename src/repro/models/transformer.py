@@ -1,0 +1,291 @@
+"""Decoder-only LM trunk: pattern-grouped layer stacking under lax.scan.
+
+Layer heterogeneity (gemma2 local/global alternation, Griffin rec/rec/attn
+triples) is expressed as a *group pattern*: params are stacked over groups
+and scanned, so HLO size and compile time are O(group) not O(depth) — the
+46-80 layer archs compile in the same ballpark as the 16-layer ones on the
+512-device dry-run.
+
+Layer kinds (cfg.family -> pattern, see _pattern()):
+  "global"     pre-norm GQA attention (full causal) + MLP
+  "local"      same with sliding-window mask
+  "moe"        attention + MoE FFN
+  "ssm"        mamba2 SSD mixer only (no MLP)
+  "rec"        RG-LRU temporal block + MLP
+Caches per kind: attention -> (k, v); ssm -> (state, conv); rec -> (h, conv).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru
+from repro.models import ssm as ssm_mod
+
+
+# ----------------------------------------------------------------------------
+# patterns
+# ----------------------------------------------------------------------------
+_KIND_ALIASES = {"attn_local": "local", "attn": "global"}
+
+
+def _norm_kind(kind: str) -> str:
+    return _KIND_ALIASES.get(kind, kind)
+
+
+def _pattern(cfg) -> list[tuple[tuple[str, ...], int]]:
+    """[(group_pattern, n_groups), ...] covering cfg.n_layers layers."""
+    if cfg.family == "ssm":
+        return [(("ssm",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        pat = tuple(_norm_kind(k) for k in cfg.block_pattern) or ("rec",)
+        n_groups, rem = divmod(cfg.n_layers, len(pat))
+        out = [(pat, n_groups)] if n_groups else []
+        if rem:
+            out.append((pat[:rem], 1))
+        return out
+    if cfg.local_global_period == 2 and cfg.sliding_window:
+        assert cfg.n_layers % 2 == 0
+        return [(("local", "global"), cfg.n_layers // 2)]
+    kind = "moe" if cfg.n_experts else "global"
+    return [((kind,), cfg.n_layers)]
+
+
+def _layer_kind_window(cfg, kind: str) -> int:
+    if kind == "local":
+        return cfg.sliding_window
+    if kind == "attn_local":
+        return cfg.sliding_window
+    return 0
+
+
+# ----------------------------------------------------------------------------
+# per-layer init / forward / decode
+# ----------------------------------------------------------------------------
+def _init_layer(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": L.init_norm(cfg, cfg.d_model)}
+    if kind in ("global", "local", "moe"):
+        p["attn"] = attn.init_attn(ks[0], cfg)
+        p["norm2"] = L.init_norm(cfg, cfg.d_model)
+        if kind == "moe":
+            p["moe"] = moe_mod.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff)
+        if cfg.sandwich_norm:
+            p["post1"] = L.init_norm(cfg, cfg.d_model)
+            p["post2"] = L.init_norm(cfg, cfg.d_model)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = rglru.init_rglru(ks[0], cfg)
+        p["norm2"] = L.init_norm(cfg, cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _layer_fwd(cfg, kind, p, x, positions, *, want_cache: bool):
+    """Full-sequence layer. Returns (x', cache_entry, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if kind in ("global", "local", "moe"):
+        window = cfg.sliding_window if kind == "local" else 0
+        a, kvc = attn.attn_forward(cfg, p["attn"], h, positions, causal=True, window=window)
+        if cfg.sandwich_norm:
+            a = L.apply_norm(cfg, p["post1"], a)
+        x = x + a
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            f, aux = moe_mod.apply_moe(cfg, p["moe"], h2)
+        else:
+            f = L.apply_mlp(cfg, p["mlp"], h2)
+        if cfg.sandwich_norm:
+            f = L.apply_norm(cfg, p["post2"], f)
+        x = x + f
+        cache = kvc if want_cache else None
+    elif kind == "ssm":
+        y, state, conv = ssm_mod.apply_ssm(cfg, p["ssm"], h)
+        x = x + y
+        cache = (state, conv) if want_cache else None
+    elif kind == "rec":
+        y, hlast, conv = rglru.apply_rglru(cfg, p["rec"], h)
+        x = x + y
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.apply_mlp(cfg, p["mlp"], h2)
+        cache = (hlast, conv) if want_cache else None
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def _layer_decode(cfg, kind, p, x, cache, pos):
+    """One-token layer step. Returns (x', cache')."""
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if kind in ("global", "local", "moe"):
+        window = cfg.sliding_window if kind == "local" else 0
+        ck, cv = cache
+        a, ck, cv = attn.attn_decode(cfg, p["attn"], h, ck, cv, pos, window=window)
+        if cfg.sandwich_norm:
+            a = L.apply_norm(cfg, p["post1"], a)
+        x = x + a
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            f, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
+        else:
+            f = L.apply_mlp(cfg, p["mlp"], h2)
+        if cfg.sandwich_norm:
+            f = L.apply_norm(cfg, p["post2"], f)
+        x = x + f
+        return x, (ck, cv)
+    if kind == "ssm":
+        state, conv = cache
+        y, state, conv = ssm_mod.apply_ssm_decode(cfg, p["ssm"], h, state, conv)
+        return x + y, (state, conv)
+    if kind == "rec":
+        hr, conv = cache
+        y, hr, conv = rglru.apply_rglru_decode(cfg, p["rec"], h, hr, conv)
+        x = x + y
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.apply_mlp(cfg, p["mlp"], h2)
+        return x, (hr, conv)
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------------
+# trunk init
+# ----------------------------------------------------------------------------
+def init_trunk(key, cfg):
+    """Params: {"stacks": [ {str(i): stacked-layer-params} per stack ],
+    "final_norm": ...}. Each stack's leaves carry a leading group axis."""
+    stacks = []
+    for si, (pat, n_groups) in enumerate(_pattern(cfg)):
+        group = {}
+        for li, kind in enumerate(pat):
+            def one(g, _li=li, _kind=kind, _si=si):
+                k = jax.random.fold_in(key, _si * 1000 + g * 10 + _li)
+                return _init_layer(k, cfg, _kind)
+
+            leaves = [one(g) for g in range(n_groups)]
+            group[str(li)] = jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+        stacks.append(group)
+    return {"stacks": stacks, "final_norm": L.init_norm(cfg, cfg.d_model)}
+
+
+# ----------------------------------------------------------------------------
+# trunk forward (train / prefill)
+# ----------------------------------------------------------------------------
+def trunk_fwd(cfg, params, x, positions, *, want_cache: bool, remat: bool = False):
+    """x: [B,S,d] -> (x', caches per stack (stacked over groups) | None, aux)."""
+    aux_total = jnp.float32(0.0)
+    all_caches = []
+    for (pat, n_groups), gp in zip(_pattern(cfg), params["stacks"]):
+
+        def group_fwd(carry, gparams, _pat=pat):
+            xg, aux = carry
+            from repro.parallel import sharding as _sh
+
+            xg = _sh.shard_activation(xg, "hidden")
+            caches = {}
+            for li, kind in enumerate(_pat):
+                xg, cache, a = _layer_fwd(cfg, kind, gparams[str(li)], xg, positions,
+                                          want_cache=want_cache)
+                caches[str(li)] = cache
+                aux = aux + a
+            return (xg, aux), (caches if want_cache else None)
+
+        f = group_fwd
+        if remat:
+            f = jax.checkpoint(group_fwd, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux_total), caches = jax.lax.scan(f, (x, aux_total), gp)
+        all_caches.append(caches)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, (all_caches if want_cache else None), aux_total
+
+
+# ----------------------------------------------------------------------------
+# trunk decode (one token)
+# ----------------------------------------------------------------------------
+def trunk_decode(cfg, params, x, caches, pos, *, unroll: bool = False):
+    """x: [B,1,d]; caches as returned by init_cache/prefill. -> (x', caches').
+
+    ``unroll=True`` (§Perf iteration A1) replaces the group scan with a
+    Python loop over groups: a lax.scan must re-materialize every group's
+    cache through its stacked ys (a full KV-cache copy per decode step —
+    observed 5-10x the irreducible decode HBM traffic on the dry-run);
+    unrolled layers let XLA donate and update the caches in place. HLO size
+    grows O(depth) — acceptable for the serve step, which is small per layer.
+    """
+    new_caches = []
+    for (pat, n_groups), gp, gc in zip(_pattern(cfg), params["stacks"], caches):
+        if unroll:
+            # read one group's slice, compute, write the slice back in place
+            # (donated stacked buffers + disjoint indices -> no cache copy)
+            for gi in range(n_groups):
+                gparams = jax.tree.map(lambda a: a[gi], gp)
+                gcache = jax.tree.map(lambda a: a[gi], gc)
+                upd = {}
+                for li, kind in enumerate(pat):
+                    x, c = _layer_decode(cfg, kind, gparams[str(li)], x,
+                                         gcache[str(li)], pos)
+                    upd[str(li)] = c
+                gc = jax.tree.map(lambda full, u: full.at[gi].set(u), gc, upd)
+            nc = gc
+        else:
+            def group_step(carry, xs, _pat=pat):
+                xg = carry
+                gparams, gcache = xs
+                out_caches = {}
+                for li, kind in enumerate(_pat):
+                    xg, c = _layer_decode(cfg, kind, gparams[str(li)], xg,
+                                          gcache[str(li)], pos)
+                    out_caches[str(li)] = c
+                return xg, out_caches
+
+            x, nc = jax.lax.scan(group_step, x, (gp, gc))
+        new_caches.append(nc)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, new_caches
+
+
+# ----------------------------------------------------------------------------
+# cache construction
+# ----------------------------------------------------------------------------
+def init_cache(cfg, batch: int, cache_len: int, dtype):
+    """Zeroed decode caches matching trunk_decode's expectations."""
+    caches = []
+    for (pat, n_groups) in _pattern(cfg):
+        group = {}
+        for li, kind in enumerate(pat):
+            if kind in ("global", "local", "moe"):
+                ln = cache_len
+                if kind == "local" and cfg.sliding_window:
+                    ln = min(cache_len, _window_cache_len(cfg, cache_len))
+                shape = (n_groups, batch, ln, cfg.n_kv, cfg.hd)
+                group[str(li)] = (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+            elif kind == "ssm":
+                din = cfg.ssm_expand * cfg.d_model
+                nh = din // cfg.ssm_headdim
+                group[str(li)] = (
+                    jnp.zeros((n_groups, batch, nh, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+                    jnp.zeros((n_groups, batch, cfg.ssm_conv - 1, din), dtype),
+                )
+            elif kind == "rec":
+                group[str(li)] = (
+                    jnp.zeros((n_groups, batch, cfg.d_lru), jnp.float32),
+                    jnp.zeros((n_groups, batch, cfg.ssm_conv - 1, cfg.d_lru), dtype),
+                )
+        caches.append(group)
+    return caches
+
+
+def _window_cache_len(cfg, cache_len: int) -> int:
+    # local-attention layers never need more than the window (+1 slot)
+    return min(cache_len, cfg.sliding_window)

@@ -1,0 +1,16 @@
+"""LR schedules: linear warmup + cosine decay (the standard LM recipe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps, final_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr, **_):
+    return jnp.asarray(peak_lr, jnp.float32)

@@ -1,0 +1,1 @@
+from repro.parallel import collectives, sharding  # noqa: F401

@@ -1,0 +1,29 @@
+"""Collective helpers + hierarchical reduction patterns.
+
+Most distribution in this framework is GSPMD-driven (jit + NamedSharding);
+these helpers serve the explicit shard_map paths (core/distributed.py, the
+gradient-compression pod hop) and document the intended collective schedule
+for the roofline analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psum_hierarchical(x, *, fast_axes, slow_axes=()):
+    """Reduce over fast (ICI) axes first, then slow (DCN) axes.
+
+    Inside shard_map only. With gradient compression the slow hop is applied
+    to the quantized tensor (optim/grad_compress.py).
+    """
+    for a in fast_axes:
+        x = jax.lax.psum(x, a)
+    for a in slow_axes:
+        x = jax.lax.psum(x, a)
+    return x
+
+
+def all_reduce_or(x, axis):
+    """Boolean OR all-reduce (frontier combine in distributed BFS)."""
+    return jax.lax.psum(x.astype(jnp.int32), axis) > 0

@@ -1,0 +1,294 @@
+"""GSPMD sharding rules: FSDP x TP for training, TP + batch-DP for serving.
+
+Rules are *path + shape* based with divisibility fallbacks, so one rule set
+covers all 10 assigned architectures:
+
+  train (mode="train"):  weights sharded on BOTH the d_model-ish dim (over
+    the combined data axes = ZeRO-3/FSDP) and the heads/ffn/experts dim
+    (over "model" = TP). Optimizer state inherits (shard-transparent AdamW).
+  serve (mode="serve"):  weights TP-sharded on "model", replicated over
+    data; batch and KV caches shard over data; GQA caches shard kv-heads
+    over "model" when divisible, else head_dim, else the length axis.
+
+Multi-pod meshes contribute their "pod" axis to the data axes, so FSDP and
+batch sharding span pods while TP stays intra-pod (ICI-only) — the layout
+that keeps the slow DCN hop off the per-layer critical path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(mesh, dim, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def _pick(mesh, dim, *candidates):
+    """First candidate axis (or axis tuple) that divides ``dim``; else None."""
+    for c in candidates:
+        if c is None:
+            return None
+        if _fits(mesh, dim, c):
+            return c
+    return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# ----------------------------------------------------------------------------
+# parameter specs
+# ----------------------------------------------------------------------------
+def param_spec(mesh: Mesh, mode: str, path: str, shape: tuple[int, ...]) -> P:
+    """Sharding spec for one parameter leaf.
+
+    Modes: "train" FSDP x TP | "serve" TP only | "fsdp" ZeRO over ALL axes,
+    no TP (small models: trades per-layer activation all-reduces for weight
+    all-gathers) | "replicated" no weight sharding (small models at serve:
+    zero weight collectives, batch/seq carry all parallelism).
+    """
+    if mode == "fsdp":
+        da = data_axes(mesh) + ("model",)
+        md = None
+    elif mode == "replicated":
+        da, md = None, None
+    else:
+        da = data_axes(mesh) if mode == "train" else None
+        md = "model"
+    name = path.split("/")[-1]
+    stacked = ("stacks/" in path) or path.startswith(("enc/", "dec/")) or "/enc/" in path or "/dec/" in path
+    lead = (None,) if stacked else ()
+    dims = shape[len(lead):]
+
+    def spec(*entries):
+        return P(*(lead + tuple(entries)))
+
+    if len(dims) <= 1:
+        return spec(*([None] * len(dims)))  # norms/biases/scalars: replicate
+
+    # --- embeddings -----------------------------------------------------------
+    if name == "tok":                      # [V, d]
+        return spec(_pick(mesh, dims[0], md), _pick(mesh, dims[1], da))
+    if name == "unembed":                  # [d, V]
+        return spec(_pick(mesh, dims[0], da), _pick(mesh, dims[1], md))
+
+    # --- MoE ------------------------------------------------------------------
+    if name == "router":                   # [d, E]
+        return spec(_pick(mesh, dims[0], da), None)
+    if name in ("wi", "wg", "wo") and len(dims) == 3:  # expert weights [E, a, b]
+        e = dims[0]
+        if _fits(mesh, e, md):             # expert parallelism
+            if name == "wo":               # [E, f, d]
+                return spec(md, None, _pick(mesh, dims[2], da))
+            return spec(md, _pick(mesh, dims[1], da), None)
+        # TP inside experts on the ffn dim
+        if name == "wo":                   # [E, f, d]
+            return spec(None, _pick(mesh, dims[1], md), _pick(mesh, dims[2], da))
+        return spec(None, _pick(mesh, dims[1], da), _pick(mesh, dims[2], md))
+
+    # --- attention / mlp / ssm / lru projections (2-D) --------------------------
+    if name in ("wq", "wk", "wv", "wi", "wg", "in_proj", "in_x", "in_g", "w_a", "w_i"):
+        return spec(_pick(mesh, dims[0], da), _pick(mesh, dims[1], md))
+    if name in ("wo", "out_proj", "out"):
+        return spec(_pick(mesh, dims[0], md), _pick(mesh, dims[1], da))
+    if name == "conv_w":                   # [K, din]
+        return spec(_pick(mesh, dims[0], None), _pick(mesh, dims[1], md or da))
+
+    # default 2-D: FSDP on the larger dim
+    if len(dims) == 2:
+        return spec(_pick(mesh, dims[0], da), _pick(mesh, dims[1], md))
+    return spec(*([None] * len(dims)))
+
+
+def param_specs(params_abs, mesh: Mesh, mode: str):
+    """Tree of PartitionSpecs matching an abstract (or concrete) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(mesh, mode, _path_str(path), leaf.shape),
+        params_abs,
+    )
+
+
+# ----------------------------------------------------------------------------
+# batch / cache specs
+# ----------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, name: str, shape: tuple[int, ...], scheme: str = "tp") -> P:
+    da = data_axes(mesh)
+    if scheme == "fsdp":
+        da = da + ("model",)
+    if len(shape) == 0:
+        return P()
+    b = shape[0]
+    lead = _pick(mesh, b, da)
+    rest = [None] * (len(shape) - 1)
+    if scheme == "tokpar" and len(shape) >= 2 and _fits(mesh, shape[1], "model"):
+        rest[0] = "model"     # sequence dim carries the model axis
+    return P(lead, *rest)
+
+
+def batch_specs(specs: dict, mesh: Mesh, scheme: str = "tp"):
+    return {k: batch_spec(mesh, k, v.shape, scheme) for k, v in specs.items()}
+
+
+def cache_entry_spec(mesh: Mesh, shape: tuple[int, ...], kind: str) -> P:
+    """Decode-cache sharding. Attention kv: [G, B, L, KV, hd]; ssm state:
+    [G, B, H, N, hd]; conv: [G, B, K-1, D]; rec h: [G, B, D]."""
+    da = data_axes(mesh)
+    md = "model"
+    dims = list(shape)
+    n = len(dims)
+    if n == 5 and kind == "attn":          # [G, B, L, KV, hd]
+        bspec = _pick(mesh, dims[1], da)
+        kvspec = _pick(mesh, dims[3], md)
+        if kvspec is not None:
+            return P(None, bspec, None, kvspec, None)
+        # kv heads indivisible: shard the LENGTH axis (flash-decoding style —
+        # local partial softmax + tiny psum). Sharding hd instead makes the
+        # score contraction's operand sharded on its contracting dim and XLA
+        # all-gathers the whole cache per step (observed 171 GB/step/device
+        # on internvl2 decode_32k).
+        lspec = _pick(mesh, dims[2], md)
+        if lspec is not None:
+            return P(None, bspec, lspec, None, None)
+        return P(None, bspec, None, None, _pick(mesh, dims[4], md))
+    if n == 5:                              # ssm state [G, B, H, N, hd]
+        return P(None, _pick(mesh, dims[1], da), _pick(mesh, dims[2], md), None, None)
+    if n == 4:                              # conv cache [G, B, K-1, D]
+        return P(None, _pick(mesh, dims[1], da), None, _pick(mesh, dims[3], md))
+    if n == 3:                              # rec h [G, B, D]
+        return P(None, _pick(mesh, dims[1], da), _pick(mesh, dims[2], md))
+    return P(*([None] * n))
+
+
+def cache_specs(cache_abs, mesh: Mesh):
+    """Specs for the nested cache structure produced by Model.init_cache."""
+    def leaf_spec(path, leaf):
+        # attention caches live under keys "0".."n" as (k, v) tuples of 5-D
+        # arrays with a KV-head axis; ssm states are 5-D f32 with N axis.
+        kind = "attn" if (leaf.ndim == 5 and leaf.shape[3] != leaf.shape[4] or leaf.ndim == 5) else "other"
+        # distinguish attn [G,B,L,KV,hd] from ssm [G,B,H,N,hd] by dtype: ssm
+        # states are f32, kv caches use the model dtype; fall back to attn.
+        import jax.numpy as jnp
+        if leaf.ndim == 5 and leaf.dtype == jnp.float32:
+            return cache_entry_spec(mesh, leaf.shape, "ssm")
+        return cache_entry_spec(mesh, leaf.shape, "attn" if leaf.ndim == 5 else "other")
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abs)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------------
+# activation sharding constraints (trace-time hooks used inside model code)
+# ----------------------------------------------------------------------------
+# GSPMD propagation alone replicates attention activations whenever the head
+# count does not divide the TP axis (qwen2 12H, granite 24H, whisper 8H on
+# model=16): observed 30-80 GB/device temps on the dry-run. These hooks pin
+# activation layouts with divisibility-aware fallbacks: heads over "model"
+# when divisible, else sequence over "model", else replicated.
+_ACTIVE: dict = {"mesh": None, "scheme": "tp"}
+
+
+def set_activation_mesh(mesh: Mesh | None, scheme: str = "tp"):
+    """scheme: "tp" (heads/vocab over model; default) | "tokpar" (sequence
+    over model everywhere — used with replicated/fsdp weights) | "fsdp"
+    (batch over data AND model; no model-axis tensor parallelism)."""
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["scheme"] = scheme
+
+
+def _constrain(x, spec):
+    mesh = _ACTIVE["mesh"]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_activation(x, kind: str):
+    """Pin an activation's sharding. No-op outside a dry-run/train context."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    scheme = _ACTIVE.get("scheme", "tp")
+    da = data_axes(mesh)
+    md = "model"
+    if scheme == "fsdp":            # batch carries the model axis too
+        da = da + ("model",)
+        md = None
+    seqpar = scheme == "tokpar"
+    if kind == "attn_q":            # [b, s, H, hd]
+        b, s, h, hd = x.shape
+        bs = _pick(mesh, b, da)
+        if seqpar:
+            return _constrain(x, P(bs, _pick(mesh, s, "model"), None, None))
+        if md and _fits(mesh, h, md):
+            return _constrain(x, P(bs, None, md, None))
+        if md and _fits(mesh, s, md):
+            return _constrain(x, P(bs, md, None, None))
+        return _constrain(x, P(bs, None, None, None))
+    if kind == "attn_kv":           # [b, t, H, hd] (repeated KV heads)
+        b, t, h, hd = x.shape
+        bs = _pick(mesh, b, da)
+        if not seqpar and md and _fits(mesh, h, md):
+            return _constrain(x, P(bs, None, md, None))
+        return _constrain(x, P(bs, None, None, None))
+    if kind == "hidden":            # [b, s, d]
+        b = x.shape[0]
+        bs = _pick(mesh, b, da)
+        if seqpar and x.ndim == 3:
+            return _constrain(x, P(bs, _pick(mesh, x.shape[1], "model"), None))
+        return _constrain(x, P(bs, *([None] * (x.ndim - 1))))
+    if kind == "logits":            # [b, s, V] or [b, V]
+        v = x.shape[-1]
+        b = x.shape[0]
+        bs = _pick(mesh, b, da)
+        vs = md if (md and _fits(mesh, v, md)) else None
+        if x.ndim == 3:
+            s = x.shape[1]
+            ss = "model" if ((seqpar or vs is None) and _fits(mesh, s, "model") and scheme != "fsdp") else None
+            if ss is not None:
+                vs = None
+            return _constrain(x, P(bs, ss, vs))
+        return _constrain(x, P(bs, vs))
+    if kind == "moe_dispatch":      # [E, C, d]
+        e = x.shape[0]
+        es = md if _fits(mesh, e, md) else None
+        cs = md if (es is None and _fits(mesh, x.shape[1], md)) else None
+        return _constrain(x, P(es, cs, None))
+    if kind == "moe_dispatch4":     # [G, E, C, *] — grouped dispatch buffers
+        g, e, c = x.shape[0], x.shape[1], x.shape[2]
+        gsd = _pick(mesh, g, da)
+        es = md if _fits(mesh, e, md) else None
+        cs = md if (es is None and _fits(mesh, c, md)) else None
+        return _constrain(x, P(gsd, es, cs, None))
+    if kind == "ssm_intra":         # [B, nc, Q, Q, H] — SSD intra-chunk mask
+        b, h = x.shape[0], x.shape[-1]
+        bs = _pick(mesh, b, da)
+        hs = "model" if (_ACTIVE.get("scheme") == "tp" and _fits(mesh, h, "model")) else None
+        return _constrain(x, P(bs, None, None, None, hs))
+    return x

@@ -1,0 +1,66 @@
+"""Fault tolerance primitives: heartbeats, straggler detection, restart policy.
+
+Single-process simulation of the fleet-level mechanisms (interfaces are the
+real ones; the transport is in-memory):
+
+  * Heartbeat: every worker ticks per step; a missing tick past ``timeout``
+    marks the worker suspect -> the controller triggers checkpoint-restore
+    on the survivors (elastic restore handles the smaller mesh).
+  * StragglerDetector: per-step wall-time EWMA; steps slower than
+    ``factor`` x EWMA are flagged. Mitigation at scale = redundant data
+    loading + skipping the straggler's microbatch (data-parallel redundancy);
+    here we log and expose the decision.
+  * FailurePolicy: exponential-backoff restart budget, the controller-side
+    guard against crash loops.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Heartbeat:
+    timeout_s: float = 30.0
+    last: dict = field(default_factory=dict)
+
+    def tick(self, worker: str, now: float | None = None):
+        self.last[worker] = now if now is not None else time.time()
+
+    def suspects(self, now: float | None = None) -> list[str]:
+        now = now if now is not None else time.time()
+        return [w for w, t in self.last.items() if now - t > self.timeout_s]
+
+
+@dataclass
+class StragglerDetector:
+    factor: float = 3.0
+    alpha: float = 0.1
+    ewma_s: float | None = None
+    flagged: int = 0
+
+    def observe(self, step_s: float) -> bool:
+        """Returns True if this step is a straggler."""
+        if self.ewma_s is None:
+            self.ewma_s = step_s
+            return False
+        is_straggler = step_s > self.factor * self.ewma_s
+        if is_straggler:
+            self.flagged += 1
+        else:  # stragglers don't poison the baseline
+            self.ewma_s = (1 - self.alpha) * self.ewma_s + self.alpha * step_s
+        return is_straggler
+
+
+@dataclass
+class FailurePolicy:
+    max_restarts: int = 5
+    backoff_s: float = 1.0
+    restarts: int = 0
+
+    def on_failure(self) -> float:
+        """Returns backoff seconds, raises when the budget is exhausted."""
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError("restart budget exhausted; paging a human")
+        return self.backoff_s * (2 ** (self.restarts - 1))

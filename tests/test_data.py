@@ -1,0 +1,51 @@
+"""Data pipeline tests: path-task generation validity, determinism."""
+import numpy as np
+
+from repro.data.pathgen import PathTaskGenerator
+from repro.data.pipeline import GraphPathData, SyntheticLMData
+from repro.data import tokenizer as tok
+
+
+def test_pathgen_examples_decode_and_are_consistent():
+    gen = PathTaskGenerator(n_vertices=10, capacity=32, seed=1)
+    for _ in range(5):
+        ex = gen.example()
+        assert ex[0] == tok.BOS and ex[-1] == tok.EOS
+        s = tok.decode(ex)
+        assert "?" in s
+        assert ("=>" in s) or ("=>NONE" in s)
+
+
+def test_pathgen_path_answers_are_real_paths():
+    gen = PathTaskGenerator(n_vertices=8, capacity=32, seed=2)
+    found_any = False
+    for _ in range(20):
+        ex = gen.example()
+        s = tok.decode(ex)
+        if "=>NONE" not in s and "=>" in s:
+            found_any = True
+            # verify against current edge set
+            from repro.core.graph import to_networkx_like
+            verts, edges = to_networkx_like(gen.state)
+            path_part = s.split("=>")[1]
+            nodes = [int(x) for x in path_part.split("|") if x.isdigit()]
+            assert len(nodes) >= 1
+            for a, b in zip(nodes, nodes[1:]):
+                assert (a, b) in set(edges), (nodes, edges)
+    assert found_any, "no positive examples generated in 20 draws"
+
+
+def test_synthetic_determinism():
+    d = SyntheticLMData(vocab=100, seed=5)
+    a = d.batch(3, 4, 16)
+    b = d.batch(3, 4, 16)
+    np.testing.assert_array_equal(a, b)
+    c = d.batch(4, 4, 16)
+    assert not np.array_equal(a, c)
+
+
+def test_graph_data_batch_shapes():
+    d = GraphPathData(n_vertices=8, seed=0)
+    b = d.batch(0, 2, 64)
+    assert b.shape == (2, 64) and b.dtype == np.int32
+    assert (b >= 0).all()

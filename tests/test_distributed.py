@@ -1,0 +1,103 @@
+"""Distributed (row-sharded) graph tests.
+
+The in-process test uses the 1-device degenerate mesh; the 8-device test
+re-execs in a subprocess with XLA_FLAGS so the main test process keeps its
+single-device view (per the dry-run isolation rule).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, OP_REM_E, OP_REM_V,
+    GraphOracle, make_graph, make_op_batch,
+)
+from repro.core.distributed import (
+    dapply_ops, dcollect, dcompare, dget_path_session, make_graph_mesh,
+    shard_graph,
+)
+
+
+def test_single_device_matches_oracle():
+    mesh = make_graph_mesh()
+    g = shard_graph(mesh, make_graph(32))
+    oracle = GraphOracle(32)
+    rng = np.random.default_rng(0)
+    ops_all = [(OP_ADD_V, k, -1, -1) for k in range(12)]
+    for _ in range(30):
+        u, v = rng.integers(0, 12, 2)
+        op = [OP_ADD_E, OP_REM_E, OP_REM_V][rng.integers(0, 3)] if rng.random() < 0.9 else OP_ADD_V
+        ops_all.append((op, int(u), int(v), -1))
+    for i in range(0, len(ops_all), 7):
+        chunk = ops_all[i:i + 7]
+        g, res = dapply_ops(mesh, g, make_op_batch(chunk))
+        assert [int(x) for x in np.asarray(res)] == oracle.apply_batch(chunk)
+
+
+def test_single_device_getpath():
+    mesh = make_graph_mesh()
+    g = shard_graph(mesh, make_graph(32))
+    ops = [(OP_ADD_V, k) for k in range(6)] + [(OP_ADD_E, k, k + 1) for k in range(5)]
+    g, _ = dapply_ops(mesh, g, make_op_batch(ops))
+    ok, n, keys, rounds = dget_path_session(mesh, lambda: g, 0, 5)
+    assert ok and keys == [0, 1, 2, 3, 4, 5] and rounds == 2
+
+
+def test_double_collect_detects_concurrent_mutation():
+    mesh = make_graph_mesh()
+    g = shard_graph(mesh, make_graph(32))
+    ops = [(OP_ADD_V, k) for k in range(4)] + [(OP_ADD_E, 0, 1), (OP_ADD_E, 1, 2)]
+    g, _ = dapply_ops(mesh, g, make_op_batch(ops))
+    c1 = dcollect(mesh, g, 0, 2)
+    g2, _ = dapply_ops(mesh, g, make_op_batch([(OP_REM_E, 1, 2)]))
+    g3, _ = dapply_ops(mesh, g2, make_op_batch([(OP_ADD_E, 1, 2)]))
+    c2 = dcollect(mesh, g3, 0, 2)  # same edge set, mutated ecnt
+    assert not bool(dcompare(mesh, c1, c2))
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, random
+    import jax
+    from repro.core import *
+    from repro.core.distributed import *
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_graph_mesh()
+    g = shard_graph(mesh, make_graph(64))
+    random.seed(0)
+    oracle = GraphOracle(64)
+    ops = [(OP_ADD_V, k, -1, -1) for k in range(24)]
+    ops += [(random.choice([OP_ADD_E, OP_ADD_E, OP_REM_E]),
+             random.randrange(24), random.randrange(24), -1) for _ in range(60)]
+    ops += [(OP_REM_V, 3, -1, -1), (OP_ADD_E, 2, 3, -1)]
+    for i in range(0, len(ops), 10):
+        chunk = ops[i:i+10]
+        g, res = dapply_ops(mesh, g, make_op_batch(chunk))
+        got = [int(x) for x in np.asarray(res)]
+        want = oracle.apply_batch(chunk)
+        assert got == want, (got, want)
+    hits = 0
+    for (s, d) in [(0, 13), (1, 20), (5, 6), (9, 2)]:
+        ok, n, keys, rounds = dget_path_session(mesh, lambda: g, s, d)
+        assert ok == oracle.reachable(s, d), (s, d)
+        if ok:
+            assert oracle.is_valid_path(keys, s, d)
+            hits += 1
+    print("SUBPROCESS_OK hits=", hits)
+""")
+
+
+@pytest.mark.slow
+def test_eight_shard_graph_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SUBPROCESS_OK" in r.stdout

@@ -1,0 +1,70 @@
+"""Extensions: undirected mode (paper footnote a) + wait-free neighborhood
+queries (the traversal-return missing from Kallimanis & Kanellou 2015)."""
+import numpy as np
+
+from repro.core import (
+    R_EDGE_ADDED, R_EDGE_PRESENT, R_EDGE_REMOVED, R_VERTEX_NOT_PRESENT,
+    add_edge, add_edge_undirected, add_vertex, collect, compare_collects,
+    degree, get_path, make_graph, neighbors, remove_edge_undirected,
+)
+
+
+def build(n=6):
+    g = make_graph(32)
+    for k in range(n):
+        g, _ = add_vertex(g, k)
+    return g
+
+
+def test_undirected_add_creates_both_directions():
+    g = build()
+    g, r = add_edge_undirected(g, 1, 4)
+    assert int(r) == R_EDGE_ADDED
+    assert bool(get_path(g, 1, 4).found) and bool(get_path(g, 4, 1).found)
+    g, r = add_edge_undirected(g, 1, 4)
+    assert int(r) == R_EDGE_PRESENT
+    g, r = remove_edge_undirected(g, 4, 1)     # removable from either end
+    assert int(r) == R_EDGE_REMOVED
+    assert not bool(get_path(g, 1, 4).found)
+    assert not bool(get_path(g, 4, 1).found)
+
+
+def test_undirected_bumps_both_endpoint_versions():
+    """Double collects through EITHER endpoint must observe the mutation."""
+    g = build()
+    g, _ = add_edge(g, 0, 1)
+    c_from_1 = collect(g, 1, 5)                 # expands row 1
+    g2, _ = add_edge_undirected(g, 2, 1)        # touches rows 2 AND 1
+    g3, _ = remove_edge_undirected(g2, 2, 1)    # restore the edge set
+    c2 = collect(g3, 1, 5)
+    assert not bool(compare_collects(c_from_1, c2))
+
+
+def test_undirected_missing_vertex():
+    g = build()
+    g, r = add_edge_undirected(g, 0, 99)
+    assert int(r) == R_VERTEX_NOT_PRESENT
+
+
+def test_neighbors_and_degree():
+    g = build()
+    for dst in (1, 3, 5):
+        g, _ = add_edge(g, 0, dst)
+    g, _ = add_edge(g, 2, 0)
+    n, keys = neighbors(g, 0)
+    assert int(n) == 3
+    assert sorted(int(k) for k in np.asarray(keys)[:3]) == [1, 3, 5]
+    out_d, in_d = degree(g, 0)
+    assert (int(out_d), int(in_d)) == (3, 1)
+    out_d, in_d = degree(g, 42)
+    assert (int(out_d), int(in_d)) == (-1, -1)
+
+
+def test_neighbors_excludes_dead_vertices():
+    from repro.core import remove_vertex
+    g = build()
+    g, _ = add_edge(g, 0, 1)
+    g, _ = add_edge(g, 0, 2)
+    g, _ = remove_vertex(g, 1)                  # lazy ENode: row bit remains
+    n, keys = neighbors(g, 0)
+    assert int(n) == 1 and int(keys[0]) == 2    # marked ptv filtered out

@@ -1,0 +1,78 @@
+"""Optimizer + schedule + gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, grad_compress, schedule
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - jnp.array([1.0, 2.0])) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt = adamw.update(params, g, opt, lr=5e-2, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 2.0], atol=1e-2)
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.ones(4)}
+    opt = adamw.init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    p2, _ = adamw.update(params, huge, opt, lr=1e-3, grad_clip=1.0, weight_decay=0.0)
+    assert np.isfinite(np.asarray(p2["w"])).all()
+    assert float(jnp.max(jnp.abs(p2["w"] - params["w"]))) < 0.1
+
+
+def test_schedule_warmup_cosine():
+    lr0 = schedule.warmup_cosine(0, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lr10 = schedule.warmup_cosine(10, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lr100 = schedule.warmup_cosine(100, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr0) == 0.0
+    assert abs(float(lr10) - 1.0) < 1e-6
+    assert float(lr100) <= 0.11
+
+
+def test_grad_compress_error_feedback():
+    """Quantize-dequantize with EF: the *accumulated* compressed sum tracks
+    the true gradient sum (the EF invariant), even when single-step error
+    is large."""
+    params = {"w": jnp.zeros(64)}
+    ef = grad_compress.init(params)
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(64)
+    comp_sum = np.zeros(64)
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=64) * 0.1, jnp.float32)}
+        true_sum += np.asarray(g["w"])
+        dq, ef = grad_compress.compress_decompress(g, ef)
+        comp_sum += np.asarray(dq["w"])
+    resid = np.asarray(ef.residual["w"])
+    np.testing.assert_allclose(comp_sum + resid, true_sum, atol=1e-3)
+
+
+def test_microbatch_equals_full_batch():
+    """Grad accumulation over M microbatches == single-batch gradients."""
+    from repro.configs import get_config
+    from repro.launch import steps as steps_mod
+    from repro.models.model import build_model
+
+    cfg = get_config("olmo-1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": toks}
+
+    s1 = steps_mod.make_train_step(model, lr=1e-2, microbatches=1, remat=False)
+    s2 = steps_mod.make_train_step(model, lr=1e-2, microbatches=2, remat=False)
+    o1 = steps_mod.init_opt_state(params)
+    o2 = steps_mod.init_opt_state(params)
+    p1, _, m1 = jax.jit(s1)(params, o1, batch)
+    p2, _, m2 = jax.jit(s2)(params, o2, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-3)

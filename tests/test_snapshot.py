@@ -1,0 +1,130 @@
+"""Double-collect GetPath tests: paper §3.5 incl. the adversary argument."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, OP_NOP, OP_REM_E,
+    GraphOracle, add_edge, add_vertex, collect, compare_collects, get_path,
+    get_path_session, interleaved_getpath, make_graph, make_op_batch,
+    remove_edge,
+)
+
+
+def chain(n, cap=32):
+    g = make_graph(cap)
+    for k in range(n):
+        g, _ = add_vertex(g, k)
+    for k in range(n - 1):
+        g, _ = add_edge(g, k, k + 1)
+    return g
+
+
+def test_get_path_static():
+    g = chain(6)
+    pr = get_path(g, 0, 5)
+    assert bool(pr.found) and int(pr.length) == 6
+    assert [int(x) for x in np.asarray(pr.keys)[:6]] == [0, 1, 2, 3, 4, 5]
+    assert not bool(get_path(g, 5, 0).found)          # directed
+    assert not bool(get_path(g, 0, 99).found)         # absent vertex
+
+
+def test_compare_collects_detects_mutation():
+    g = chain(4)
+    c1 = collect(g, 0, 3)
+    g2, _ = add_edge(g, 0, 2)                          # touched row mutated
+    c2 = collect(g2, 0, 3)
+    assert not bool(compare_collects(c1, c2))
+    c3 = collect(g2, 0, 3)
+    assert bool(compare_collects(c2, c3))              # quiescent -> match
+
+
+def test_adversary_mutate_and_restore_is_caught():
+    """Paper §3.5: add edge (vi, l), remove it between collects. The edge
+    SET is identical at both collects, but ecnt must expose the mutation."""
+    g = chain(3)                                        # 0 -> 1 -> 2
+    c1 = collect(g, 0, 2)
+    g2, _ = remove_edge(g, 1, 2)                        # break the path
+    g3, _ = add_edge(g2, 1, 2)                          # restore it
+    # adjacency is now bit-identical to g
+    np.testing.assert_array_equal(np.asarray(g.adj), np.asarray(g3.adj))
+    c2 = collect(g3, 0, 2)
+    assert bool(c1.found) and bool(c2.found)
+    assert not bool(compare_collects(c1, c2)), \
+        "mutate-and-restore adversary must invalidate the double collect"
+
+
+def test_session_completes_under_quiescence():
+    g = chain(5)
+    pr = get_path_session(lambda: g, 0, 4)
+    assert bool(pr.found) and int(pr.rounds) == 2       # one double collect
+
+
+def test_session_retries_until_mutations_stop():
+    g = chain(5)
+    states = [g]
+    # a mutator that toggles an edge for 3 fetches, then goes quiet
+    toggles = [(OP_REM_E, 2, 3), (OP_ADD_E, 2, 3), (OP_REM_E, 0, 4)]
+
+    calls = {"n": 0}
+
+    def fetch():
+        from repro.core import apply_ops_fast
+        i = calls["n"]
+        calls["n"] += 1
+        if i > 0 and i <= len(toggles):
+            batch = make_op_batch([toggles[i - 1]])
+            states.append(apply_ops_fast(states[-1], batch)[0])
+        return states[-1]
+
+    pr = get_path_session(fetch, 0, 4, max_rounds=32)
+    assert bool(pr.found)
+    assert int(pr.rounds) >= 3                          # forced restarts
+
+
+def test_interleaved_getpath_in_program():
+    """One jitted program: mutation batches interleave with the query."""
+    g = chain(4, cap=16)
+    lanes = 4
+    # rounds: 2 active mutation rounds (toggling an off-path edge), then quiet
+    rounds = [
+        [(OP_ADD_E, 3, 0)],
+        [(OP_REM_E, 3, 0)],
+        [(OP_NOP,)],
+        [(OP_NOP,)],
+        [(OP_NOP,)],
+    ]
+    batches = [make_op_batch(r, lanes) for r in rounds]
+    batch_t = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    state, pr, mut_res = interleaved_getpath(g, batch_t, 0, 3)
+    assert bool(pr.found)
+    assert [int(x) for x in np.asarray(pr.keys)[: int(pr.length)]] == [0, 1, 2, 3]
+    assert int(pr.rounds) >= 2
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from([OP_ADD_E, OP_REM_E]),
+                          st.integers(0, 5), st.integers(0, 5)),
+                min_size=0, max_size=10),
+       st.integers(0, 5), st.integers(0, 5))
+def test_getpath_matches_oracle_reachability(edge_ops, src, dst):
+    """Static GetPath found/path-validity vs the oracle (property)."""
+    g = make_graph(16)
+    oracle = GraphOracle(16)
+    for k in range(6):
+        g, _ = add_vertex(g, k)
+        oracle.add_vertex(k)
+    for (op, u, v) in edge_ops:
+        batch = make_op_batch([(op, u, v)])
+        from repro.core import apply_ops
+        g, _ = apply_ops(g, batch)
+        oracle.apply(op, u, v)
+    pr = get_path(g, src, dst)
+    assert bool(pr.found) == oracle.reachable(src, dst)
+    if bool(pr.found):
+        keys = [int(x) for x in np.asarray(pr.keys)[: int(pr.length)]]
+        assert oracle.is_valid_path(keys, src, dst)
+        # BFS gives a shortest path
+        assert len(keys) == oracle.shortest_path_len(src, dst)
