@@ -1,0 +1,94 @@
+"""Beyond-paper figure: batched reachability — fused engine vs vmap, Q sweep.
+
+The fused multi-source BFS (core.bfs.multi_bfs, DESIGN.md §7) advances Q
+frontiers with ONE [Q,V] @ [V,V] frontier-matrix product per superstep; the
+vmap reference pays Q independent [V]·[V,V] mat-vecs. This benchmark sweeps
+Q in {1, 4, 16, 64} and reports wall time per full query batch plus the
+derived *query-supersteps per second* (sum over queries of per-query BFS
+steps / wall), the unit in which the fused engine's advantage is
+architecture-meaningful: it is the rate at which per-query frontier
+expansions retire, and the fused engine retires up to Q of them per
+adjacency stream.
+
+CPU-container numbers establish the SCALING SHAPE (fused cost roughly flat
+in Q until the matmul saturates, vmap cost linear in Q); on a real TPU the
+same sweep exercises the MXU via kernels/bfs_multi_step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfs, multi_bfs
+from benchmarks.fig9_throughput import seed_graph
+
+QS = (1, 4, 16, 64)
+
+
+def _vmap_multi(state, srcs, dsts, backend="jnp"):
+    """The reference path: Q independent single-query BFS under vmap."""
+    return jax.vmap(lambda s, d: bfs(state, s, d, backend=backend))(srcs, dsts)
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run_sweep(*, backend="jnp", reps=5, seed=3, quick=False):
+    g, _, nv = seed_graph()
+    rng = np.random.default_rng(seed)
+    rows = []
+    qs = QS[:2] if quick else QS
+    for q in qs:
+        keys = rng.integers(0, nv, (q, 2))
+        # keys are dense 0..nv-1 in seed_graph insertion order == slot order
+        srcs = jnp.asarray(keys[:, 0], jnp.int32)
+        dsts = jnp.asarray(keys[:, 1], jnp.int32)
+
+        fused_fn = jax.jit(lambda s, d: multi_bfs(g, s, d, backend=backend))
+        vmap_fn = jax.jit(lambda s, d: _vmap_multi(g, s, d, backend=backend))
+        t_fused, m = _time(fused_fn, srcs, dsts, reps=reps)
+        t_vmap, vm = _time(vmap_fn, srcs, dsts, reps=reps)
+        steps_total = int(jnp.sum(m.steps))
+        assert steps_total == int(jnp.sum(vm.steps)), "engines disagree on work"
+        rows.append({
+            "q": q,
+            "fused_s": t_fused,
+            "vmap_s": t_vmap,
+            "steps": steps_total,
+            "fused_steps_per_s": steps_total / t_fused,
+            "vmap_steps_per_s": steps_total / t_vmap,
+            "speedup": t_vmap / t_fused,
+        })
+    return rows
+
+
+def main(quick=False):
+    out = []
+    print(f'{"Q":>4s} {"engine":>6s} {"ms/batch":>10s} {"qsteps/s":>12s} '
+          f'{"speedup":>8s}')
+    for backend in ("jnp",):
+        for r in run_sweep(backend=backend, quick=quick):
+            print(f'{r["q"]:4d} {"fused":>6s} {r["fused_s"]*1e3:10.2f} '
+                  f'{r["fused_steps_per_s"]:12.0f} {r["speedup"]:7.2f}x')
+            print(f'{r["q"]:4d} {"vmap":>6s} {r["vmap_s"]*1e3:10.2f} '
+                  f'{r["vmap_steps_per_s"]:12.0f} {"":>8s}')
+            out.append(f'multiquery/fused/q{r["q"]},{r["fused_s"]*1e6:.1f},'
+                       f'qsteps_per_s={r["fused_steps_per_s"]:.0f}')
+            out.append(f'multiquery/vmap/q{r["q"]},{r["vmap_s"]*1e6:.1f},'
+                       f'qsteps_per_s={r["vmap_steps_per_s"]:.0f};'
+                       f'fused_speedup={r["speedup"]:.2f}')
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,12 @@ def main() -> None:
     csv += fig10_getpath.main(quick=args.quick)
 
     print("\n" + "=" * 72)
+    print("Multi-query analogue — fused multi-source BFS vs vmap, Q sweep")
+    print("=" * 72)
+    from benchmarks import fig_multiquery
+    csv += fig_multiquery.main(quick=args.quick)
+
+    print("\n" + "=" * 72)
     print("BFS kernel — structural intensity + jnp-path wall time")
     print("=" * 72)
     from benchmarks import kernel_bench

@@ -11,8 +11,8 @@ import numpy as np
 from repro.core import (
     OP_ADD_E, OP_ADD_V, OP_CON_E, OP_REM_E,
     RESULT_NAMES, add_edge, apply_ops_fast, collect, compare_collects,
-    contains_vertex, get_path, get_path_session, make_graph, make_op_batch,
-    remove_edge,
+    contains_vertex, get_path, get_path_session, get_paths_session,
+    make_graph, make_op_batch, remove_edge,
 )
 
 # -- build a graph with one vectorized batch of 'concurrent' ops -------------
@@ -62,3 +62,9 @@ pr = get_path_session(fetch, 0, 7)
 print(f"session path 0->7 after {int(pr.rounds)} collects "
       f"(>2 means the query retried past concurrent mutations):",
       list(np.asarray(pr.keys)[: int(pr.length)]))
+
+# -- batched reachability: Q queries under ONE shared double collect ------------
+# the fused multi-source BFS engine advances all frontiers with a single
+# [Q,V] @ [V,V] product per superstep (DESIGN.md §7)
+out, rounds = get_paths_session(lambda: state["g"], [(0, 7), (1, 3), (6, 0)])
+print(f"batched paths after {rounds} shared collects:", out)

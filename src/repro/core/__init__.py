@@ -3,7 +3,7 @@
 Public surface:
   GraphState, OpBatch, make_graph, grow, make_op_batch   (graph.py)
   apply_ops, apply_ops_fast, compact, add_vertex, ...     (ops.py)
-  bfs, extract_path                                       (bfs.py)
+  bfs, multi_bfs, extract_path                            (bfs.py)
   collect, compare_collects, get_path, get_path_session,
   interleaved_getpath                                     (snapshot.py)
   ShardedGraph / distributed BFS                          (distributed.py)
@@ -55,7 +55,14 @@ from repro.core.ops import (  # noqa: F401
     remove_edge_undirected,
     remove_vertex,
 )
-from repro.core.bfs import bfs, extract_path, reachable_count  # noqa: F401
+from repro.core.bfs import (  # noqa: F401
+    BFSResult,
+    MultiBFSResult,
+    bfs,
+    extract_path,
+    multi_bfs,
+    reachable_count,
+)
 from repro.core.snapshot import (  # noqa: F401
     Collect,
     PathResult,

@@ -132,3 +132,116 @@ def reachable_count(state: GraphState, src_slot, backend: str = "jnp") -> jax.Ar
     """|{w : src ->* w}| — exercised by benchmarks."""
     r = bfs(state, src_slot, jnp.int32(-1), backend=backend)
     return jnp.sum((r.dist >= 0).astype(jnp.int32))
+
+
+# ----------------------------------------------------------------------------
+# Fused multi-source BFS — Q frontiers advanced by ONE [Q,V] @ [V,V] matmul
+# per superstep (DESIGN.md §7)
+# ----------------------------------------------------------------------------
+def multi_bfs_step_jnp(frontiers, adj, alive, visited):
+    """Reference fused expansion for Q frontiers at once.
+
+    frontiers: bool[Q, V], visited: bool[Q, V], alive: bool[V].
+    Returns (new bool[Q, V], parent int32[Q, V]) with
+    parent[q, j] = smallest i with frontiers[q, i] and an edge i->j (else -1)
+    — identical per-query semantics to ``bfs_step_jnp``, but the frontier
+    expansion is one real [Q,V]x[V,V] matmul instead of Q mat-vecs.
+    """
+    f = frontiers.astype(jnp.float32)
+    reach = (f @ adj.astype(jnp.float32)) > 0
+    new = reach & alive[None, :] & ~visited
+    v = adj.shape[1]
+    idx = jnp.arange(v, dtype=jnp.int32)
+    # per-query masked min over source rows, laid out src-major
+    # [V(src), Q, V(dst)] so the reduction runs over the leading axis
+    # (contiguous inner [Q, V] panels — measurably faster than the
+    # query-major layout on CPU/VPU)
+    cand = jnp.where(frontiers.T[:, :, None] & (adj[:, None, :] > 0),
+                     idx[:, None, None], INT32_MAX)
+    parent = jnp.min(cand, axis=0)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new, parent
+
+
+def _get_multi_step_fn(backend: str):
+    if backend == "jnp":
+        return multi_bfs_step_jnp
+    if backend == "pallas":
+        from repro.kernels.bfs_multi_step.ops import multi_bfs_step
+
+        return multi_bfs_step
+    raise ValueError(f"unknown multi-bfs backend {backend!r}")
+
+
+class MultiBFSResult(NamedTuple):
+    found: jax.Array     # bool[Q]    — dst reached (per query)
+    parent: jax.Array    # int32[Q,V] — per-query BFS tree (-1 root/unvisited)
+    dist: jax.Array      # int32[Q,V] — per-query BFS depth (-1 unvisited)
+    expanded: jax.Array  # bool[Q,V]  — rows whose adjacency this query read
+    steps: jax.Array     # int32[Q]   — per-query frontier expansions
+    supersteps: jax.Array  # int32    — shared loop iterations actually run
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def multi_bfs(state: GraphState, src_slots, dst_slots,
+              backend: str = "jnp") -> MultiBFSResult:
+    """Fused BFS from Q sources with per-query early exit (DESIGN.md §7).
+
+    Per-query results are bit-identical to ``jax.vmap(bfs)`` over the same
+    (src, dst) pairs — tests/test_multi_bfs.py asserts this — but the cost
+    model is different: ONE shared ``while_loop`` whose body performs a
+    single [Q,V] @ [V,V] frontier-matrix product, so the adjacency matrix is
+    streamed from HBM once per superstep instead of once per query per
+    superstep. Queries that have already reached their destination (or
+    exhausted their frontier) are masked to an empty frontier and stop
+    contributing work; the loop exits when every query is done.
+
+    ``dst_slots[q] < 0`` explores query q's full reachable set.
+    """
+    src_slots = jnp.asarray(src_slots, jnp.int32)
+    dst_slots = jnp.asarray(dst_slots, jnp.int32)
+    q = src_slots.shape[0]
+    v = state.capacity
+    alive = state.valive
+    src_ok = (src_slots >= 0) & alive[jnp.maximum(src_slots, 0)]
+    s = jnp.maximum(src_slots, 0)
+
+    frontier0 = jnp.zeros((q, v), jnp.bool_).at[jnp.arange(q), s].set(src_ok)
+    visited0 = frontier0
+    parent0 = jnp.full((q, v), -1, jnp.int32)
+    dist0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
+    expanded0 = jnp.zeros((q, v), jnp.bool_)
+    steps0 = jnp.zeros((q,), jnp.int32)
+    step_fn = _get_multi_step_fn(backend)
+
+    def _active(frontiers, visited, step):
+        # mirrors the single-query cond, evaluated per query
+        hit_dst = (dst_slots >= 0) & visited[jnp.arange(q), jnp.maximum(dst_slots, 0)]
+        return jnp.any(frontiers, axis=1) & ~hit_dst & (step < v)
+
+    def cond(c):
+        frontiers, visited, parent, dist, expanded, steps, step = c
+        return jnp.any(_active(frontiers, visited, step))
+
+    def body(c):
+        frontiers, visited, parent, dist, expanded, steps, step = c
+        act = _active(frontiers, visited, step)
+        # early-exit masking: finished queries expose an all-empty frontier,
+        # so their tiles are skipped by the kernel's @pl.when fast path and
+        # their parent/dist/expanded stay frozen exactly as if their own
+        # single-query loop had terminated.
+        f = frontiers & act[:, None]
+        expanded = expanded | f
+        new, par = step_fn(f, state.adj, alive, visited)
+        parent = jnp.where(new, par, parent)
+        dist = jnp.where(new, step + 1, dist)
+        visited = visited | new
+        steps = steps + act.astype(jnp.int32)
+        return new, visited, parent, dist, expanded, steps, step + 1
+
+    frontiers, visited, parent, dist, expanded, steps, supersteps = jax.lax.while_loop(
+        cond, body,
+        (frontier0, visited0, parent0, dist0, expanded0, steps0, jnp.int32(0)),
+    )
+    found = (dst_slots >= 0) & visited[jnp.arange(q), jnp.maximum(dst_slots, 0)] & src_ok
+    return MultiBFSResult(found, parent, dist, expanded, steps, supersteps)

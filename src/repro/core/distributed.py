@@ -31,8 +31,22 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # jax 0.4.x keeps it in jax.experimental
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# "skip the replication/varying-manual-axes check" kwarg, renamed across jax
+# versions (0.4.x: check_rep, >= 0.6: check_vma)
+import inspect as _inspect
+
+_HAS_VMA = "check_vma" in _inspect.signature(shard_map).parameters
+_SM_NOCHECK = {"check_vma": False} if _HAS_VMA else {"check_rep": False}
+# 0.4.x's check_rep cannot infer replication through fori_loop/switch at all;
+# >= 0.6's VMA checker can and should stay ON where it passes (dapply_ops)
+_SM_NOCHECK_LEGACY_ONLY = {} if _HAS_VMA else {"check_rep": False}
 
 from repro.core.graph import (
     EMPTY_KEY,
@@ -77,14 +91,27 @@ def _global_find(vkey_l, valive_l, keys, row0):
 
 
 def _pvary(x):
-    """Mark a shard-replicated value as device-varying (no-op if it already is)."""
-    vma = getattr(jax.typeof(x), "vma", frozenset())
-    return x if AXIS in vma else jax.lax.pvary(x, (AXIS,))
+    """Mark a shard-replicated value as device-varying (no-op if it already is).
+
+    jax < 0.6 has neither ``jax.typeof`` nor ``jax.lax.pvary`` (and no varying
+    manual-axes check that would need them) — identity there.
+    """
+    pvary = getattr(jax.lax, "pvary", None)
+    typeof = getattr(jax, "typeof", None)
+    if pvary is None or typeof is None:
+        return x
+    vma = getattr(typeof(x), "vma", frozenset())
+    return x if AXIS in vma else pvary(x, (AXIS,))
 
 
-def _row_block_info(nrows_total):
+def _row_block_info(nrows_total, size):
+    """(shard id, axis size, rows per shard, first owned row).
+
+    ``size`` is the STATIC mesh-axis extent (callers pass mesh.shape[AXIS]):
+    rows-per-shard feeds dynamic_slice sizes, which must be static, and
+    jax 0.4.x has no ``jax.lax.axis_size`` to query it inside shard_map.
+    """
     s = jax.lax.axis_index(AXIS)
-    size = jax.lax.axis_size(AXIS)
     per = nrows_total // size
     return s, size, per, s * per
 
@@ -109,10 +136,10 @@ def dbfs(mesh: Mesh, state: GraphState, src_slot, dst_slot):
         out_specs=(P(), P(), P(), P(), P()),
         # Outputs are value-replicated (every shard computes the full combined
         # frontier/parents), which the VMA analysis cannot infer past pvary.
-        check_vma=False,
+        **_SM_NOCHECK,
     )
     def run(vkey_l, valive_l, adj_l, src, dst):
-        _, _, per, row0 = _row_block_info(v)
+        _, _, per, row0 = _row_block_info(v, mesh.shape[AXIS])
         alive_g = jax.lax.all_gather(valive_l, AXIS, tiled=True)  # bool[V]
         src_ok = (src >= 0) & alive_g[jnp.maximum(src, 0)]
         s = jnp.maximum(src, 0)
@@ -182,9 +209,13 @@ def dapply_ops(mesh: Mesh, state: GraphState, ops: OpBatch):
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS, None),
                   P(), P(), P(), P()),
         out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS, None), P()),
+        # jax 0.4.x's replication checker cannot infer through the
+        # fori_loop/switch lattice here (newer jax's VMA checker can, and
+        # stays enabled); the outputs are correct by the psum/pmax combines.
+        **_SM_NOCHECK_LEGACY_ONLY,
     )
     def run(vkey_l, valive_l, vver_l, ecnt_l, adj_l, opc, k1, k2, expect):
-        sid, ssize, per, row0 = _row_block_info(v)
+        sid, ssize, per, row0 = _row_block_info(v, mesh.shape[AXIS])
 
         def body(i, carry):
             vkey_l, valive_l, vver_l, ecnt_l, adj_l, res = carry
@@ -287,7 +318,7 @@ def dcollect(mesh: Mesh, state: GraphState, k, l) -> DCollect:
         out_specs=(P(), P()),
     )
     def lookup(vkey_l, valive_l, ks):
-        _, _, per, row0 = _row_block_info(state.capacity)
+        _, _, per, row0 = _row_block_info(state.capacity, mesh.shape[AXIS])
         s = _global_find(vkey_l, valive_l, ks, row0)
         return s[0], s[1]
 
@@ -310,7 +341,7 @@ def dcompare(mesh: Mesh, a: DCollect, b: DCollect) -> jax.Array:
         out_specs=P(),
     )
     def vers_mismatch(ea, eb, va, vb, ta, tb):
-        _, _, per, row0 = _row_block_info(v)
+        _, _, per, row0 = _row_block_info(v, mesh.shape[AXIS])
         t_a = jax.lax.dynamic_slice(ta, (row0,), (per,))
         t_b = jax.lax.dynamic_slice(tb, (row0,), (per,))
         bad = (t_a != t_b) | (t_a & ((ea != eb) | (va != vb)))

@@ -14,11 +14,14 @@ imply byte-identical adjacency rows read, which implies identical trees; and
 the §3.5 adversary (add edge, remove it between collects) necessarily bumps a
 source-row ecnt it shares with the dependency set, so it is always caught.
 
-Three surfaces:
+Four surfaces:
   * ``collect`` / ``compare_collects`` / ``get_path``   — pure building blocks
   * ``get_path_session``      — host-level protocol against a live mutable
     state reference (the true concurrent setting; obstruction-free: completes
     as soon as one round-trip sees no effective mutation)
+  * ``collect_batch`` / ``get_paths_session`` — Q queries under ONE shared
+    double collect, traversed by the fused multi-source BFS engine
+    (DESIGN.md §7; ``engine="vmap"`` keeps the per-query reference path)
   * ``interleaved_getpath``   — a single jitted program interleaving mutation
     batches with a pending query, demonstrating the protocol *inside* one
     device program (used by tests/benchmarks to replay paper Fig. 10).
@@ -32,8 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ops as gops
-from repro.core.bfs import bfs, extract_path
-from repro.core.graph import GraphState, OpBatch, find_slot, version_vector
+from repro.core.bfs import bfs, extract_path, multi_bfs
+from repro.core.graph import GraphState, OpBatch, find_slot, find_slots, version_vector
 
 
 class Collect(NamedTuple):
@@ -99,17 +102,44 @@ def get_path(state: GraphState, k, l, backend: str = "jnp") -> PathResult:
 # ----------------------------------------------------------------------------
 # Beyond-paper: batched multi-query GetPath under ONE shared double collect
 # ----------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("backend",))
-def collect_batch(state: GraphState, ks, ls, backend: str = "jnp"):
+@functools.partial(jax.jit, static_argnames=("backend", "engine"))
+def collect_batch(state: GraphState, ks, ls, backend: str = "jnp",
+                  engine: str = "fused"):
     """Vectorized TreeCollect for Q query pairs. Returns a Collect whose
     leading axis is the query index; the dependency set / versions are the
     UNION over queries, so one version comparison validates all of them
     against the same pair of states — every answer linearizes at the same
     point (a consistent multi-query snapshot, strictly stronger than Q
-    independent GetPaths and Q x cheaper in validation traffic)."""
-    cs = jax.vmap(lambda k, l: collect(state, k, l, backend=backend))(
-        jnp.asarray(ks, jnp.int32), jnp.asarray(ls, jnp.int32))
-    return cs
+    independent GetPaths and Q x cheaper in validation traffic).
+
+    ``engine`` picks the traversal (DESIGN.md §7):
+      "fused" — ONE multi_bfs whose supersteps advance all Q frontiers with
+                a single [Q,V] @ [V,V] frontier-matrix product (the
+                adjacency is streamed once per superstep, not once per
+                query). Production path.
+      "vmap"  — Q independent single-query collects under jax.vmap. Kept as
+                the cross-check reference: per-query results are identical
+                by construction of multi_bfs (tests assert it).
+    """
+    ks = jnp.asarray(ks, jnp.int32)
+    ls = jnp.asarray(ls, jnp.int32)
+    if engine == "vmap":
+        return jax.vmap(lambda k, l: collect(state, k, l, backend=backend))(ks, ls)
+    if engine != "fused":
+        raise ValueError(f"unknown collect_batch engine {engine!r}")
+    sk = find_slots(state, ks)
+    sl = find_slots(state, ls)
+    present = (sk >= 0) & (sl >= 0)
+    res = multi_bfs(state, sk, sl, backend=backend)
+    q = ks.shape[0]
+    qi = jnp.arange(q)
+    touched = res.expanded
+    tk = jnp.maximum(sk, 0)
+    tl = jnp.maximum(sl, 0)
+    touched = touched.at[qi, tk].set(touched[qi, tk] | (sk >= 0))
+    touched = touched.at[qi, tl].set(touched[qi, tl] | (sl >= 0))
+    vv = jnp.where(touched[:, :, None], version_vector(state)[None], jnp.int32(0))
+    return Collect(res.found & present, res.parent, touched, vv, sk, sl, present)
 
 
 @jax.jit
@@ -120,17 +150,22 @@ def compare_collect_batches(a, b) -> jax.Array:
 
 
 def get_paths_session(fetch_state, pairs, *, max_rounds: int | None = None,
-                      backend: str = "jnp"):
+                      backend: str = "jnp", engine: str = "fused"):
     """Multi-query obstruction-free GetPath: the double-collect loop runs
-    ONCE for the whole batch. Returns a list of (found, keys) per pair."""
+    ONCE for the whole batch. Returns a list of (found, keys) per pair.
+
+    ``engine="fused"`` (default) drives every round through the fused
+    multi-source BFS (one adjacency stream per superstep, DESIGN.md §7);
+    ``engine="vmap"`` replays the reference per-query path.
+    """
     ks = [p[0] for p in pairs]
     ls = [p[1] for p in pairs]
     state = fetch_state()
-    prev = collect_batch(state, ks, ls, backend=backend)
+    prev = collect_batch(state, ks, ls, backend=backend, engine=engine)
     rounds = 1
     while True:
         state = fetch_state()
-        cur = collect_batch(state, ks, ls, backend=backend)
+        cur = collect_batch(state, ks, ls, backend=backend, engine=engine)
         rounds += 1
         if bool(compare_collect_batches(prev, cur)):
             out = []

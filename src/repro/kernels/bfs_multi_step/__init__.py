@@ -1,0 +1,2 @@
+from repro.kernels.bfs_multi_step.ops import multi_bfs_step  # noqa: F401
+from repro.kernels.bfs_multi_step.ref import multi_bfs_step_ref  # noqa: F401

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: ONE fused superstep for Q concurrent BFS frontiers.
+
+The multi-query analogue of kernels/bfs_step (DESIGN.md §7). A batch of Q
+reachability queries advances all frontiers with a single frontier-matrix
+product per (row, col) adjacency tile:
+
+    reach[q, c-tile] |= any_r ( frontier[q, r-tile] @ adj[r-tile, c-tile] )
+
+The frontier block carries the WHOLE padded query slab [TQ, TR] (TQ = Q
+rounded up to the f32 sublane multiple), so each adjacency tile is streamed
+HBM->VMEM exactly once per superstep — not once per query as the vmapped
+single-query path pays — and the MXU sees a real [TQ,TR]x[TR,TC] matmul
+instead of Q rank-1 mat-vecs.
+
+Grid = (col_tiles, row_tiles), row axis innermost so each [TQ, TC] output
+tile is produced once and revisited across the reduction ("arbitrary"
+dimension semantics). A row tile in which NO query has an active frontier
+row is skipped entirely with @pl.when — late supersteps, where most queries
+have finished (early-exit masking zeroes their frontiers, core/bfs.py) and
+survivors touch few rows, cost almost nothing.
+
+Parent extraction (smallest source row per (query, dst) pair) is a masked
+min that needs a [TQ, TR, TC] candidate volume. VMEM budget decides the
+strategy statically: the broadcast fits for small slabs
+(8*256*256*4 = 2 MiB << 16 MiB VMEM); larger slabs fall back to a fori_loop
+over query rows holding only one [TR, TC] slice (256 KiB) at a time.
+
+VMEM footprint per program instance (TQ=64, TR=TC=256 defaults):
+    adj tile       256*256 u8->f32  = 256 KiB
+    frontier slab  64*256 f32       =  64 KiB
+    out slabs      2 * 64*256 i32   = 128 KiB
+    parent scratch (see above)      <= 4 MiB        << 16 MiB VMEM
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT32_MAX = 2**31 - 1  # python int: pallas kernels must not capture tracers
+
+# static switch: largest [TQ, TR, TC] parent-candidate volume (bytes) we are
+# willing to materialize in VMEM before falling back to the per-query loop
+_PARENT_BCAST_BUDGET = 4 * 1024 * 1024
+
+
+def _multi_bfs_step_kernel(f_ref, adj_ref, alive_ref, visited_ref,
+                           reach_ref, parent_ref, *, tq: int, tr: int, tc: int,
+                           bcast_budget: int):
+    r = pl.program_id(1)
+    nr = pl.num_programs(1)
+
+    @pl.when(r == 0)
+    def _init():
+        reach_ref[...] = jnp.zeros_like(reach_ref)
+        parent_ref[...] = jnp.full_like(parent_ref, INT32_MAX)
+
+    f = f_ref[...]  # f32[TQ, TR] — all queries' slice of this row tile
+
+    @pl.when(jnp.any(f > 0))
+    def _accumulate():
+        a = adj_ref[...].astype(jnp.float32)          # [TR, TC]
+        hits = jnp.dot(f, a, preferred_element_type=jnp.float32)  # MXU [TQ, TC]
+        reach_ref[...] = jnp.maximum(reach_ref[...], (hits > 0).astype(jnp.int32))
+        row_ids = r * tr + jax.lax.iota(jnp.int32, tr)            # global rows
+        if tq * tr * tc * 4 <= bcast_budget:
+            cand = jnp.where((f[:, :, None] > 0) & (a[None, :, :] > 0),
+                             row_ids[None, :, None], INT32_MAX)
+            cand_min = jnp.min(cand, axis=1)                      # [TQ, TC]
+        else:
+            def qrow(qi, acc):
+                fq = jax.lax.dynamic_slice_in_dim(f, qi, 1, axis=0)[0]
+                c = jnp.where((fq[:, None] > 0) & (a > 0),
+                              row_ids[:, None], INT32_MAX)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    acc, jnp.min(c, axis=0)[None, :], qi, axis=0)
+            cand_min = jax.lax.fori_loop(
+                0, tq, qrow, jnp.full((tq, tc), INT32_MAX, jnp.int32))
+        parent_ref[...] = jnp.minimum(parent_ref[...], cand_min)
+
+    @pl.when(r == nr - 1)
+    def _epilogue():
+        new = ((reach_ref[...] > 0) & (alive_ref[...][None, :] > 0)
+               & (visited_ref[...] == 0))
+        reach_ref[...] = new.astype(jnp.int32)
+        parent_ref[...] = jnp.where(new, parent_ref[...], jnp.int32(-1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tr", "tc", "interpret", "parent_bcast_budget")
+)
+def multi_bfs_step_pallas(frontiers, adj, alive, visited, *, tr: int = 256,
+                          tc: int = 256, interpret: bool = True,
+                          parent_bcast_budget: int = _PARENT_BCAST_BUDGET):
+    """One fused expansion of Q frontiers. V % max(tr, tc) == 0.
+
+    frontiers: f32[Q, V] (0/1)   adj: int8/uint8[V, V]
+    alive:     int32[V] (0/1)    visited: int32[Q, V] (0/1)
+    Returns (new_frontiers int32[Q, V], parent int32[Q, V]).
+
+    Q is the full (already padded) query-slab height; callers align it to
+    the f32 sublane multiple (kernels/bfs_multi_step/ops.py pads).
+    ``parent_bcast_budget`` is static (part of the jit/trace key) so the
+    parent-extraction strategy is pinned per compilation — pass 0 to force
+    the per-query fori_loop path.
+    """
+    q, v = frontiers.shape
+    assert adj.shape == (v, v), (frontiers.shape, adj.shape)
+    assert v % tr == 0 and v % tc == 0, (v, tr, tc)
+    grid = (v // tc, v // tr)
+    return pl.pallas_call(
+        functools.partial(_multi_bfs_step_kernel, tq=q, tr=tr, tc=tc,
+                          bcast_budget=parent_bcast_budget),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, tr), lambda c, r: (0, r)),
+            pl.BlockSpec((tr, tc), lambda c, r: (r, c)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+            pl.BlockSpec((q, tc), lambda c, r: (0, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q, tc), lambda c, r: (0, c)),
+            pl.BlockSpec((q, tc), lambda c, r: (0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, v), jnp.int32),
+            jax.ShapeDtypeStruct((q, v), jnp.int32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(frontiers, adj, alive, visited)

@@ -1,0 +1,42 @@
+"""jit'd public wrapper for the bfs_multi_step kernel (adapts GraphState dtypes).
+
+Pads the query axis up to the f32 sublane multiple (8) so the frontier slab
+is a legal TPU tile, runs the fused kernel, and slices the padding back off.
+Padded queries carry an all-zero frontier, so they are dead weight the
+@pl.when tile-skip removes — they never reach the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bfs_multi_step.kernel import multi_bfs_step_pallas
+from repro.kernels.bfs_step.ops import _pick_tile
+
+_Q_ALIGN = 8  # f32 sublane multiple
+
+
+@functools.partial(jax.jit, static_argnames=())
+def multi_bfs_step(frontiers, adj, alive, visited):
+    """Drop-in replacement for core.bfs.multi_bfs_step_jnp (bool interface).
+
+    frontiers/visited: bool[Q, V]; alive: bool[V]; adj: uint8[V, V]
+    -> (new_frontiers bool[Q, V], parent int32[Q, V])
+    """
+    q, v = frontiers.shape
+    qpad = -(-q // _Q_ALIGN) * _Q_ALIGN
+    t = _pick_tile(v)
+    f = jnp.zeros((qpad, v), jnp.float32).at[:q].set(frontiers.astype(jnp.float32))
+    vis = jnp.zeros((qpad, v), jnp.int32).at[:q].set(visited.astype(jnp.int32))
+    new, parent = multi_bfs_step_pallas(
+        f,
+        adj,
+        alive.astype(jnp.int32),
+        vis,
+        tr=t,
+        tc=t,
+        interpret=True,  # CPU container; on TPU set interpret=False
+    )
+    return new[:q] > 0, parent[:q]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the bfs_multi_step kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT32_MAX = jnp.int32(2**31 - 1)
+
+
+def multi_bfs_step_ref(frontiers, adj, alive, visited):
+    """Same contract as kernel.multi_bfs_step_pallas.
+
+    frontiers f32[Q,V] (0/1), adj (u)int8[V,V], alive int32[V] (0/1),
+    visited int32[Q,V] (0/1) -> (new_frontiers int32[Q,V], parent int32[Q,V]).
+    """
+    v = adj.shape[0]
+    f = frontiers.astype(jnp.float32)
+    reach = (f @ adj.astype(jnp.float32)) > 0
+    new = reach & (alive[None, :] > 0) & (visited == 0)
+    idx = jnp.arange(v, dtype=jnp.int32)
+    cand = jnp.where((frontiers[:, :, None] > 0) & (adj[None, :, :] > 0),
+                     idx[None, :, None], INT32_MAX)
+    parent = jnp.min(cand, axis=1)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new.astype(jnp.int32), parent

@@ -6,6 +6,8 @@ The serving runtime owns two resources:
     decode steps, and GetPath queries run the paper's double-collect
     protocol against the latest published state — non-blocking co-serving:
     queries never lock out mutations and vice versa (DESIGN.md §5(ii)).
+    Query batches go through the fused multi-source BFS engine — Q
+    reachability queries per shared double collect (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -21,6 +23,7 @@ from repro.core import (
     OpBatch,
     apply_ops_fast,
     get_path_session,
+    get_paths_session,
     make_graph,
     make_op_batch,
 )
@@ -39,8 +42,9 @@ class ServeStats:
 class GraphCoServer:
     """Owns the live graph; publishes functional snapshots to queries."""
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, query_engine: str = "fused"):
         self.state = make_graph(capacity)
+        self.query_engine = query_engine
 
     def submit(self, ops: list) -> np.ndarray:
         batch = make_op_batch(ops)
@@ -49,6 +53,15 @@ class GraphCoServer:
 
     def get_path(self, k: int, l: int, max_rounds: int = 64):
         return get_path_session(lambda: self.state, k, l, max_rounds=max_rounds)
+
+    def get_paths(self, pairs: list, max_rounds: int = 64):
+        """Batched reachability: Q queries answered under ONE shared double
+        collect, traversed by the fused multi-source BFS engine (DESIGN.md
+        §7) — the serving-side surface a query front-end batches into.
+        Returns ([(found, keys)] per pair, rounds)."""
+        return get_paths_session(lambda: self.state, pairs,
+                                 max_rounds=max_rounds,
+                                 engine=self.query_engine)
 
 
 def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
@@ -77,10 +90,22 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
                 stats.graph_ops += len(ops)
         if graph is not None and query_stream is not None:
             q = query_stream(i)
-            if q is not None:
-                res = graph.get_path(*q)
-                stats.getpath_calls += 1
-                stats.getpath_rounds += int(res.rounds)
+            if q is not None and len(q) > 0:
+                # a batch is a sequence OF (k, l) pairs (list/tuple/ndarray);
+                # a lone pair — any length-2 sequence of scalars — stays on
+                # the single-query path. Scalars have no __len__.
+                if hasattr(q[0], "__len__"):
+                    # one fused multi-query session for the whole batch;
+                    # every query in it shares the session's round count, so
+                    # rounds-per-call stays comparable with the single path
+                    _, rounds = graph.get_paths(
+                        [(int(p[0]), int(p[1])) for p in q])
+                    stats.getpath_calls += len(q)
+                    stats.getpath_rounds += rounds * len(q)
+                else:
+                    res = graph.get_path(int(q[0]), int(q[1]))
+                    stats.getpath_calls += 1
+                    stats.getpath_rounds += int(res.rounds)
         tok_logits, caches = jdecode(params, caches, tok, jnp.int32(p + i))
         tok = jnp.argmax(tok_logits, axis=-1).astype(jnp.int32)
         stats.decode_steps += 1

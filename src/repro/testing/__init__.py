@@ -1,0 +1,9 @@
+"""Test-support utilities that must live importable under ``repro``.
+
+``proptest`` is a minimal, dependency-free stand-in for the subset of the
+``hypothesis`` API the test-suite uses. Tests import hypothesis when it is
+installed and fall back to this module otherwise (the CI container bakes in
+the jax toolchain but not hypothesis, and installing packages is not an
+option there).
+"""
+from repro.testing import proptest  # noqa: F401

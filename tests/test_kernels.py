@@ -7,6 +7,9 @@ import pytest
 from repro.kernels.bfs_step.kernel import bfs_step_pallas
 from repro.kernels.bfs_step.ops import bfs_step
 from repro.kernels.bfs_step.ref import bfs_step_ref
+from repro.kernels.bfs_multi_step.kernel import multi_bfs_step_pallas
+from repro.kernels.bfs_multi_step.ops import multi_bfs_step
+from repro.kernels.bfs_multi_step.ref import multi_bfs_step_ref
 from repro.kernels.edge_update.kernel import edge_update_pallas
 from repro.kernels.edge_update.ops import edge_update
 from repro.kernels.edge_update.ref import edge_update_ref
@@ -69,6 +72,56 @@ def test_bfs_step_empty_frontier():
     adj = (RNG.random((v, v)) < 0.1).astype(np.uint8)
     nf, par = bfs_step(jnp.zeros(v, bool), jnp.asarray(adj),
                        jnp.ones(v, bool), jnp.zeros(v, bool))
+    assert not bool(jnp.any(nf))
+    assert bool(jnp.all(par == -1))
+
+
+def _multi_inputs(q, v, density):
+    adj = (RNG.random((v, v)) < density).astype(np.uint8)
+    f = (RNG.random((q, v)) < 0.15).astype(np.float32)
+    alive = (RNG.random(v) < 0.9).astype(np.int32)
+    visited = ((f > 0) | (RNG.random((q, v)) < 0.2)).astype(np.int32)
+    return [jnp.asarray(x) for x in (f, adj, alive, visited)]
+
+
+@pytest.mark.parametrize("q", [1, 8, 64])
+@pytest.mark.parametrize("v", [64, 256])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+def test_multi_bfs_step_shapes(q, v, density):
+    f, adj, alive, visited = _multi_inputs(q, v, density)
+    nf_k, par_k = multi_bfs_step(f > 0, adj, alive > 0, visited > 0)
+    nf_r, par_r = multi_bfs_step_ref(f, adj, alive, visited)
+    np.testing.assert_allclose(np.asarray(nf_k, np.int32), np.asarray(nf_r))
+    np.testing.assert_allclose(np.asarray(par_k), np.asarray(par_r))
+
+
+@pytest.mark.parametrize("tr,tc", [(32, 32), (32, 128), (128, 32)])
+def test_multi_bfs_step_block_shapes(tr, tc):
+    f, adj, alive, visited = _multi_inputs(8, 128, 0.05)
+    nf_k, par_k = multi_bfs_step_pallas(f, adj, alive, visited, tr=tr, tc=tc)
+    nf_r, par_r = multi_bfs_step_ref(f, adj, alive, visited)
+    np.testing.assert_allclose(np.asarray(nf_k), np.asarray(nf_r))
+    np.testing.assert_allclose(np.asarray(par_k), np.asarray(par_r))
+
+
+def test_multi_bfs_step_parent_loop_fallback():
+    """Large query slabs switch the parent masked-min to the per-query
+    fori_loop that bounds VMEM; both strategies must agree with the ref.
+    The budget is a static jit argument, so passing 0 pins this
+    compilation to the fori_loop path regardless of trace caching."""
+    f, adj, alive, visited = _multi_inputs(16, 128, 0.08)
+    ref = multi_bfs_step_ref(f, adj, alive, visited)
+    out = multi_bfs_step_pallas(f, adj, alive, visited, tr=64, tc=64,
+                                parent_bcast_budget=0)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]))
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref[1]))
+
+
+def test_multi_bfs_step_empty_frontier():
+    v, q = 128, 5
+    adj = (RNG.random((v, v)) < 0.1).astype(np.uint8)
+    nf, par = multi_bfs_step(jnp.zeros((q, v), bool), jnp.asarray(adj),
+                             jnp.ones(v, bool), jnp.zeros((q, v), bool))
     assert not bool(jnp.any(nf))
     assert bool(jnp.all(par == -1))
 

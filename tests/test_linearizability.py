@@ -8,7 +8,10 @@ both engines must match the oracle exactly, results and final state.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from repro.testing.proptest import given, settings, strategies as st
 
 from repro.core import (
     OP_ADD_E, OP_ADD_V, OP_CON_E, OP_CON_V, OP_NOP, OP_REM_E, OP_REM_V,

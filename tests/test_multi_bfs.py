@@ -1,0 +1,133 @@
+"""Fused multi-source BFS engine vs per-query bfs and the sequential oracle.
+
+The contract under test (DESIGN.md §7): ``multi_bfs`` over Q (src, dst)
+pairs is bit-identical per query to ``bfs`` run Q times — found, parent
+tree, depths, dependency set (expanded) and step count — on both the jnp
+and pallas(interpret) backends, including dead endpoints, absent slots,
+Q > alive vertices, and per-query early-exit masking.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from repro.testing.proptest import given, settings, strategies as st
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, OP_REM_E, OP_REM_V,
+    GraphOracle, apply_ops, bfs, collect_batch, compare_collect_batches,
+    find_slot, make_graph, make_op_batch, multi_bfs,
+)
+
+
+def _build(edge_ops, nv=8, cap=32):
+    g = make_graph(cap)
+    oracle = GraphOracle(cap)
+    ops = [(OP_ADD_V, k, -1, -1) for k in range(nv)]
+    ops += [(op, u, v, -1) for (op, u, v) in edge_ops]
+    g, _ = apply_ops(g, make_op_batch(ops))
+    oracle.apply_batch(ops)
+    return g, oracle
+
+
+def _slots(g, keys):
+    return jnp.asarray([int(find_slot(g, k)) for k in keys], jnp.int32)
+
+
+def _assert_matches_single(g, srcs, dsts, backend):
+    m = multi_bfs(g, srcs, dsts, backend=backend)
+    for qi in range(len(srcs)):
+        s = bfs(g, srcs[qi], dsts[qi], backend="jnp")
+        assert bool(m.found[qi]) == bool(s.found), (backend, qi)
+        np.testing.assert_array_equal(np.asarray(m.parent[qi]), np.asarray(s.parent))
+        np.testing.assert_array_equal(np.asarray(m.dist[qi]), np.asarray(s.dist))
+        np.testing.assert_array_equal(np.asarray(m.expanded[qi]), np.asarray(s.expanded))
+        assert int(m.steps[qi]) == int(s.steps), (backend, qi)
+    return m
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("q", [1, 4, 16, 64])
+def test_multi_bfs_matches_vmapped_single_query(backend, q):
+    rng = np.random.default_rng(q)
+    nv = 12
+    edge_ops = [(OP_ADD_E, int(a), int(b))
+                for a, b in rng.integers(0, nv, (3 * nv, 2))]
+    g, _ = _build(edge_ops, nv=nv, cap=32)
+    keys = rng.integers(0, nv, (q, 2))
+    srcs = _slots(g, keys[:, 0])
+    dsts = _slots(g, keys[:, 1])
+    _assert_matches_single(g, srcs, dsts, backend)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_multi_bfs_dead_endpoints_and_absent_slots(backend):
+    g, _ = _build([(OP_ADD_E, 0, 1), (OP_ADD_E, 1, 2), (OP_ADD_E, 2, 3)])
+    g, _ = apply_ops(g, make_op_batch([(OP_REM_V, 2, -1, -1)]))
+    s0, s1, s3 = (int(find_slot(g, k)) for k in (0, 1, 3))
+    srcs = jnp.asarray([s0, s1, -1, s3, 31], jnp.int32)   # -1 absent, 31 dead slot
+    dsts = jnp.asarray([s3, s1, s0, -1, s0], jnp.int32)
+    m = _assert_matches_single(g, srcs, dsts, backend)
+    assert not bool(m.found[0])        # path 0->3 severed by removing 2
+    assert bool(m.found[1])            # self-reachability of an alive vertex
+    assert not bool(m.found[2]) and not bool(m.found[3]) and not bool(m.found[4])
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_multi_bfs_more_queries_than_alive_vertices(backend):
+    g, _ = _build([(OP_ADD_E, 0, 1), (OP_ADD_E, 1, 2)], nv=4, cap=16)
+    rng = np.random.default_rng(7)
+    q = 24                              # Q >> 4 alive vertices
+    keys = rng.integers(-1, 6, (q, 2))  # includes absent keys
+    srcs = _slots(g, keys[:, 0])
+    dsts = _slots(g, keys[:, 1])
+    _assert_matches_single(g, srcs, dsts, backend)
+
+
+def test_multi_bfs_early_exit_masking_freezes_finished_queries():
+    """A short query must stop contributing supersteps: its steps count is
+    its own BFS depth, not the slowest query's."""
+    # chain 0->1->...->7 : query (0,1) finishes at step 1, (0,7) needs 7
+    g, _ = _build([(OP_ADD_E, k, k + 1) for k in range(7)])
+    srcs = _slots(g, [0, 0])
+    dsts = _slots(g, [1, 7])
+    m = multi_bfs(g, srcs, dsts)
+    assert int(m.steps[0]) == 1
+    assert int(m.steps[1]) == 7
+    assert int(m.supersteps) == 7       # shared loop ran to the slowest query
+    # the short query's tree stays frozen at its exit point: only vertex 1
+    # (plus the root) is in its visited set at depth 1
+    assert int(jnp.sum(m.dist[0] >= 0)) == 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from([OP_ADD_E, OP_REM_E]),
+                          st.integers(0, 7), st.integers(0, 7)),
+                min_size=0, max_size=14))
+def test_multi_bfs_reachability_matches_oracle(edge_ops):
+    g, oracle = _build(edge_ops)
+    pairs = [(a, b) for a in (0, 3, 6) for b in (1, 5, 7)]
+    srcs = _slots(g, [p[0] for p in pairs])
+    dsts = _slots(g, [p[1] for p in pairs])
+    for backend in ("jnp", "pallas"):
+        m = multi_bfs(g, srcs, dsts, backend=backend)
+        for qi, (a, b) in enumerate(pairs):
+            assert bool(m.found[qi]) == oracle.reachable(a, b), (backend, a, b)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from([OP_ADD_E, OP_REM_E]),
+                          st.integers(0, 7), st.integers(0, 7)),
+                min_size=0, max_size=12))
+def test_fused_collect_batch_matches_vmap_engine(edge_ops):
+    """The fused and vmap collect_batch engines produce matching Collects —
+    same dependency sets, trees and version snapshots — so either side of a
+    double collect may be computed by either engine."""
+    g, _ = _build(edge_ops)
+    ks = [0, 1, 5, 6]
+    ls = [7, 3, 5, 0]
+    fused = collect_batch(g, ks, ls, engine="fused")
+    vmapped = collect_batch(g, ks, ls, engine="vmap")
+    assert bool(compare_collect_batches(fused, vmapped))

@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Fail if any `DESIGN.md §N` citation points at a missing section.
+
+Source docstrings cite the design document by section (`DESIGN.md §4`,
+`DESIGN.md §5(ii)`, ...). This check greps the code tree for those
+citations and verifies each resolves to a real heading in DESIGN.md:
+
+  * `§N`      -> a `## §N` heading must exist
+  * `§N(sub)` -> a `### §N(sub)` heading (or, failing that, `## §N`
+                 followed by the literal `§N(sub)` anywhere in the doc)
+
+Run from the repo root (CI does): python tools/check_design_refs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "tests", "examples")
+CITE = re.compile(r"DESIGN\.md\s+(§\d+(?:\([a-z]+\))?)")
+HEADING = re.compile(r"^#{2,3}\s+(§\d+(?:\([a-z]+\))?)(?=[\s—-]|$)", re.M)
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("check_design_refs: DESIGN.md does not exist", file=sys.stderr)
+        return 1
+    text = design.read_text(encoding="utf-8")
+    headings = set(HEADING.findall(text))
+
+    failures = []
+    n_cites = 0
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            for lineno, line in enumerate(
+                    path.read_text(encoding="utf-8").splitlines(), 1):
+                for ref in CITE.findall(line):
+                    n_cites += 1
+                    base = ref.split("(")[0]
+                    ok = ref in headings or (
+                        "(" in ref and base in headings and ref in text)
+                    if not ok:
+                        failures.append(
+                            f"{path.relative_to(ROOT)}:{lineno}: cites "
+                            f"DESIGN.md {ref} but no such section heading")
+
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        return 1
+    print(f"check_design_refs: {n_cites} citations, "
+          f"{len(headings)} sections — all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
