@@ -72,12 +72,35 @@ def run_sweep(*, backend="jnp", reps=5, seed=3, quick=False):
     return rows
 
 
-def main(quick=False):
+def json_rows(rows, figure="multiquery", engines=("fused", "vmap")):
+    """Long-format JSON records (one per engine per sweep point) — the
+    schema shared with fig_sharded so benchmarks/run.py --json aggregates
+    all figures uniformly."""
+    out = []
+    for r in rows:
+        base_s = r[f"{engines[-1]}_s"]
+        for eng in engines:
+            out.append({
+                "figure": figure,
+                "q": r["q"],
+                "engine": eng,
+                "seconds": r[f"{eng}_s"],
+                "steps": r["steps"],
+                "steps_per_s": r[f"{eng}_steps_per_s"],
+                "speedup_vs_baseline": base_s / r[f"{eng}_s"],
+            })
+    return out
+
+
+def main(quick=False, rows_out=None):
     out = []
     print(f'{"Q":>4s} {"engine":>6s} {"ms/batch":>10s} {"qsteps/s":>12s} '
           f'{"speedup":>8s}')
     for backend in ("jnp",):
-        for r in run_sweep(backend=backend, quick=quick):
+        sweep = run_sweep(backend=backend, quick=quick)
+        if rows_out is not None:
+            rows_out.extend(json_rows(sweep))
+        for r in sweep:
             print(f'{r["q"]:4d} {"fused":>6s} {r["fused_s"]*1e3:10.2f} '
                   f'{r["fused_steps_per_s"]:12.0f} {r["speedup"]:7.2f}x')
             print(f'{r["q"]:4d} {"vmap":>6s} {r["vmap_s"]*1e3:10.2f} '

@@ -1,0 +1,164 @@
+"""Scale-out figure: mesh-partitioned engines vs dense, Q and lane sweeps.
+
+The partitioned fused BFS (core.partition.multi_bfs, DESIGN.md §8) replaces
+the dense [Q,V] @ [V,V] superstep with a per-shard [Q,V/S] @ [V/S,V] product
+plus ONE psum frontier exchange; the partitioned mutation engine applies
+conflict-free lanes shard-locally. This benchmark runs both against their
+dense counterparts on the ambient mesh and reports wall time plus derived
+query-supersteps per second (the same unit as fig_multiquery) for the BFS
+sweep and lanes-per-second for the mutation sweep.
+
+On the 1-device CPU container the sharded engines degenerate (the numbers
+measure partitioning overhead ~= 1x); run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — or on a real pod —
+to see the scaling shape. Rows use the fig_multiquery schema (same keys,
+``json_rows`` emits the identical long-format records) so benchmarks/run.py
+aggregates every figure uniformly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apply_ops_fast, make_op_batch, multi_bfs
+from repro.core import partition
+from repro.core.distributed import AXIS, make_graph_mesh
+from benchmarks.fig9_throughput import gen_ops, seed_graph
+
+QS = (4, 16, 64)
+ENGINES = ("sharded", "dense")
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run_sweep(*, backend="jnp", reps=3, seed=5, quick=False):
+    """BFS sweep: rows carry the fig_multiquery schema with engine columns
+    (sharded, dense) in place of (fused, vmap)."""
+    g, _, nv = seed_graph()
+    mesh = make_graph_mesh()
+    gs = partition.shard_state(mesh, g)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for q in QS[:1] if quick else QS:
+        keys = rng.integers(0, nv, (q, 2))
+        srcs = jnp.asarray(keys[:, 0], jnp.int32)
+        dsts = jnp.asarray(keys[:, 1], jnp.int32)
+        sharded_fn = jax.jit(lambda s, d: partition.multi_bfs(gs, s, d, backend=backend))
+        dense_fn = jax.jit(lambda s, d: multi_bfs(g, s, d, backend=backend))
+        t_shard, ms = _time(sharded_fn, srcs, dsts, reps=reps)
+        t_dense, md = _time(dense_fn, srcs, dsts, reps=reps)
+        steps = int(jnp.sum(ms.steps))
+        assert steps == int(jnp.sum(md.steps)), "engines disagree on work"
+        rows.append({
+            "q": q,
+            "sharded_s": t_shard,
+            "dense_s": t_dense,
+            "steps": steps,
+            "sharded_steps_per_s": steps / t_shard,
+            "dense_steps_per_s": steps / t_dense,
+            "speedup": t_dense / t_shard,
+        })
+    return rows
+
+
+def run_apply_sweep(*, lanes=64, batches=16, reps=3, seed=6, quick=False):
+    """Mutation sweep: the partitioned disjoint-access engine vs dense."""
+    g, _, nv = seed_graph()
+    mesh = make_graph_mesh()
+    gs = partition.shard_state(mesh, g)
+    rng = np.random.default_rng(seed)
+    nb = 4 if quick else batches
+    mix = (1, 1, 2, 4, 2, 2)  # (addv, remv, conv, adde, reme, cone)
+    ops = [make_op_batch(gen_ops(rng, mix, lanes, nv), lanes)
+           for _ in range(nb)]
+
+    def run_dense():
+        st = g
+        for b in ops:
+            st, _ = apply_ops_fast(st, b)
+        return st.ecnt
+
+    def run_sharded():
+        st = gs
+        for b in ops:
+            st, _ = partition.apply_ops_fast(st, b)
+        return st.ecnt
+
+    t_dense, _ = _time(run_dense, reps=reps)
+    t_shard, _ = _time(run_sharded, reps=reps)
+    total = lanes * nb
+    return [{
+        "q": lanes,  # lane count plays the batch-size role of q
+        "sharded_s": t_shard,
+        "dense_s": t_dense,
+        "steps": total,
+        "sharded_steps_per_s": total / t_shard,
+        "dense_steps_per_s": total / t_dense,
+        "speedup": t_dense / t_shard,
+    }]
+
+
+def json_rows(rows, figure="sharded", engines=ENGINES):
+    """Normalize wide rows to the long-format JSON schema shared with
+    fig_multiquery (one record per engine per sweep point), so
+    benchmarks/run.py --json aggregates all figures uniformly."""
+    out = []
+    for r in rows:
+        base_s = r[f"{engines[-1]}_s"]
+        for eng in engines:
+            out.append({
+                "figure": figure,
+                "q": r["q"],
+                "engine": eng,
+                "seconds": r[f"{eng}_s"],
+                "steps": r["steps"],
+                "steps_per_s": r[f"{eng}_steps_per_s"],
+                "speedup_vs_baseline": base_s / r[f"{eng}_s"],
+            })
+    return out
+
+
+def main(quick=False, rows_out=None):
+    mesh = make_graph_mesh()
+    shards = int(mesh.shape[AXIS])
+    out = []
+    print(f"mesh: {shards} shard(s) on axis {AXIS!r}")
+    print(f'{"Q":>4s} {"engine":>8s} {"ms/batch":>10s} {"qsteps/s":>12s} '
+          f'{"speedup":>8s}')
+    bfs_rows = run_sweep(quick=quick)
+    for r in bfs_rows:
+        print(f'{r["q"]:4d} {"sharded":>8s} {r["sharded_s"]*1e3:10.2f} '
+              f'{r["sharded_steps_per_s"]:12.0f} {r["speedup"]:7.2f}x')
+        print(f'{r["q"]:4d} {"dense":>8s} {r["dense_s"]*1e3:10.2f} '
+              f'{r["dense_steps_per_s"]:12.0f} {"":>8s}')
+        out.append(f'sharded/bfs/s{shards}/q{r["q"]},{r["sharded_s"]*1e6:.1f},'
+                   f'qsteps_per_s={r["sharded_steps_per_s"]:.0f};'
+                   f'speedup_vs_dense={r["speedup"]:.2f}')
+        out.append(f'sharded/bfs_dense_ref/q{r["q"]},{r["dense_s"]*1e6:.1f},'
+                   f'qsteps_per_s={r["dense_steps_per_s"]:.0f}')
+    apply_rows = run_apply_sweep(quick=quick)
+    for r in apply_rows:
+        print(f'{r["q"]:4d} {"s-apply":>8s} {r["sharded_s"]*1e3:10.2f} '
+              f'{r["sharded_steps_per_s"]:12.0f} {r["speedup"]:7.2f}x')
+        out.append(f'sharded/apply/s{shards}/b{r["q"]},{r["sharded_s"]*1e6:.1f},'
+                   f'lanes_per_s={r["sharded_steps_per_s"]:.0f};'
+                   f'speedup_vs_dense={r["speedup"]:.2f}')
+    if rows_out is not None:
+        rows_out.extend(json_rows(bfs_rows, figure="sharded_bfs"))
+        rows_out.extend(json_rows(apply_rows, figure="sharded_apply"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

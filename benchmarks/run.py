@@ -1,20 +1,29 @@
 """Benchmark driver — one function per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
-  python -m benchmarks.run [--quick]
+  python -m benchmarks.run [--quick] [--json PATH]
+
+``--json`` additionally writes the sweep figures' rows as one uniform
+long-format record list ({figure, q, engine, seconds, steps, steps_per_s,
+speedup_vs_baseline}) — every figure exposing ``json_rows`` feeds the same
+schema, so downstream plotting aggregates them without per-figure cases.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write sweep rows as uniform JSON records")
     args = ap.parse_args()
 
     csv: list[str] = []
+    json_records: list[dict] = []
 
     print("=" * 72)
     print("Fig. 9 analogue — throughput vs lanes, 3 mixes, no GetPath")
@@ -32,7 +41,13 @@ def main() -> None:
     print("Multi-query analogue — fused multi-source BFS vs vmap, Q sweep")
     print("=" * 72)
     from benchmarks import fig_multiquery
-    csv += fig_multiquery.main(quick=args.quick)
+    csv += fig_multiquery.main(quick=args.quick, rows_out=json_records)
+
+    print("\n" + "=" * 72)
+    print("Sharded analogue — mesh-partitioned engines vs dense (DESIGN.md §8)")
+    print("=" * 72)
+    from benchmarks import fig_sharded
+    csv += fig_sharded.main(quick=args.quick, rows_out=json_records)
 
     print("\n" + "=" * 72)
     print("BFS kernel — structural intensity + jnp-path wall time")
@@ -57,6 +72,11 @@ def main() -> None:
     print("=" * 72)
     for line in csv:
         print(line)
+
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(json_records, f, indent=1)
+        print(f"\nwrote {len(json_records)} sweep records to {args.json}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,8 @@ Public surface:
   bfs, multi_bfs, extract_path                            (bfs.py)
   collect, compare_collects, get_path, get_path_session,
   interleaved_getpath                                     (snapshot.py)
-  ShardedGraph / distributed BFS                          (distributed.py)
+  ShardedGraphState, shard_state, sharded engines         (partition.py)
+  row-sharded collective engines (dbfs, dapply_ops, ...)  (distributed.py)
   GraphOracle                                             (oracle.py)
 """
 from repro.core.graph import (  # noqa: F401
@@ -76,3 +77,4 @@ from repro.core.snapshot import (  # noqa: F401
     interleaved_getpath,
 )
 from repro.core.oracle import GraphOracle  # noqa: F401
+from repro.core.partition import ShardedGraphState, shard_state, unshard  # noqa: F401

@@ -23,6 +23,14 @@ single-pod engine (used by unit tests); tests/test_distributed.py re-runs the
 suite under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in a
 subprocess to exercise real sharding, and launch/dryrun.py lowers the same
 code for the 256/512-chip production meshes.
+
+This file keeps the fully-row-sharded engines (metadata AND adjacency
+partitioned; owner-routed mutation). The production scale-out path is
+``core.partition`` (DESIGN.md §8): adjacency rows sharded, version metadata
+replicated, engines bit-identical to the dense ones. partition.py shares
+this module's mesh axis (``AXIS``), row-block arithmetic
+(``_row_block_info``) and jax-version shims (``shard_map`` import,
+``_SM_NOCHECK``, ``_pvary``).
 """
 from __future__ import annotations
 

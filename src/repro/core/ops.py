@@ -19,6 +19,31 @@ applied in one device step. Lane order is the linearization order. Two engines:
                     scaling over a serialized engine comes from (Fig. 9/10
                     analogues in benchmarks/).
 
+Strong equivalence contract: ``apply_ops_fast`` is BIT-identical to
+``apply_ops`` — same result codes AND the same concrete arrays (slot
+placement, ecnt, vver), not merely the same abstract graph. Three mechanisms
+buy this (tests/test_linearizability_prop.py is the enforcing suite, and the
+sharded engine in core/partition.py inherits the contract by mirroring the
+same decisions, DESIGN.md §8):
+
+  * ``_alloc_schedule`` precomputes, for every AddVertex lane, whether it
+    allocates under lane-order serial execution (per-key liveness is decided
+    by the LAST prior AddVertex/RemoveVertex lane on the same key — an
+    AddVertex always leaves the key alive, a RemoveVertex always dead) and
+    which free slot it takes (allocating lanes consume free slots in
+    increasing slot order, exactly what repeated argmax-free does). Clean
+    lanes allocate at their scheduled slot, leaving holes that the serial
+    correction pass's argmax-free naturally lands in.
+  * RemoveVertex lanes are always routed to the serial pass: their in-edge
+    source ``ecnt`` bumps read the whole adjacency, so they depend on lanes
+    they share no key with. Symmetrically, CAS edge lanes (expect >= 0) go
+    serial whenever the batch contains any RemoveVertex — the in-edge bump
+    is the one cross-key ``ecnt`` write a CAS read could miss.
+  * If the scheduled allocations would exhaust free slots (R_TABLE_FULL
+    territory), the whole batch falls back to the serial reference engine —
+    capacity exhaustion couples every AddVertex lane, and the host is about
+    to ``grow()`` anyway.
+
 CAS semantics: ``OpBatch.expect >= 0`` makes an edge op conditional on the
 source vertex's ``ecnt`` equalling ``expect`` (else R_CAS_FAIL) — the direct
 analogue of the paper's CAS-with-retry protocol, surfaced to clients.
@@ -175,31 +200,57 @@ def _apply_one(state: GraphState, opcode, k1, k2, expect):
 # ----------------------------------------------------------------------------
 # Reference engine: exact lane-order linearization
 # ----------------------------------------------------------------------------
-@jax.jit
-def apply_ops(state: GraphState, ops: OpBatch):
-    """Apply a batch with exact lane-order linearization (reference engine)."""
-    b = ops.lanes
+def _serial_masked(state: GraphState, ops: OpBatch, mask: jax.Array,
+                   res0: jax.Array):
+    """Apply the ``mask``-selected lanes in lane order via ``_apply_one``.
+
+    Unselected lanes keep their ``res0`` entry. This is both the reference
+    engine (mask = all lanes) and the fast engine's correction pass
+    (mask = conflicting lanes).
+    """
 
     def body(i, carry):
         st, res = carry
-        st, r = _apply_one(st, ops.opcode[i], ops.key1[i], ops.key2[i], ops.expect[i])
-        return st, res.at[i].set(r)
 
-    res0 = jnp.full((b,), R_FALSE, jnp.int32)
-    return jax.lax.fori_loop(0, b, body, (state, res0))
+        def run(st):
+            st2, r = _apply_one(st, ops.opcode[i], ops.key1[i], ops.key2[i], ops.expect[i])
+            return st2, res.at[i].set(r)
+
+        return jax.lax.cond(mask[i], run, lambda st: (st, res), st)
+
+    return jax.lax.fori_loop(0, ops.lanes, body, (state, res0))
+
+
+@jax.jit
+def apply_ops(state: GraphState, ops: OpBatch):
+    """Apply a batch with exact lane-order linearization (reference engine)."""
+    res0 = jnp.full((ops.lanes,), R_FALSE, jnp.int32)
+    return _serial_masked(state, ops, jnp.ones((ops.lanes,), jnp.bool_), res0)
 
 
 # ----------------------------------------------------------------------------
 # Fast engine: disjoint-access parallelism
 # ----------------------------------------------------------------------------
 def _lane_conflicts(ops: OpBatch) -> jax.Array:
-    """True for lanes whose referenced key-set intersects another lane's.
+    """True for lanes that must take the serial correction pass.
 
-    Sort-based O(B log B): flatten the (up to) two keys per lane, sort, mark
-    duplicates, scatter the mark back to lanes. NOP/lookup-only dedup note:
-    read-only lanes (contains) still count as conflicting when they share a
-    key with a writer — conservative and simple (reads that conflict only
-    with reads are still routed to the serial pass; rare in benchmarks).
+    Key collisions are detected sort-based O(B log B): flatten the (up to)
+    two keys per lane, sort, mark duplicates, scatter the mark back to
+    lanes. Read-only lanes (contains) still count as conflicting when they
+    share a key with a writer — conservative and simple (reads that conflict
+    only with reads are still routed to the serial pass; rare in
+    benchmarks). On top of key collisions, two lane classes are serial
+    unconditionally (the bit-identity contract, module docstring):
+
+      * RemoveVertex — its in-edge-source ecnt bumps depend on adjacency
+        and liveness of vertices it shares no key with;
+      * CAS edge lanes (expect >= 0) whenever the batch contains any
+        RemoveVertex — the CAS reads its source row's ecnt, which an
+        earlier RemoveVertex lane may bump through an in-edge without
+        sharing a key (the only cross-key ecnt writer);
+      * any lane naming a negative key — negative keys alias EMPTY_KEY
+        slot-table sentinels, so only the exact reference semantics of
+        ``_apply_one`` are trusted with them.
     """
     b = ops.lanes
     is_edge = (ops.opcode == OP_ADD_E) | (ops.opcode == OP_REM_E) | (ops.opcode == OP_CON_E)
@@ -215,14 +266,72 @@ def _lane_conflicts(ops: OpBatch) -> jax.Array:
     dup = same_prev | same_next
     conflict = jnp.zeros((b,), jnp.bool_)
     conflict = conflict.at[sl].max(dup)
+    conflict = conflict | (ops.opcode == OP_REM_V)
+    has_remv = jnp.any(ops.opcode == OP_REM_V)
+    is_cas_edge = ((ops.opcode == OP_ADD_E) | (ops.opcode == OP_REM_E)) & (ops.expect >= 0)
+    conflict = conflict | (is_cas_edge & has_remv)
+    conflict = conflict | (is_vert & (ops.key1 < 0))
+    conflict = conflict | (is_edge & ((ops.key1 < 0) | (ops.key2 < 0)))
     return conflict
 
 
-def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array):
+def _alive_now(state: GraphState, keys: jax.Array) -> jax.Array:
+    """Alive-slot existence per key [B], WITHOUT the key >= 0 guard (a
+    degenerate negative key can name a live slot; `_find_slots_masked`
+    deliberately hides those from scatter targets)."""
+    hit = (state.vkey[None, :] == keys[:, None]) & state.valive[None, :]
+    return jnp.any(hit, axis=1)
+
+
+def _alloc_schedule(state: GraphState, ops: OpBatch):
+    """Lane-order-faithful AddVertex allocation schedule (module docstring).
+
+    Returns (wants bool[B], slot int32[B], overflow bool):
+      wants[i]  — lane i is an AddVertex that allocates under lane-order
+                  serial execution (key not alive at its turn);
+      slot[i]   — the free slot it takes (capacity-parked when ~wants);
+      overflow  — the schedule needs more slots than are free, so the caller
+                  must fall back to the serial reference engine (capacity
+                  exhaustion couples lanes across keys).
+    """
+    b = ops.lanes
+    is_addv = ops.opcode == OP_ADD_V
+    is_vmut = is_addv | (ops.opcode == OP_REM_V)
+    alive0 = _alive_now(state, ops.key1)
+    lane = jnp.arange(b, dtype=jnp.int32)
+    prior = (
+        (ops.key1[:, None] == ops.key1[None, :])
+        & is_vmut[None, :]
+        & (lane[None, :] < lane[:, None])
+    )
+    has_prior = jnp.any(prior, axis=1)
+    last_j = jnp.argmax(jnp.where(prior, lane[None, :], -1), axis=1)
+    # liveness after the last prior vertex-mutating lane on the same key:
+    # AddVertex always leaves the key alive, RemoveVertex always dead —
+    # regardless of whether that op itself reported success.
+    alive_at_turn = jnp.where(has_prior, is_addv[last_j], alive0)
+    wants = is_addv & ~alive_at_turn
+    rank = jnp.cumsum(wants.astype(jnp.int32)) - 1              # 0-based rank
+    free = state.vkey == EMPTY_KEY
+    free_cum = jnp.cumsum(free.astype(jnp.int32))               # 1-based counts
+    n_free = free_cum[-1]
+    # slot for rank r = first index where free_cum == r+1 and free; serial
+    # argmax-free consumes free slots in exactly this increasing order.
+    slot = jnp.searchsorted(free_cum, rank + 1, side="left").astype(jnp.int32)
+    slot = jnp.where(wants, slot, state.capacity)               # park inactive
+    overflow = jnp.sum(wants.astype(jnp.int32)) > n_free
+    return wants, slot, overflow
+
+
+def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array,
+                            wants: jax.Array, slot: jax.Array):
     """One vectorized pass applying all ``active`` lanes.
 
-    Precondition: active lanes reference pairwise-disjoint key sets, so all
-    scatters below are conflict-free and the pass equals any interleaving.
+    Preconditions: active lanes reference pairwise-disjoint key sets (so all
+    scatters below are conflict-free and the pass equals any interleaving),
+    RemoveVertex lanes are never active (always serial), and AddVertex
+    allocation follows the precomputed non-overflowing ``_alloc_schedule``
+    (so placement is bit-identical to the lane-order serial engine).
     """
     b = ops.lanes
     cap = state.capacity
@@ -230,7 +339,6 @@ def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array):
     s2 = _find_slots_masked(state, ops.key2)
 
     is_addv = active & (ops.opcode == OP_ADD_V)
-    is_remv = active & (ops.opcode == OP_REM_V)
     is_conv = active & (ops.opcode == OP_CON_V)
     is_adde = active & (ops.opcode == OP_ADD_E)
     is_reme = active & (ops.opcode == OP_REM_E)
@@ -238,34 +346,17 @@ def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array):
 
     res = jnp.full((b,), R_FALSE, jnp.int32)
 
-    # --- AddVertex: parallel free-slot allocation by rank --------------------
-    exists = s1 >= 0
-    want_slot = is_addv & ~exists
-    rank = jnp.cumsum(want_slot.astype(jnp.int32)) - 1          # 0-based rank
-    free = state.vkey == EMPTY_KEY
-    free_cum = jnp.cumsum(free.astype(jnp.int32))               # 1-based counts
-    n_free = free_cum[-1]
-    have_slot = want_slot & (rank < n_free)
-    # slot for rank r = first index where free_cum == r+1 and free
-    alloc = jnp.searchsorted(free_cum, rank + 1, side="left").astype(jnp.int32)
-    alloc = jnp.where(have_slot, alloc, cap)                    # drop if none
+    # --- AddVertex: scheduled free-slot allocation ---------------------------
+    # A clean AddVertex has no other lane on its key, so the schedule's
+    # alive-at-turn is simply alive-now and ``wants`` == "will allocate"
+    # (the overflow fallback guarantees a slot exists).
+    alloc = jnp.where(is_addv & wants, slot, cap)               # park inactive
     vkey = state.vkey.at[alloc].set(ops.key1, mode="drop")
     valive = state.valive.at[alloc].set(True, mode="drop")
     vver = state.vver.at[alloc].add(1, mode="drop")
     ecnt = state.ecnt.at[alloc].set(0, mode="drop")
     adj = state.adj.at[alloc, :].set(0, mode="drop").at[:, alloc].set(0, mode="drop")
-    res = jnp.where(is_addv, jnp.where(exists, R_FALSE, jnp.where(have_slot, R_TRUE, R_TABLE_FULL)), res)
-
-    # --- RemoveVertex ---------------------------------------------------------
-    rem_t = jnp.where(is_remv & (s1 >= 0), s1, cap)
-    valive = valive.at[rem_t].set(False, mode="drop")
-    vver = vver.at[rem_t].add(1, mode="drop")
-    ecnt = ecnt.at[rem_t].add(1, mode="drop")
-    # bump in-edge sources (vectorized over lanes then reduced)
-    rem_mask = jnp.zeros((cap + 1,), jnp.bool_).at[rem_t].set(True, mode="promise_in_bounds")[:cap]
-    in_src_bump = ((state.adj > 0) & rem_mask[None, :] & state.valive[:, None]).sum(axis=1)
-    ecnt = ecnt + in_src_bump.astype(jnp.int32)
-    res = jnp.where(is_remv, jnp.where(s1 >= 0, R_TRUE, R_FALSE), res)
+    res = jnp.where(is_addv, jnp.where(wants, R_TRUE, R_FALSE), res)
 
     # --- ContainsVertex -------------------------------------------------------
     res = jnp.where(is_conv, jnp.where(s1 >= 0, R_TRUE, R_FALSE), res)
@@ -313,30 +404,29 @@ def apply_ops_fast(state: GraphState, ops: OpBatch):
 
     Linearization order: all conflict-free lanes (which commute with every
     lane) at the batch start in lane order, then conflicting lanes in lane
-    order via the masked correction loop.
+    order via the masked correction loop. Bit-identical to ``apply_ops``
+    (module docstring; tests/test_linearizability_prop.py).
     """
     conflict = _lane_conflicts(ops)
     clean = ~conflict & (ops.opcode != OP_NOP)
-    state, res = _apply_clean_vectorized(state, ops, clean)
+    wants, slot, overflow = _alloc_schedule(state, ops)
+    res0 = jnp.full((ops.lanes,), R_FALSE, jnp.int32)
 
-    def serial_pass(args):
-        st, rs = args
+    def fallback(st):
+        # Allocation would exhaust the slot table: capacity failures couple
+        # lanes across keys, so only full serial replay is bit-exact.
+        return _serial_masked(st, ops, jnp.ones((ops.lanes,), jnp.bool_), res0)
 
-        def body(i, carry):
-            s, r = carry
+    def fast(st):
+        st, res = _apply_clean_vectorized(st, ops, clean, wants, slot)
+        return jax.lax.cond(
+            jnp.any(conflict),
+            lambda a: _serial_masked(a[0], ops, conflict, a[1]),
+            lambda a: a,
+            (st, res),
+        )
 
-            def run(s):
-                s2, ri = _apply_one(s, ops.opcode[i], ops.key1[i], ops.key2[i], ops.expect[i])
-                return s2, r.at[i].set(ri)
-
-            return jax.lax.cond(conflict[i], run, lambda s: (s, r), s)
-
-        return jax.lax.fori_loop(0, ops.lanes, body, (st, rs))
-
-    state, res = jax.lax.cond(
-        jnp.any(conflict), serial_pass, lambda a: a, (state, res)
-    )
-    return state, res
+    return jax.lax.cond(overflow, fallback, fast, state)
 
 
 # ----------------------------------------------------------------------------

@@ -1,0 +1,507 @@
+"""Mesh-partitioned graph state — the scale-out form of both engines
+(DESIGN.md §8).
+
+``ShardedGraphState`` holds the same logical state as ``GraphState`` with a
+split placement over a 1-D device mesh (axis ``"rows"``, shared with
+core/distributed.py):
+
+  * ``adj`` — the only O(V^2) array — is ROW-SHARDED: every device owns
+    V/S contiguous adjacency rows (the edge-lists of its vertices);
+  * ``vkey``/``valive``/``vver``/``ecnt`` — the O(V) version metadata — are
+    REPLICATED, so lookups (LocV/LocC), the double-collect validation
+    vector, and the lane-order mutation schedule are shard-local replicated
+    compute with zero communication.
+
+The placement rules live in ``parallel.sharding.graph_state_specs``; the
+inside-shard_map helpers (row-block arithmetic, jax-version shims) are
+shared with ``core.distributed``.
+
+Engines (each bit-identical to its dense counterpart — the property suite
+tests/test_linearizability_prop.py enforces it):
+
+``apply_ops_fast``  distributed disjoint-access-parallel mutation: every
+                    shard applies the conflict-free lanes whose source rows
+                    it owns in one vectorized step, while the masked serial
+                    correction pass runs on the replicated metadata with
+                    only per-lane scalar exchanges (edge-presence pmax,
+                    in-edge-bump all_gather) touching the wire. Lane-order
+                    linearization survives sharding because every decision
+                    (conflict mask, allocation schedule, result codes) is a
+                    deterministic function of the replicated metadata —
+                    shards can only disagree about adjacency bits, and those
+                    are exchanged at the exact program points the dense
+                    engine reads them (DESIGN.md §8).
+
+``multi_bfs``       distributed fused multi-source BFS: each superstep does
+                    a LOCAL [Q, V/S] @ [V/S, V] frontier-matrix product per
+                    shard (``backend="pallas"`` reuses the bfs_multi_step
+                    kernel on the shard's row slice) followed by ONE psum
+                    frontier exchange + pmin parent combine. Per-query early
+                    exit and the double-collect version check carry over
+                    unchanged because the validation vector is replicated.
+
+``grow``/``compact`` preserve the sharding (grow re-rounds capacity up to a
+                    multiple of the mesh axis so row blocks stay equal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import graph as ggraph
+from repro.core import ops as gops
+from repro.core.bfs import MultiBFSResult
+from repro.core.distributed import (
+    AXIS,
+    _SM_NOCHECK,
+    _pvary,
+    _row_block_info,
+    make_graph_mesh,
+    shard_map,
+)
+from repro.core.graph import (
+    EMPTY_KEY,
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_CON_E,
+    OP_CON_V,
+    OP_REM_E,
+    OP_REM_V,
+    R_CAS_FAIL,
+    R_EDGE_ADDED,
+    R_EDGE_NOT_PRESENT,
+    R_EDGE_PRESENT,
+    R_EDGE_REMOVED,
+    R_FALSE,
+    R_TABLE_FULL,
+    R_TRUE,
+    R_VERTEX_NOT_PRESENT,
+    GraphState,
+    OpBatch,
+)
+from repro.parallel.sharding import graph_state_shardings
+
+INT32_MAX = jnp.int32(2**31 - 1)
+
+
+@jax.tree_util.register_pytree_node_class
+class ShardedGraphState:
+    """Row-partitioned graph state (DESIGN.md §8).
+
+    Same five logical fields as ``GraphState`` (duck-type compatible for
+    lookups/version_vector/_materialize), plus the owning ``mesh`` carried
+    as static pytree aux data so jitted engines can build shard_maps from
+    the state alone.
+    """
+
+    def __init__(self, mesh, vkey, valive, vver, ecnt, adj):
+        self.mesh = mesh
+        self.vkey = vkey
+        self.valive = valive
+        self.vver = vver
+        self.ecnt = ecnt
+        self.adj = adj
+
+    def tree_flatten(self):
+        return (self.vkey, self.valive, self.vver, self.ecnt, self.adj), self.mesh
+
+    @classmethod
+    def tree_unflatten(cls, mesh, children):
+        return cls(mesh, *children)
+
+    @property
+    def capacity(self) -> int:
+        return self.vkey.shape[0]
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[AXIS])
+
+    def as_dense(self) -> GraphState:
+        """View as a GraphState pytree (arrays keep their placement)."""
+        return GraphState(self.vkey, self.valive, self.vver, self.ecnt, self.adj)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"ShardedGraphState(capacity={self.capacity}, "
+                f"shards={self.num_shards})")
+
+
+# ----------------------------------------------------------------------------
+# Placement / conversion
+# ----------------------------------------------------------------------------
+def shard_state(mesh, dense: GraphState) -> ShardedGraphState:
+    """Place a dense GraphState onto the mesh (DESIGN.md §8 layout)."""
+    size = int(mesh.shape[AXIS])
+    if dense.capacity % size != 0:
+        raise ValueError(
+            f"capacity {dense.capacity} not divisible by mesh axis {size}")
+    sh = graph_state_shardings(mesh, AXIS)
+    return ShardedGraphState(
+        mesh,
+        jax.device_put(dense.vkey, sh["vkey"]),
+        jax.device_put(dense.valive, sh["valive"]),
+        jax.device_put(dense.vver, sh["vver"]),
+        jax.device_put(dense.ecnt, sh["ecnt"]),
+        jax.device_put(dense.adj, sh["adj"]),
+    )
+
+
+def unshard(state: ShardedGraphState) -> GraphState:
+    """Gather back to a fully-replicated dense GraphState (tests/host use)."""
+    rep = NamedSharding(state.mesh, P())
+    return GraphState(*(jax.device_put(x, rep) for x in state.as_dense()))
+
+
+def grow(state: ShardedGraphState, new_capacity: int) -> ShardedGraphState:
+    """Functionally grow capacity, preserving the sharding (DESIGN.md §8).
+
+    Capacity is rounded up to a multiple of the mesh axis so row blocks stay
+    equal-sized. Row blocks are redistributed (device k owns a different
+    contiguous range after growth), so this is a gather + re-place — the
+    same amortized O(V^2) a dense ``grow`` pays, plus one resharding.
+    """
+    size = int(state.mesh.shape[AXIS])
+    new_capacity = -(-int(new_capacity) // size) * size
+    if new_capacity <= state.capacity:
+        return state
+    return shard_state(state.mesh, ggraph.grow(unshard(state), new_capacity))
+
+
+@jax.jit
+def compact(state: ShardedGraphState) -> ShardedGraphState:
+    """Physical removal of logically-deleted vertices, shard-local scrub.
+
+    Mirrors ``ops.compact``: frees slots, clears their adjacency rows and
+    columns. Each shard scrubs only its own row block; the keep mask is
+    replicated metadata (DESIGN.md §8).
+    """
+    mesh = state.mesh
+    v = state.capacity
+    size = int(mesh.shape[AXIS])
+    dead = (~state.valive) & (state.vkey != EMPTY_KEY)
+    keep = ~dead
+    vkey = jnp.where(dead, EMPTY_KEY, state.vkey)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(AXIS, None), P()),
+        out_specs=P(AXIS, None), **_SM_NOCHECK,
+    )
+    def scrub(adj_l, keep_g):
+        _, _, per, row0 = _row_block_info(v, size)
+        keep_l = jax.lax.dynamic_slice(keep_g, (row0,), (per,))
+        return adj_l * (keep_l[:, None] & keep_g[None, :]).astype(adj_l.dtype)
+
+    return ShardedGraphState(mesh, vkey, state.valive, state.vver,
+                             state.ecnt, scrub(state.adj, keep))
+
+
+# ----------------------------------------------------------------------------
+# Distributed mutation engine
+# ----------------------------------------------------------------------------
+def _find_one(vkey, valive, key):
+    """find_slot on the replicated metadata (no GraphState wrapper)."""
+    hit = (vkey == key) & valive
+    idx = jnp.argmax(hit)
+    return jnp.where(jnp.any(hit), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+@jax.jit
+def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
+    """Distributed disjoint-access-parallel batch application.
+
+    Bit-identical to the dense ``ops.apply_ops_fast`` (hence to the
+    sequential spec ``ops.apply_ops``): the conflict mask, the AddVertex
+    allocation schedule and the overflow fallback are the SAME dense-helper
+    computations run on the replicated metadata, so every shard takes the
+    same decisions; only adjacency bits differ per shard and they are
+    exchanged (edge-presence pmax, in-edge-bump all_gather) at the exact
+    points the dense engine reads them. See DESIGN.md §8 for why lane-order
+    linearization survives the partitioning.
+    """
+    mesh = state.mesh
+    v = state.capacity
+    b = ops.lanes
+    size = int(mesh.shape[AXIS])
+
+    meta = state.as_dense()  # replicated metadata view for the dense helpers
+    conflict = gops._lane_conflicts(ops)
+    wants, slot, overflow = gops._alloc_schedule(meta, ops)
+    clean = ~conflict & (ops.opcode != gops.OP_NOP) & ~overflow
+    serial = jnp.where(overflow, jnp.ones((b,), jnp.bool_), conflict)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(AXIS, None),
+                  P(), P(), P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P(AXIS, None), P()),
+        # Metadata outputs are value-replicated (every shard computes the
+        # same result from replicated inputs + deterministic collectives),
+        # which 0.4.x's check_rep cannot infer through fori_loop.
+        **_SM_NOCHECK,
+    )
+    def run(vkey, valive, vver, ecnt, adj_l,
+            opc, k1, k2, expect, cleanv, serialv, wantsv, slotv):
+        _, _, per, row0 = _row_block_info(v, size)
+        vkey0, valive0, ecnt0, adj0_l = vkey, valive, ecnt, adj_l
+
+        # ------------------------------------------------------------------
+        # Clean vectorized pass (mirror of ops._apply_clean_vectorized)
+        # ------------------------------------------------------------------
+        hit1 = (vkey0[None, :] == k1[:, None]) & valive0[None, :] & (k1[:, None] >= 0)
+        hit2 = (vkey0[None, :] == k2[:, None]) & valive0[None, :] & (k2[:, None] >= 0)
+        s1 = jnp.where(jnp.any(hit1, axis=1), jnp.argmax(hit1, axis=1).astype(jnp.int32), -1)
+        s2 = jnp.where(jnp.any(hit2, axis=1), jnp.argmax(hit2, axis=1).astype(jnp.int32), -1)
+
+        is_addv = cleanv & (opc == OP_ADD_V)
+        is_conv = cleanv & (opc == OP_CON_V)
+        is_adde = cleanv & (opc == OP_ADD_E)
+        is_reme = cleanv & (opc == OP_REM_E)
+        is_cone = cleanv & (opc == OP_CON_E)
+        res = jnp.full((b,), R_FALSE, jnp.int32)
+
+        # AddVertex via the precomputed schedule
+        alloc = jnp.where(is_addv & wantsv, slotv, v)
+        vkey = vkey.at[alloc].set(k1, mode="drop")
+        valive = valive.at[alloc].set(True, mode="drop")
+        vver = vver.at[alloc].add(1, mode="drop")
+        ecnt = ecnt.at[alloc].set(0, mode="drop")
+        lr = alloc - row0
+        lr = jnp.where((lr >= 0) & (lr < per), lr, per)
+        adj_l = adj_l.at[lr, :].set(0, mode="drop")
+        adj_l = adj_l.at[:, alloc].set(0, mode="drop")
+        res = jnp.where(is_addv, jnp.where(wantsv, R_TRUE, R_FALSE), res)
+
+        # ContainsVertex
+        res = jnp.where(is_conv, jnp.where(s1 >= 0, R_TRUE, R_FALSE), res)
+
+        # Edge ops: presence lives on the owner shard -> masked read + pmax
+        both = (s1 >= 0) & (s2 >= 0)
+        r1, r2 = jnp.maximum(s1, 0), jnp.maximum(s2, 0)
+        l1 = r1 - row0
+        mine1 = (l1 >= 0) & (l1 < per)
+        cur_loc = adj0_l[jnp.clip(l1, 0, per - 1), r2]
+        cur = jax.lax.pmax(
+            jnp.where(mine1, cur_loc.astype(jnp.int32), 0), AXIS) > 0
+        cas_ok = (expect < 0) | (ecnt0[r1] == expect)
+
+        do_add = is_adde & both & cas_ok & ~cur
+        do_rem = is_reme & both & cas_ok & cur
+        el = jnp.where((do_add | do_rem) & mine1, l1, per)
+        adj_l = adj_l.at[el, r2].set(do_add.astype(adj_l.dtype), mode="drop")
+        ecnt = ecnt.at[jnp.where(do_add | do_rem, r1, v)].add(1, mode="drop")
+
+        res = jnp.where(
+            is_adde,
+            jnp.where(both, jnp.where(cas_ok, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_ADDED), R_CAS_FAIL), R_VERTEX_NOT_PRESENT),
+            res,
+        )
+        res = jnp.where(
+            is_reme,
+            jnp.where(both, jnp.where(cas_ok, jnp.where(cur, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT), R_CAS_FAIL), R_VERTEX_NOT_PRESENT),
+            res,
+        )
+        res = jnp.where(
+            is_cone,
+            jnp.where(both, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT), R_VERTEX_NOT_PRESENT),
+            res,
+        )
+
+        # ------------------------------------------------------------------
+        # Serial correction pass (mirror of ops._apply_one, lane order).
+        # Runs every lane unconditionally (uniform collectives across
+        # shards); non-serial lanes are masked out of all writes.
+        # ------------------------------------------------------------------
+        def body(i, carry):
+            vkey, valive, vver, ecnt, adj_l, res = carry
+            m = serialv[i]
+            op, a, bk, exp = opc[i], k1[i], k2[i], expect[i]
+            sa = _find_one(vkey, valive, a)
+            sb = _find_one(vkey, valive, bk)
+
+            # AddVertex
+            free = vkey == EMPTY_KEY
+            have = jnp.any(free)
+            new = jnp.argmax(free).astype(jnp.int32)
+            exists = sa >= 0
+            do_av = m & (op == OP_ADD_V) & ~exists & have
+            tgt = jnp.where(do_av, new, v)
+            vkey = vkey.at[tgt].set(a, mode="drop")
+            valive = valive.at[tgt].set(True, mode="drop")
+            vver = vver.at[tgt].add(1, mode="drop")
+            ecnt = ecnt.at[tgt].set(0, mode="drop")
+            ltgt = tgt - row0
+            ltgt = jnp.where((ltgt >= 0) & (ltgt < per), ltgt, per)
+            adj_l = adj_l.at[ltgt, :].set(0, mode="drop")
+            adj_l = adj_l.at[:, tgt].set(0, mode="drop")
+            r_addv = jnp.where(exists, R_FALSE, jnp.where(have, R_TRUE, R_TABLE_FULL))
+
+            # RemoveVertex (in-edge-source bumps read the pre-lane liveness)
+            valive_in = valive
+            do_rv = m & (op == OP_REM_V) & (sa >= 0)
+            t = jnp.where(do_rv, sa, v)
+            valive = valive.at[t].set(False, mode="drop")
+            vver = vver.at[t].add(1, mode="drop")
+            ecnt = ecnt.at[t].add(1, mode="drop")
+            col = jnp.maximum(sa, 0)
+            valive_l = jax.lax.dynamic_slice(valive_in, (row0,), (per,))
+            bump_l = do_rv & (adj_l[:, col] > 0) & valive_l
+            bump = jax.lax.all_gather(bump_l, AXIS, tiled=True)
+            ecnt = ecnt + bump.astype(jnp.int32)
+            r_remv = jnp.where(sa >= 0, R_TRUE, R_FALSE)
+
+            # ContainsVertex
+            r_conv = jnp.where(sa >= 0, R_TRUE, R_FALSE)
+
+            # Edge ops
+            eboth = (sa >= 0) & (sb >= 0)
+            ra, rb = jnp.maximum(sa, 0), jnp.maximum(sb, 0)
+            la = ra - row0
+            amine = (la >= 0) & (la < per)
+            cur = jax.lax.pmax(
+                jnp.where(amine, adj_l[jnp.clip(la, 0, per - 1), rb].astype(jnp.int32), 0),
+                AXIS) > 0
+            ecas = (exp < 0) | (ecnt[ra] == exp)
+            do_ea = m & (op == OP_ADD_E) & eboth & ecas & ~cur
+            do_er = m & (op == OP_REM_E) & eboth & ecas & cur
+            ela = jnp.where((do_ea | do_er) & amine, la, per)
+            adj_l = adj_l.at[ela, rb].set(do_ea.astype(adj_l.dtype), mode="drop")
+            ecnt = ecnt.at[jnp.where(do_ea | do_er, ra, v)].add(1, mode="drop")
+            r_adde = jnp.where(eboth, jnp.where(ecas, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_ADDED), R_CAS_FAIL), R_VERTEX_NOT_PRESENT)
+            r_reme = jnp.where(eboth, jnp.where(ecas, jnp.where(cur, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT), R_CAS_FAIL), R_VERTEX_NOT_PRESENT)
+            r_cone = jnp.where(eboth, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT), R_VERTEX_NOT_PRESENT)
+
+            r = jax.lax.switch(
+                jnp.clip(op, 0, 6),
+                [lambda: jnp.int32(R_FALSE),
+                 lambda: r_addv.astype(jnp.int32),
+                 lambda: r_remv.astype(jnp.int32),
+                 lambda: r_conv.astype(jnp.int32),
+                 lambda: r_adde.astype(jnp.int32),
+                 lambda: r_reme.astype(jnp.int32),
+                 lambda: r_cone.astype(jnp.int32)],
+            )
+            res = res.at[i].set(jnp.where(m, r, res[i]))
+            return vkey, valive, vver, ecnt, adj_l, res
+
+        vkey, valive, vver, ecnt, adj_l, res = jax.lax.fori_loop(
+            0, b, body, (vkey, valive, vver, ecnt, adj_l, res))
+        return vkey, valive, vver, ecnt, adj_l, res
+
+    vkey, valive, vver, ecnt, adj, res = run(
+        state.vkey, state.valive, state.vver, state.ecnt, state.adj,
+        ops.opcode, ops.key1, ops.key2, ops.expect,
+        clean, serial, wants, slot,
+    )
+    return ShardedGraphState(mesh, vkey, valive, vver, ecnt, adj), res
+
+
+# ----------------------------------------------------------------------------
+# Distributed fused multi-source BFS
+# ----------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("backend",))
+def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
+              backend: str = "jnp") -> MultiBFSResult:
+    """Fused BFS from Q sources over the row-sharded adjacency.
+
+    Each superstep: every shard expands the slice of all Q frontiers it owns
+    with ONE local [Q, V/S] @ [V/S, V] product (``backend="pallas"`` runs
+    the bfs_multi_step kernel on the row slice), then the partial next
+    frontiers are OR-combined with a single psum and parents min-combined
+    with a pmin — the row-partitioned frontier exchange of DESIGN.md §8.
+    Per-query early exit is the dense engine's: finished queries expose an
+    all-empty frontier on every shard. Results are bit-identical to
+    ``core.bfs.multi_bfs`` on the gathered state.
+    """
+    mesh = state.mesh
+    v = state.capacity
+    size = int(mesh.shape[AXIS])
+    src_slots = jnp.asarray(src_slots, jnp.int32)
+    dst_slots = jnp.asarray(dst_slots, jnp.int32)
+    q = src_slots.shape[0]
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(AXIS, None), P(), P()),
+        out_specs=(P(), P(), P(), P(), P(), P()),
+        # Outputs are value-replicated (combined via psum/pmin every
+        # superstep), which the 0.4.x checker cannot infer past while_loop.
+        **_SM_NOCHECK,
+    )
+    def run(alive, adj_l, srcs, dsts):
+        _, _, per, row0 = _row_block_info(v, size)
+        src_ok = (srcs >= 0) & alive[jnp.maximum(srcs, 0)]
+        s = jnp.maximum(srcs, 0)
+        frontier0 = jnp.zeros((q, v), jnp.bool_).at[jnp.arange(q), s].set(src_ok)
+        visited0 = frontier0
+        parent0 = jnp.full((q, v), -1, jnp.int32)
+        dist0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
+        expanded0 = jnp.zeros((q, v), jnp.bool_)
+        steps0 = jnp.zeros((q,), jnp.int32)
+        frontier0, visited0, parent0, dist0, expanded0, steps0 = jax.tree.map(
+            _pvary, (frontier0, visited0, parent0, dist0, expanded0, steps0))
+
+        def _active(frontiers, visited, step):
+            hit = (dsts >= 0) & visited[jnp.arange(q), jnp.maximum(dsts, 0)]
+            return jnp.any(frontiers, axis=1) & ~hit & (step < v)
+
+        def cond(c):
+            frontiers, visited, parent, dist, expanded, steps, step = c
+            return jnp.any(_active(frontiers, visited, step))
+
+        def body(c):
+            frontiers, visited, parent, dist, expanded, steps, step = c
+            act = _active(frontiers, visited, step)
+            f = frontiers & act[:, None]
+            expanded = expanded | f
+            f_l = jax.lax.dynamic_slice(f, (0, row0), (q, per))
+            if backend == "pallas":
+                from repro.kernels.bfs_multi_step.ops import multi_bfs_step
+
+                new_p, par_p = multi_bfs_step(f_l, adj_l, alive, visited)
+                reach_part = new_p  # already masked by alive & ~visited
+                cand = jnp.where(par_p >= 0, par_p + row0, INT32_MAX)
+            else:
+                fa = f_l.astype(jnp.float32)
+                reach_part = (fa @ adj_l.astype(jnp.float32)) > 0
+                idx = (jnp.arange(per, dtype=jnp.int32) + row0)[:, None, None]
+                cand3 = jnp.where(f_l.T[:, :, None] & (adj_l[:, None, :] > 0),
+                                  idx, INT32_MAX)
+                cand = jnp.min(cand3, axis=0)
+            reach = jax.lax.psum(reach_part.astype(jnp.int32), AXIS) > 0
+            par_min = jax.lax.pmin(cand, AXIS)
+            new = reach & alive[None, :] & ~visited
+            parent = jnp.where(new, par_min, parent)
+            dist = jnp.where(new, step + 1, dist)
+            visited = visited | new
+            steps = steps + act.astype(jnp.int32)
+            return new, visited, parent, dist, expanded, steps, step + 1
+
+        frontiers, visited, parent, dist, expanded, steps, supersteps = (
+            jax.lax.while_loop(
+                cond, body,
+                (frontier0, visited0, parent0, dist0, expanded0, steps0,
+                 jnp.int32(0))))
+        found = ((dsts >= 0)
+                 & visited[jnp.arange(q), jnp.maximum(dsts, 0)] & src_ok)
+        return found, parent, dist, expanded, steps, supersteps
+
+    found, parent, dist, expanded, steps, supersteps = run(
+        state.valive, state.adj, src_slots, dst_slots)
+    return MultiBFSResult(found, parent, dist, expanded, steps, supersteps)
+
+
+__all__ = [
+    "ShardedGraphState",
+    "apply_ops_fast",
+    "compact",
+    "grow",
+    "make_graph_mesh",
+    "multi_bfs",
+    "shard_state",
+    "unshard",
+]

@@ -21,7 +21,10 @@ Four surfaces:
     as soon as one round-trip sees no effective mutation)
   * ``collect_batch`` / ``get_paths_session`` — Q queries under ONE shared
     double collect, traversed by the fused multi-source BFS engine
-    (DESIGN.md §7; ``engine="vmap"`` keeps the per-query reference path)
+    (DESIGN.md §7; ``engine="vmap"`` keeps the per-query reference path).
+    Both accept a mesh-partitioned ``core.partition.ShardedGraphState``
+    transparently: the traversal then runs per-shard with a psum frontier
+    exchange, and the Collect comes back bit-identical (DESIGN.md §8)
   * ``interleaved_getpath``   — a single jitted program interleaving mutation
     batches with a pending query, demonstrating the protocol *inside* one
     device program (used by tests/benchmarks to replay paper Fig. 10).
@@ -103,7 +106,7 @@ def get_path(state: GraphState, k, l, backend: str = "jnp") -> PathResult:
 # Beyond-paper: batched multi-query GetPath under ONE shared double collect
 # ----------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("backend", "engine"))
-def collect_batch(state: GraphState, ks, ls, backend: str = "jnp",
+def collect_batch(state, ks, ls, backend: str = "jnp",
                   engine: str = "fused"):
     """Vectorized TreeCollect for Q query pairs. Returns a Collect whose
     leading axis is the query index; the dependency set / versions are the
@@ -111,6 +114,14 @@ def collect_batch(state: GraphState, ks, ls, backend: str = "jnp",
     against the same pair of states — every answer linearizes at the same
     point (a consistent multi-query snapshot, strictly stronger than Q
     independent GetPaths and Q x cheaper in validation traffic).
+
+    ``state`` may be a dense ``GraphState`` or a mesh-partitioned
+    ``core.partition.ShardedGraphState`` (DESIGN.md §8): the traversal then
+    runs the distributed fused engine (per-shard row products + one psum
+    frontier exchange per superstep) and, because the validation metadata is
+    replicated, the returned Collect is bit-identical to the dense one —
+    ``compare_collect_batches`` and the whole double-collect session logic
+    apply unchanged.
 
     ``engine`` picks the traversal (DESIGN.md §7):
       "fused" — ONE multi_bfs whose supersteps advance all Q frontiers with
@@ -121,16 +132,22 @@ def collect_batch(state: GraphState, ks, ls, backend: str = "jnp",
                 the cross-check reference: per-query results are identical
                 by construction of multi_bfs (tests assert it).
     """
+    from repro.core.partition import ShardedGraphState
+    from repro.core import partition
+
+    sharded = isinstance(state, ShardedGraphState)
     ks = jnp.asarray(ks, jnp.int32)
     ls = jnp.asarray(ls, jnp.int32)
     if engine == "vmap":
-        return jax.vmap(lambda k, l: collect(state, k, l, backend=backend))(ks, ls)
+        dense = state.as_dense() if sharded else state
+        return jax.vmap(lambda k, l: collect(dense, k, l, backend=backend))(ks, ls)
     if engine != "fused":
         raise ValueError(f"unknown collect_batch engine {engine!r}")
     sk = find_slots(state, ks)
     sl = find_slots(state, ls)
     present = (sk >= 0) & (sl >= 0)
-    res = multi_bfs(state, sk, sl, backend=backend)
+    traverse = partition.multi_bfs if sharded else multi_bfs
+    res = traverse(state, sk, sl, backend=backend)
     q = ks.shape[0]
     qi = jnp.arange(q)
     touched = res.expanded

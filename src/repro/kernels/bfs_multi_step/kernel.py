@@ -94,11 +94,16 @@ def _multi_bfs_step_kernel(f_ref, adj_ref, alive_ref, visited_ref,
 def multi_bfs_step_pallas(frontiers, adj, alive, visited, *, tr: int = 256,
                           tc: int = 256, interpret: bool = True,
                           parent_bcast_budget: int = _PARENT_BCAST_BUDGET):
-    """One fused expansion of Q frontiers. V % max(tr, tc) == 0.
+    """One fused expansion of Q frontiers. R % tr == 0 and V % tc == 0.
 
-    frontiers: f32[Q, V] (0/1)   adj: int8/uint8[V, V]
+    frontiers: f32[Q, R] (0/1)   adj: int8/uint8[R, V]
     alive:     int32[V] (0/1)    visited: int32[Q, V] (0/1)
     Returns (new_frontiers int32[Q, V], parent int32[Q, V]).
+
+    ``adj`` may be a contiguous ROW SLICE of the global adjacency (R < V) —
+    the per-shard superstep of the partitioned engine (DESIGN.md §8). Parent
+    ids are then relative to the slice; the caller adds its row offset
+    before the cross-shard min-combine.
 
     Q is the full (already padded) query-slab height; callers align it to
     the f32 sublane multiple (kernels/bfs_multi_step/ops.py pads).
@@ -106,10 +111,13 @@ def multi_bfs_step_pallas(frontiers, adj, alive, visited, *, tr: int = 256,
     parent-extraction strategy is pinned per compilation — pass 0 to force
     the per-query fori_loop path.
     """
-    q, v = frontiers.shape
-    assert adj.shape == (v, v), (frontiers.shape, adj.shape)
-    assert v % tr == 0 and v % tc == 0, (v, tr, tc)
-    grid = (v // tc, v // tr)
+    q, rows = frontiers.shape
+    v = adj.shape[1]
+    assert adj.shape[0] == rows, (frontiers.shape, adj.shape)
+    assert alive.shape == (v,) and visited.shape == (q, v), \
+        (alive.shape, visited.shape)
+    assert rows % tr == 0 and v % tc == 0, (rows, v, tr, tc)
+    grid = (v // tc, rows // tr)
     return pl.pallas_call(
         functools.partial(_multi_bfs_step_kernel, tq=q, tr=tr, tc=tc,
                           bcast_budget=parent_bcast_budget),

@@ -22,21 +22,27 @@ _Q_ALIGN = 8  # f32 sublane multiple
 def multi_bfs_step(frontiers, adj, alive, visited):
     """Drop-in replacement for core.bfs.multi_bfs_step_jnp (bool interface).
 
-    frontiers/visited: bool[Q, V]; alive: bool[V]; adj: uint8[V, V]
+    frontiers: bool[Q, R]; adj: uint8[R, V]; alive: bool[V]; visited: bool[Q, V]
     -> (new_frontiers bool[Q, V], parent int32[Q, V])
+
+    R == V for the dense engine; R = V/S rows for one shard of the
+    partitioned engine (DESIGN.md §8), in which case parent ids are local to
+    the row slice (the caller adds its row offset).
     """
-    q, v = frontiers.shape
+    q, rows = frontiers.shape
+    v = adj.shape[1]
     qpad = -(-q // _Q_ALIGN) * _Q_ALIGN
-    t = _pick_tile(v)
-    f = jnp.zeros((qpad, v), jnp.float32).at[:q].set(frontiers.astype(jnp.float32))
+    tr = _pick_tile(rows)
+    tc = _pick_tile(v)
+    f = jnp.zeros((qpad, rows), jnp.float32).at[:q].set(frontiers.astype(jnp.float32))
     vis = jnp.zeros((qpad, v), jnp.int32).at[:q].set(visited.astype(jnp.int32))
     new, parent = multi_bfs_step_pallas(
         f,
         adj,
         alive.astype(jnp.int32),
         vis,
-        tr=t,
-        tc=t,
+        tr=tr,
+        tc=tc,
         interpret=True,  # CPU container; on TPU set interpret=False
     )
     return new[:q] > 0, parent[:q]

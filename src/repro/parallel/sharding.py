@@ -206,6 +206,35 @@ def to_named(tree_specs, mesh: Mesh):
 
 
 # ----------------------------------------------------------------------------
+# graph-state sharding (the partitioned concurrent graph, DESIGN.md §8)
+# ----------------------------------------------------------------------------
+GRAPH_ROW_AXIS = "rows"
+
+
+def graph_state_specs(axis: str = GRAPH_ROW_AXIS) -> dict:
+    """PartitionSpecs for the partitioned graph state (DESIGN.md §8).
+
+    The adjacency matrix — the only O(V^2) array — is row-sharded over the
+    1-D ``rows`` mesh axis; the O(V) version metadata (vkey/valive/vver/ecnt)
+    is replicated so lookups, the double-collect validation vector, and the
+    lane-order mutation schedule stay shard-local replicated compute.
+    """
+    rep = P()
+    return {
+        "vkey": rep,
+        "valive": rep,
+        "vver": rep,
+        "ecnt": rep,
+        "adj": P(axis, None),
+    }
+
+
+def graph_state_shardings(mesh: Mesh, axis: str = GRAPH_ROW_AXIS) -> dict:
+    """NamedShardings for ``graph_state_specs`` on a concrete mesh."""
+    return {k: NamedSharding(mesh, s) for k, s in graph_state_specs(axis).items()}
+
+
+# ----------------------------------------------------------------------------
 # activation sharding constraints (trace-time hooks used inside model code)
 # ----------------------------------------------------------------------------
 # GSPMD propagation alone replicates attention activations whenever the head

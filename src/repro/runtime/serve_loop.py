@@ -19,14 +19,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    R_TABLE_FULL,
     GraphState,
     OpBatch,
+    PathResult,
     apply_ops_fast,
     get_path_session,
     get_paths_session,
+    grow,
     make_graph,
     make_op_batch,
 )
+from repro.core import partition
 
 
 @dataclass
@@ -36,28 +40,79 @@ class ServeStats:
     graph_ops: int = 0
     getpath_calls: int = 0
     getpath_rounds: int = 0
+    grow_events: int = 0
     wall_s: float = 0.0
 
 
 class GraphCoServer:
-    """Owns the live graph; publishes functional snapshots to queries."""
+    """Owns the live graph; publishes functional snapshots to queries.
 
-    def __init__(self, capacity: int = 256, query_engine: str = "fused"):
-        self.state = make_graph(capacity)
+    ``mesh=`` places the state as a ``ShardedGraphState`` (adjacency rows
+    partitioned over the 1-D device mesh, DESIGN.md §8): mutation batches go
+    through the distributed disjoint-access engine and query batches through
+    the distributed fused multi-source BFS — bit-identical results to the
+    single-device server, scaled past one chip's HBM.
+
+    ``auto_grow`` (default on) realizes the paper's "unbounded" property at
+    the serving surface: any R_TABLE_FULL lane triggers a capacity doubling
+    and a replay of the whole batch against the grown pre-batch state, so
+    ``submit`` never surfaces slot exhaustion to clients — directly or as
+    cascaded VERTEX-NOT-PRESENT failures — and the returned results are
+    one clean lane-order linearization.
+    """
+
+    def __init__(self, capacity: int = 256, query_engine: str = "fused",
+                 mesh=None, auto_grow: bool = True):
+        self.mesh = mesh
+        self.auto_grow = auto_grow
         self.query_engine = query_engine
+        self.grow_events = 0
+        dense = make_graph(capacity)
+        self.state = partition.shard_state(mesh, dense) if mesh is not None else dense
+
+    def _apply(self, state, batch: OpBatch):
+        if self.mesh is not None:
+            return partition.apply_ops_fast(state, batch)
+        return apply_ops_fast(state, batch)
+
+    def _grow(self, state, new_capacity: int):
+        if self.mesh is not None:
+            return partition.grow(state, new_capacity)
+        return grow(state, new_capacity)
 
     def submit(self, ops: list) -> np.ndarray:
         batch = make_op_batch(ops)
-        self.state, res = apply_ops_fast(self.state, batch)
-        return np.asarray(res)
+        base = self.state                    # pre-batch snapshot (functional)
+        state, res = self._apply(base, batch)
+        res = np.asarray(res)
+        while self.auto_grow and (res == R_TABLE_FULL).any():
+            # Discard the starved application entirely, grow the PRE-batch
+            # state, and replay the whole batch: the visible history is one
+            # clean lane-order linearization on the grown table (re-applying
+            # only the starved lanes would order them after lanes that
+            # observed their absence — a history no linearization allows).
+            base = self._grow(base, 2 * state.capacity)
+            self.grow_events += 1
+            state, res = self._apply(base, batch)
+            res = np.asarray(res)
+        self.state = state
+        return res
 
     def get_path(self, k: int, l: int, max_rounds: int = 64):
-        return get_path_session(lambda: self.state, k, l, max_rounds=max_rounds)
+        if self.mesh is None:
+            return get_path_session(lambda: self.state, k, l, max_rounds=max_rounds)
+        out, rounds = self.get_paths([(k, l)], max_rounds=max_rounds)
+        found, keys = out[0]
+        pad = np.full((self.state.capacity,), -1, np.int32)
+        pad[: len(keys)] = keys
+        return PathResult(jnp.asarray(found), jnp.int32(len(keys)),
+                          jnp.asarray(pad), jnp.int32(rounds))
 
     def get_paths(self, pairs: list, max_rounds: int = 64):
         """Batched reachability: Q queries answered under ONE shared double
         collect, traversed by the fused multi-source BFS engine (DESIGN.md
-        §7) — the serving-side surface a query front-end batches into.
+        §7; distributed per-shard form on a mesh, DESIGN.md §8) — the
+        serving-side surface a query front-end batches into.
         Returns ([(found, keys)] per pair, rounds)."""
         return get_paths_session(lambda: self.state, pairs,
                                  max_rounds=max_rounds,
@@ -110,5 +165,7 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         tok = jnp.argmax(tok_logits, axis=-1).astype(jnp.int32)
         stats.decode_steps += 1
         stats.decode_tokens += b
+    if graph is not None:
+        stats.grow_events = graph.grow_events
     stats.wall_s = time.time() - t0
     return out, stats

@@ -1,0 +1,130 @@
+"""grow() and auto-grow coverage (the paper's "unbounded" property).
+
+Capacity doubling must preserve keys, edges, ecnt/vver (so outstanding
+double collects stay valid over the surviving slots) and reachability
+answers — on dense AND mesh-partitioned state — and the serving surface
+(GraphCoServer.submit) must grow instead of surfacing R_TABLE_FULL.
+"""
+import numpy as np
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, R_TABLE_FULL, R_TRUE,
+    apply_ops_fast, get_path, grow, make_graph, make_op_batch,
+    num_edges, num_vertices,
+)
+from repro.core import partition
+from repro.core.distributed import make_graph_mesh
+from repro.runtime.serve_loop import GraphCoServer
+
+
+def _ring(n, cap):
+    ops = [(OP_ADD_V, k) for k in range(n)]
+    ops += [(OP_ADD_E, k, (k + 1) % n) for k in range(n)]
+    g, res = apply_ops_fast(make_graph(cap), make_op_batch(ops))
+    assert not (np.asarray(res) == R_TABLE_FULL).any()
+    return g
+
+
+def test_grow_preserves_state_and_reachability():
+    g = _ring(8, 8)  # full table
+    g2 = grow(g, 32)
+    assert g2.capacity == 32
+    # surviving slots keep keys, liveness, versions and edges bit-for-bit
+    for name, a, b in zip(g._fields, g, g2):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.ndim == 1:
+            np.testing.assert_array_equal(a, b[:8], err_msg=name)
+        else:
+            np.testing.assert_array_equal(a, b[:8, :8], err_msg=name)
+    assert int(num_vertices(g2)) == 8 and int(num_edges(g2)) == 8
+    pr = get_path(g2, 0, 5)
+    assert bool(pr.found) and int(pr.length) == 6  # around the ring
+    # new slots are free and usable
+    g3, res = apply_ops_fast(g2, make_op_batch([(OP_ADD_V, 100), (OP_ADD_E, 100, 0)]))
+    assert [int(x) for x in np.asarray(res)][0] == R_TRUE
+    assert bool(get_path(g3, 100, 5).found)
+
+
+def test_grow_noop_when_not_larger():
+    g = _ring(4, 16)
+    assert grow(g, 8) is g
+
+
+def test_sharded_grow_matches_dense_and_preserves_sharding():
+    mesh = make_graph_mesh()
+    g = _ring(8, 8)
+    s = partition.shard_state(mesh, g)
+    s2 = partition.grow(s, 32)
+    assert isinstance(s2, partition.ShardedGraphState)
+    assert s2.capacity == 32 and s2.mesh is mesh
+    d2 = grow(g, 32)
+    for name, a, b in zip(d2._fields, d2, partition.unshard(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    # growth target is rounded up to a shard multiple
+    s3 = partition.grow(s, 33)
+    assert s3.capacity % s3.num_shards == 0 and s3.capacity >= 33
+
+
+def test_server_submit_autogrows_instead_of_failing():
+    srv = GraphCoServer(capacity=4)
+    res = srv.submit([(OP_ADD_V, k) for k in range(10)])
+    assert not (res == R_TABLE_FULL).any()
+    assert (res == R_TRUE).all()          # every starved lane was re-applied
+    assert srv.state.capacity >= 10 and srv.grow_events >= 1
+    res = srv.submit([(OP_ADD_E, k, k + 1) for k in range(9)])
+    assert not (res == R_TABLE_FULL).any()
+    out, _ = srv.get_paths([(0, 9)])
+    assert out[0] == (True, list(range(10)))
+
+
+def test_server_submit_autogrow_replays_dependent_lanes():
+    """Regression: a lane that failed only because an earlier lane in the
+    SAME batch was starved of slots must succeed after the auto-grow replay
+    — no cascaded VERTEX-NOT-PRESENT leaks to the client."""
+    from repro.core import R_EDGE_ADDED
+
+    srv = GraphCoServer(capacity=4)
+    srv.submit([(OP_ADD_V, k) for k in range(4)])       # table now full
+    res = srv.submit([(OP_ADD_V, 9), (OP_ADD_E, 9, 0)])
+    assert [int(x) for x in res] == [R_TRUE, R_EDGE_ADDED]
+    out, _ = srv.get_paths([(9, 0)])
+    assert out[0] == (True, [9, 0])
+
+
+def test_server_submit_mixed_batch_autogrows_to_full_success():
+    """Vertices and their edges in ONE batch across a grow boundary."""
+    srv = GraphCoServer(capacity=4)
+    res = srv.submit([(OP_ADD_V, k) for k in range(10)]
+                     + [(OP_ADD_E, k, k + 1) for k in range(9)])
+    assert not (res == R_TABLE_FULL).any()
+    assert (res == R_TRUE)[:10].all()
+    out, _ = srv.get_paths([(0, 9)])
+    assert out[0] == (True, list(range(10)))
+
+
+def test_server_submit_autogrow_disabled_surfaces_table_full():
+    srv = GraphCoServer(capacity=4, auto_grow=False)
+    res = srv.submit([(OP_ADD_V, k) for k in range(6)])
+    assert (res == R_TABLE_FULL).any()
+    assert srv.state.capacity == 4
+
+
+def test_sharded_server_submit_autogrows():
+    mesh = make_graph_mesh()
+    size = int(mesh.shape["rows"])
+    cap0 = 8 * size
+    srv = GraphCoServer(capacity=cap0, mesh=mesh)
+    n = cap0 + 3
+    res = srv.submit([(OP_ADD_V, k) for k in range(n)])
+    assert not (res == R_TABLE_FULL).any()
+    assert (res == R_TRUE).all()
+    res = srv.submit([(OP_ADD_E, k, k + 1) for k in range(n - 1)])
+    assert not (res == R_TABLE_FULL).any()
+    assert srv.state.capacity >= n
+    assert srv.state.capacity % size == 0
+    out, _ = srv.get_paths([(0, n - 1), (n - 1, 0)])
+    assert out[0] == (True, list(range(n)))
+    assert out[1] == (False, [])
+    # single-query surface on the sharded server
+    pr = srv.get_path(0, n - 1)
+    assert bool(pr.found) and int(pr.length) == n

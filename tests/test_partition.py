@@ -1,0 +1,175 @@
+"""Mesh-partitioned graph state tests (core/partition.py, DESIGN.md §8).
+
+In-process tests run on the ambient mesh (1 device in the plain container;
+8 shards under CI's ``--xla_force_host_platform_device_count=8`` job); the
+subprocess test forces 8 shards regardless, mirroring tests/test_distributed.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, OP_REM_E, OP_REM_V,
+    GraphOracle, apply_ops_fast, collect_batch, compare_collect_batches,
+    get_paths_session, make_graph, make_op_batch,
+)
+from repro.core import partition
+from repro.core.distributed import AXIS, make_graph_mesh
+from repro.parallel.sharding import graph_state_specs
+
+
+def _chain_batches(n):
+    return ([(OP_ADD_V, k) for k in range(n)]
+            + [(OP_ADD_E, k, k + 1) for k in range(n - 1)])
+
+
+def test_shard_state_roundtrip_and_specs():
+    mesh = make_graph_mesh()
+    g, _ = apply_ops_fast(make_graph(32), make_op_batch(_chain_batches(6)))
+    s = partition.shard_state(mesh, g)
+    specs = graph_state_specs()
+    assert specs["adj"] == type(specs["adj"])(AXIS, None)
+    back = partition.unshard(s)
+    for name, a, b in zip(g._fields, g, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_shard_state_rejects_indivisible_capacity():
+    mesh = make_graph_mesh()
+    size = int(mesh.shape[AXIS])
+    if size == 1:
+        pytest.skip("every capacity divides a 1-device mesh")
+    with pytest.raises(ValueError):
+        partition.shard_state(mesh, make_graph(size * 8 + 1))
+
+
+def test_sharded_query_session_matches_oracle():
+    mesh = make_graph_mesh()
+    oracle = GraphOracle(32)
+    ops = _chain_batches(6) + [(OP_ADD_E, 5, 0), (OP_REM_E, 2, 3)]
+    oracle.apply_batch([op + (-1,) * (4 - len(op)) for op in ops])
+    g, _ = apply_ops_fast(make_graph(32), make_op_batch(ops))
+    s = partition.shard_state(mesh, g)
+    pairs = [(0, 5), (3, 1), (4, 4), (0, 9)]
+    out, rounds = get_paths_session(lambda: s, pairs)
+    assert rounds == 2
+    for (found, keys), (a, b) in zip(out, pairs):
+        assert found == oracle.reachable(a, b), (a, b)
+        if found:
+            assert oracle.is_valid_path(keys, a, b)
+
+
+def test_sharded_collect_mutation_between_collects_forces_retry():
+    """A mutation landing between the two collects must flip the comparison
+    false on sharded state (the §3.5 adversary, replicated-metadata form)."""
+    mesh = make_graph_mesh()
+    g, _ = apply_ops_fast(make_graph(32), make_op_batch(_chain_batches(5)))
+    s1 = partition.shard_state(mesh, g)
+    c1 = collect_batch(s1, [0], [4])
+    s2, _ = partition.apply_ops_fast(s1, make_op_batch([(OP_REM_E, 2, 3)]))
+    s3, _ = partition.apply_ops_fast(s2, make_op_batch([(OP_ADD_E, 2, 3)]))
+    # adjacency restored bit-identically — only the version vector moved
+    np.testing.assert_array_equal(
+        np.asarray(partition.unshard(s1).adj), np.asarray(partition.unshard(s3).adj))
+    c2 = collect_batch(s3, [0], [4])
+    assert not bool(compare_collect_batches(c1, c2))
+    c3 = collect_batch(s3, [0], [4])
+    assert bool(compare_collect_batches(c2, c3))
+
+
+def test_sharded_session_retries_until_quiescent():
+    mesh = make_graph_mesh()
+    g, _ = apply_ops_fast(make_graph(32), make_op_batch(_chain_batches(5)))
+    states = [partition.shard_state(mesh, g)]
+    toggles = [(OP_REM_E, 2, 3), (OP_ADD_E, 2, 3)]
+    calls = {"n": 0}
+
+    def fetch():
+        i = calls["n"]
+        calls["n"] += 1
+        if 0 < i <= len(toggles):
+            st, _ = partition.apply_ops_fast(states[-1], make_op_batch([toggles[i - 1]]))
+            states.append(st)
+        return states[-1]
+
+    out, rounds = get_paths_session(fetch, [(0, 4)], max_rounds=32)
+    assert out[0][0] and out[0][1] == [0, 1, 2, 3, 4]
+    assert rounds == 4  # c1!=c2 (rem), c2!=c3 (add), c3==c4 (quiet)
+
+
+def test_sharded_compact_frees_slots():
+    mesh = make_graph_mesh()
+    ops = _chain_batches(4) + [(OP_REM_V, 1)]
+    g, _ = apply_ops_fast(make_graph(32), make_op_batch(ops))
+    s, _ = partition.apply_ops_fast(
+        partition.shard_state(mesh, make_graph(32)), make_op_batch(ops))
+    from repro.core.ops import compact as dense_compact
+
+    dc = dense_compact(g)
+    sc = partition.compact(s)
+    for name, a, b in zip(dc._fields, dc, partition.unshard(sc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_sharded_multi_bfs_pallas_backend_per_shard():
+    """backend="pallas" drives the bfs_multi_step kernel on each shard's row
+    slice; results must equal the jnp sharded path bit for bit."""
+    mesh = make_graph_mesh()
+    ops = _chain_batches(8) + [(OP_ADD_E, 7, 0), (OP_REM_E, 3, 4)]
+    s, _ = partition.apply_ops_fast(
+        partition.shard_state(mesh, make_graph(32)), make_op_batch(ops))
+    srcs = np.asarray([0, 2, 5], np.int32)
+    dsts = np.asarray([7, -1, 1], np.int32)
+    a = partition.multi_bfs(s, srcs, dsts, backend="jnp")
+    b = partition.multi_bfs(s, srcs, dsts, backend="pallas")
+    for name, xa, xb in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb), err_msg=name)
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import numpy as np, random
+    import jax
+    from repro.core import *
+    from repro.core import partition
+    from repro.core.distributed import make_graph_mesh
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_graph_mesh()
+    random.seed(7)
+    CAP = 64
+    gd = make_graph(CAP)
+    gs = partition.shard_state(mesh, gd)
+    for _ in range(6):
+        ops = [(random.choice([OP_ADD_V, OP_REM_V, OP_ADD_E, OP_REM_E]),
+                random.randrange(12), random.randrange(12), -1)
+               for _ in range(12)]
+        b = make_op_batch(ops)
+        gd, rd = apply_ops_fast(gd, b)
+        gs, rs = partition.apply_ops_fast(gs, b)
+        assert np.array_equal(np.asarray(rd), np.asarray(rs)), (np.asarray(rd), np.asarray(rs))
+    for name, a, c in zip(gd._fields, gd, partition.unshard(gs)):
+        assert np.array_equal(np.asarray(a), np.asarray(c)), name
+    pairs = [(0, 7), (3, 11), (5, 5), (2, 9)]
+    out_d, _ = get_paths_session(lambda: gd, pairs)
+    out_s, _ = get_paths_session(lambda: gs, pairs)
+    assert out_d == out_s, (out_d, out_s)
+    gg = partition.grow(gs, 100)       # rounds up to 104 = 8 * 13
+    assert gg.capacity % 8 == 0 and gg.capacity >= 100
+    print("PARTITION_SUBPROCESS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_eight_shard_partition_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PARTITION_SUBPROCESS_OK" in r.stdout

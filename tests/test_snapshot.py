@@ -107,6 +107,62 @@ def test_interleaved_getpath_in_program():
     assert int(pr.rounds) >= 2
 
 
+def test_interleaved_getpath_mutation_between_collects_forces_retry():
+    """Satellite of DESIGN.md §8 hardening: every round whose mutation batch
+    lands in the query's dependency set must flip compare_collects false, so
+    the answer only freezes once the graph goes quiet — the exact round
+    count is observable in pr.rounds (collects = rounds + the initial one).
+    """
+    g = chain(4, cap=16)
+    lanes = 4
+    rounds = [
+        [(OP_REM_E, 1, 2)],   # break the path        -> c1 != c0
+        [(OP_ADD_E, 1, 2)],   # restore it (same adj) -> c2 != c1 (ecnt moved)
+        [(OP_NOP,)],          # quiet                 -> c3 == c2: freeze
+        [(OP_NOP,)],
+    ]
+    batches = [make_op_batch(r, lanes) for r in rounds]
+    batch_t = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    state, pr, _ = interleaved_getpath(g, batch_t, 0, 3)
+    assert bool(pr.found)
+    assert [int(x) for x in np.asarray(pr.keys)[: int(pr.length)]] == [0, 1, 2, 3]
+    # matched at the 3rd mutation round: c0..c3 -> 4 collects
+    assert int(pr.rounds) == 4
+
+
+def test_interleaved_getpath_quiescent_matches_first_double_collect():
+    """Control for the retry test: with no effective mutations the very
+    first double collect matches (2 collects)."""
+    g = chain(4, cap=16)
+    lanes = 2
+    batches = [make_op_batch([(OP_NOP,)], lanes) for _ in range(3)]
+    batch_t = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    _, pr, _ = interleaved_getpath(g, batch_t, 0, 3)
+    assert bool(pr.found) and int(pr.rounds) == 2
+
+
+def test_session_mutation_between_collects_forces_exact_retry():
+    """Host-level form: one mutation lands between collect 1 and collect 2,
+    so the session needs exactly 3 collects (c1 != c2, c2 == c3)."""
+    g = chain(5)
+    g2, _ = apply_ops_like(g, [(OP_ADD_E, 0, 2)])
+    seq = [g, g2, g2, g2]
+    calls = {"n": 0}
+
+    def fetch():
+        s = seq[min(calls["n"], len(seq) - 1)]
+        calls["n"] += 1
+        return s
+
+    pr = get_path_session(fetch, 0, 4, max_rounds=16)
+    assert bool(pr.found) and int(pr.rounds) == 3
+
+
+def apply_ops_like(g, ops):
+    from repro.core import apply_ops_fast
+    return apply_ops_fast(g, make_op_batch(ops))
+
+
 @settings(max_examples=12, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from([OP_ADD_E, OP_REM_E]),
                           st.integers(0, 5), st.integers(0, 5)),
