@@ -42,27 +42,56 @@ def run_mix(engine, g0, mix, lanes, nv, *, total_ops=2048, getpath_frac=0.02, se
             found += int(bool(pr.found))
     jax.block_until_ready(state["g"].adj)
     dt = time.perf_counter() - t0
-    return (n_ops + n_queries) / dt, n_queries, rounds / max(n_queries, 1), found
+    return ((n_ops + n_queries) / dt, n_queries, rounds / max(n_queries, 1),
+            found, n_ops + n_queries)
 
 
-def main(quick=False):
+def json_rows(results, figure="fig10_getpath"):
+    """Long-format records in the shared fig_multiquery schema (lanes as
+    ``q``, coarselock as baseline; extra columns carry the query stats)."""
+    out = []
+    for (mix_name, lanes), per_engine in results.items():
+        base_tput = per_engine["coarselock"][0]
+        for eng, (tput, nq, avg_r, _found, steps) in per_engine.items():
+            out.append({
+                "figure": figure,
+                "q": lanes,
+                "engine": eng,
+                "seconds": steps / tput,
+                "steps": steps,
+                "steps_per_s": tput,
+                "speedup_vs_baseline": tput / base_tput,
+                "mix": mix_name,
+                "queries": nq,
+                "rounds": avg_r,
+            })
+    return out
+
+
+def main(quick=False, rows_out=None):
     g0, oracle, nv = seed_graph()
     total = 512 if quick else 2048
     out = []
+    results = {}
     print(f'{"mix":8s} {"lanes":>6s} {"engine":>12s} {"ops/s":>10s} '
           f'{"queries":>8s} {"avg_rounds":>10s}')
     for mix_name, mix in MIXES.items():
         for lanes in (16, 64, 256):
+            per_engine = {}
             for name, engine in (("nonblocking", apply_ops_fast),
                                  ("coarselock", apply_ops)):
-                tput, nq, avg_r, found = run_mix(engine, g0, mix, lanes, nv,
-                                                 total_ops=total)
+                tput, nq, avg_r, found, steps = run_mix(
+                    engine, g0, mix, lanes, nv, total_ops=total)
+                per_engine[name] = (tput, nq, avg_r, found, steps)
                 print(f"{mix_name:8s} {lanes:6d} {name:>12s} {tput:10.0f} "
                       f"{nq:8d} {avg_r:10.2f}")
                 out.append(f"fig10/{mix_name}/{name}/lanes{lanes},"
                            f"{1e6/tput:.1f},queries={nq};rounds={avg_r:.2f}")
+            results[(mix_name, lanes)] = per_engine
         if quick:
             break
+    if rows_out is not None:
+        rows_out.extend(json_rows(results))
     return out
 
 

@@ -108,8 +108,33 @@ def run(lanes_list=(1, 4, 16, 64, 256), total_ops=2048, quick=False):
     return rows
 
 
-def main(quick=False):
-    rows = run(total_ops=1024 if quick else 4096, quick=quick)
+def json_rows(rows, total_ops, figure="fig9_throughput"):
+    """Long-format records in the schema shared with fig_multiquery (one
+    per engine per sweep point; lanes play the batch-size role of ``q``,
+    sequential oracle is the baseline) so benchmarks/run.py --json
+    aggregates all figures uniformly."""
+    out = []
+    for mix, lanes, f, l, s in rows:
+        for eng, tput in (("nonblocking", f), ("coarselock", l),
+                          ("sequential", s)):
+            out.append({
+                "figure": figure,
+                "q": lanes,
+                "engine": eng,
+                "seconds": total_ops / tput,
+                "steps": total_ops,
+                "steps_per_s": tput,
+                "speedup_vs_baseline": tput / s,
+                "mix": mix,
+            })
+    return out
+
+
+def main(quick=False, rows_out=None):
+    total_ops = 1024 if quick else 4096
+    rows = run(total_ops=total_ops, quick=quick)
+    if rows_out is not None:
+        rows_out.extend(json_rows(rows, total_ops))
     print(f'{"mix":8s} {"lanes":>6s} {"nonblocking":>12s} {"coarselock":>12s} '
           f'{"sequential":>12s} {"nb/seq":>7s}')
     out = []

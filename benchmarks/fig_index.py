@@ -1,0 +1,180 @@
+"""Reachability-index figure: index fast path vs fused BFS, read-heavy sweep.
+
+The serving claim of DESIGN.md §9 quantified: a batch of Q reachability
+queries against a FRESH index costs one O(V) version compare plus one
+[Q, L] label_join contraction, while the fused-BFS session pays a
+double collect — two multi-superstep [Q,V] @ [V,V] traversals. The sweep
+crosses Q ∈ {16, 64} with the mutation rate (mutations per query) in
+{0, 1%, 10%}: every mutation round dirties the epoch, forcing the index
+engine to pay an incremental ``refresh`` (re-traversing only the affected
+landmark closures) before it can serve again, while the fused engine's
+cost is mutation-oblivious. Both engines replay the IDENTICAL pre-drawn
+workload schedule.
+
+Expected shape: the index engine wins by a widening margin as the query
+share grows (read-heavy serving — the regime the ROADMAP's
+millions-of-users query mix lives in), and degrades toward parity as
+mutations approach the query rate and refresh dominates. Rows use the
+fig_multiquery long-format JSON schema (plus a ``mut`` column) so
+benchmarks/run.py --json aggregates every figure uniformly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, apply_ops_fast, get_paths_session, make_graph,
+    make_op_batch,
+)
+from repro.index import build_index, index_fresh, reach_session, refresh
+from benchmarks.fig9_throughput import gen_ops
+
+QS = (16, 64)
+MUTS = (0.0, 0.01, 0.1)
+ENGINES = ("index", "fused")
+MIX = (1, 1, 0, 6, 4, 0)          # mutating mix: mostly edge flips
+
+
+def seed_sparse_graph(nv=200, cap=256, ne=320, seed=9):
+    """Moderate-density serving graph (~1.6 avg out-degree): reachability is
+    varied (not one giant SCC) and landmark closures are shallow — the
+    regime where incremental refresh re-traverses few landmarks."""
+    rng = np.random.default_rng(seed)
+    g = make_graph(cap)
+    ops = [(OP_ADD_V, k) for k in range(nv)]
+    ops += [(OP_ADD_E, int(a), int(b)) for a, b in rng.integers(0, nv, (ne, 2))]
+    for i in range(0, len(ops), 256):
+        g, _ = apply_ops_fast(g, make_op_batch(ops[i:i + 256], 256))
+    return g, nv
+
+
+def make_schedule(rng, q, mut, nv, rounds):
+    """Pre-draw (mutation ops or None, Q query pairs) per round so both
+    engines serve the exact same traffic. The mutated-lane count per round
+    is Binomial(q, mut), so ``mut`` really is the expected mutations per
+    query across the whole schedule (no saturation at high mut * q)."""
+    sched = []
+    for _ in range(rounds):
+        k = int(rng.binomial(q, mut))
+        ops = gen_ops(rng, MIX, k, nv) if k else None
+        pairs = [tuple(int(x) for x in rng.integers(0, nv, 2))
+                 for _ in range(q)]
+        sched.append((ops, pairs))
+    return sched
+
+
+def _serve_index(g0, idx0, sched):
+    state = {"g": g0}
+    idx = idx0
+    hits = misses = refreshes = 0
+    for ops, pairs in sched:
+        if ops is not None:
+            state["g"], _ = apply_ops_fast(state["g"], make_op_batch(ops))
+        if not index_fresh(idx, state["g"]):
+            idx, _ = refresh(idx, state["g"])
+            refreshes += 1
+        res = reach_session(lambda: state["g"], idx, pairs)
+        hits += res.from_index
+        misses += res.fellback
+    jax.block_until_ready(state["g"].adj)
+    return hits, misses, refreshes
+
+
+def _serve_fused(g0, sched):
+    state = {"g": g0}
+    for ops, pairs in sched:
+        if ops is not None:
+            state["g"], _ = apply_ops_fast(state["g"], make_op_batch(ops))
+        get_paths_session(lambda: state["g"], pairs)
+    jax.block_until_ready(state["g"].adj)
+
+
+def _time(fn, reps):
+    fn()  # warmup: jit everything on this workload shape
+    t0 = time.perf_counter()
+    last = None
+    for _ in range(reps):
+        last = fn()
+    return (time.perf_counter() - t0) / reps, last
+
+
+def run_sweep(*, reps=3, seed=11, quick=False):
+    g0, nv = seed_sparse_graph()
+    idx0 = build_index(g0)     # serving starts warm: build cost is amortized
+    rounds = 3 if quick else 8
+    rows = []
+    for q in QS[:1] if quick else QS:
+        for mut in MUTS[:2] if quick else MUTS:
+            sched = make_schedule(np.random.default_rng(seed), q, mut, nv,
+                                  rounds)
+            t_index, (hits, misses, refreshes) = _time(
+                lambda: _serve_index(g0, idx0, sched), reps)
+            t_fused, _ = _time(lambda: _serve_fused(g0, sched), reps)
+            steps = rounds * q
+            rows.append({
+                "q": q,
+                "mut": mut,
+                "index_s": t_index,
+                "fused_s": t_fused,
+                "steps": steps,
+                "index_steps_per_s": steps / t_index,
+                "fused_steps_per_s": steps / t_fused,
+                "speedup": t_fused / t_index,
+                "hits": hits,
+                "misses": misses,
+                "refreshes": refreshes,
+            })
+    return rows
+
+
+def json_rows(rows, figure="index", engines=ENGINES):
+    """Long-format records in the schema shared with fig_multiquery /
+    fig_sharded (DESIGN.md §9 figure), plus the ``mut`` sweep column."""
+    out = []
+    for r in rows:
+        base_s = r[f"{engines[-1]}_s"]
+        for eng in engines:
+            out.append({
+                "figure": figure,
+                "q": r["q"],
+                "engine": eng,
+                "seconds": r[f"{eng}_s"],
+                "steps": r["steps"],
+                "steps_per_s": r[f"{eng}_steps_per_s"],
+                "speedup_vs_baseline": base_s / r[f"{eng}_s"],
+                "mut": r["mut"],
+            })
+    return out
+
+
+def main(quick=False, rows_out=None):
+    out = []
+    print(f'{"Q":>4s} {"mut":>6s} {"engine":>6s} {"ms/round":>10s} '
+          f'{"queries/s":>12s} {"speedup":>8s} {"hit/miss/refresh":>18s}')
+    rows = run_sweep(quick=quick)
+    if rows_out is not None:
+        rows_out.extend(json_rows(rows))
+    for r in rows:
+        hmr = f'{r["hits"]}/{r["misses"]}/{r["refreshes"]}'
+        print(f'{r["q"]:4d} {r["mut"]:6.2f} {"index":>6s} '
+              f'{r["index_s"]*1e3:10.2f} {r["index_steps_per_s"]:12.0f} '
+              f'{r["speedup"]:7.2f}x {hmr:>18s}')
+        print(f'{r["q"]:4d} {r["mut"]:6.2f} {"fused":>6s} '
+              f'{r["fused_s"]*1e3:10.2f} {r["fused_steps_per_s"]:12.0f} '
+              f'{"":>8s} {"":>18s}')
+        out.append(f'index/fast/q{r["q"]}/mut{r["mut"]},'
+                   f'{r["index_s"]*1e6:.1f},'
+                   f'queries_per_s={r["index_steps_per_s"]:.0f};'
+                   f'speedup_vs_fused={r["speedup"]:.2f};'
+                   f'hits={r["hits"]};misses={r["misses"]}')
+        out.append(f'index/fused_ref/q{r["q"]}/mut{r["mut"]},'
+                   f'{r["fused_s"]*1e6:.1f},'
+                   f'queries_per_s={r["fused_steps_per_s"]:.0f}')
+    return out
+
+
+if __name__ == "__main__":
+    main()

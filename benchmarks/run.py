@@ -1,18 +1,89 @@
 """Benchmark driver — one function per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
-  python -m benchmarks.run [--quick] [--json PATH]
+  python -m benchmarks.run [--quick] [--json PATH] [--smoke]
 
 ``--json`` additionally writes the sweep figures' rows as one uniform
-long-format record list ({figure, q, engine, seconds, steps, steps_per_s,
-speedup_vs_baseline}) — every figure exposing ``json_rows`` feeds the same
-schema, so downstream plotting aggregates them without per-figure cases.
+long-format record list — every registered figure emits records with the
+same required keys ({figure, q, engine, seconds, steps, steps_per_s,
+speedup_vs_baseline}, figure-specific extras allowed), so downstream
+plotting aggregates them without per-figure cases — and, on FULL runs
+only, drops one ``BENCH_<figure>.json`` per figure at the repo root,
+recording the perf trajectory PR over PR (quick/smoke numbers are not
+comparable and never touch those records).
+
+``--smoke`` is the CI gate: quick mode, every registered sweep figure must
+run and emit schema-valid JSON (kernel/roofline sections are skipped —
+they are not sweep figures).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Registered sweep figures: (figure-name prefix emitted in records,
+# module name, banner). --smoke asserts each emits >= 1 schema-valid row.
+FIGURES = (
+    ("fig9_throughput", "fig9_throughput",
+     "Fig. 9 analogue — throughput vs lanes, 3 mixes, no GetPath"),
+    ("fig10_getpath", "fig10_getpath",
+     "Fig. 10 analogue — mixes + 2% GetPath (double-collect sessions)"),
+    ("multiquery", "fig_multiquery",
+     "Multi-query analogue — fused multi-source BFS vs vmap, Q sweep"),
+    ("sharded", "fig_sharded",
+     "Sharded analogue — mesh-partitioned engines vs dense (DESIGN.md §8)"),
+    ("index", "fig_index",
+     "Reachability index — 2-hop label fast path vs fused BFS (DESIGN.md §9)"),
+)
+
+REQUIRED_KEYS = {
+    "figure": str,
+    "q": (int,),
+    "engine": str,
+    "seconds": (int, float),
+    "steps": (int, float),
+    "steps_per_s": (int, float),
+    "speedup_vs_baseline": (int, float),
+}
+
+
+def validate_records(records: list[dict], expect_figures) -> list[str]:
+    """Schema check for the uniform long format; returns human-readable
+    failures (empty = valid)."""
+    errors = []
+    seen = set()
+    for i, rec in enumerate(records):
+        for key, types in REQUIRED_KEYS.items():
+            if key not in rec:
+                errors.append(f"record {i}: missing key {key!r} ({rec})")
+            elif not isinstance(rec[key], types):
+                errors.append(f"record {i}: {key}={rec[key]!r} is not {types}")
+        if isinstance(rec.get("figure"), str):
+            seen.add(rec["figure"])
+    for name in expect_figures:
+        if not any(fig == name or fig.startswith(name + "_") for fig in seen):
+            errors.append(f"registered figure {name!r} emitted no records "
+                          f"(saw {sorted(seen)})")
+    return errors
+
+
+def write_bench_files(records: list[dict]) -> list[str]:
+    """One BENCH_<figure>.json per figure at the repo root — the
+    longitudinal perf record the ROADMAP's trajectory is judged by."""
+    by_fig: dict[str, list[dict]] = {}
+    for rec in records:
+        by_fig.setdefault(rec["figure"], []).append(rec)
+    written = []
+    for fig, rows in sorted(by_fig.items()):
+        path = ROOT / f"BENCH_{fig}.json"
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(rows, f, indent=1)
+        written.append(str(path))
+    return written
 
 
 def main() -> None:
@@ -20,63 +91,72 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write sweep rows as uniform JSON records")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: quick sweeps only, assert every figure "
+                         "emits schema-valid JSON")
     args = ap.parse_args()
+    quick = args.quick or args.smoke
 
     csv: list[str] = []
     json_records: list[dict] = []
 
-    print("=" * 72)
-    print("Fig. 9 analogue — throughput vs lanes, 3 mixes, no GetPath")
-    print("=" * 72)
-    from benchmarks import fig9_throughput
-    csv += fig9_throughput.main(quick=args.quick)
+    import importlib
 
-    print("\n" + "=" * 72)
-    print("Fig. 10 analogue — mixes + 2% GetPath (double-collect sessions)")
-    print("=" * 72)
-    from benchmarks import fig10_getpath
-    csv += fig10_getpath.main(quick=args.quick)
+    for _name, module, banner in FIGURES:
+        print("=" * 72)
+        print(banner)
+        print("=" * 72)
+        mod = importlib.import_module(f"benchmarks.{module}")
+        csv += mod.main(quick=quick, rows_out=json_records)
+        print()
 
-    print("\n" + "=" * 72)
-    print("Multi-query analogue — fused multi-source BFS vs vmap, Q sweep")
-    print("=" * 72)
-    from benchmarks import fig_multiquery
-    csv += fig_multiquery.main(quick=args.quick, rows_out=json_records)
+    if not args.smoke:
+        print("=" * 72)
+        print("BFS kernel — structural intensity + jnp-path wall time")
+        print("=" * 72)
+        from benchmarks import kernel_bench
+        csv += kernel_bench.main(quick=quick)
 
-    print("\n" + "=" * 72)
-    print("Sharded analogue — mesh-partitioned engines vs dense (DESIGN.md §8)")
-    print("=" * 72)
-    from benchmarks import fig_sharded
-    csv += fig_sharded.main(quick=args.quick, rows_out=json_records)
+        print("\n" + "=" * 72)
+        print("Roofline — per (arch x shape), single-pod 256 chips "
+              "(see EXPERIMENTS.md)")
+        print("=" * 72)
+        from benchmarks import roofline
+        rows = roofline.build_table()
+        print(roofline.format_table(rows))
+        for r in rows:
+            if not r.get("skipped"):
+                csv.append(f'roofline/{r["arch"]}/{r["shape"]},'
+                           f'{r["compute_s"]*1e6:.1f},'
+                           f'dominant={r["dominant"]};frac={r["roofline_fraction"]:.3f}')
 
-    print("\n" + "=" * 72)
-    print("BFS kernel — structural intensity + jnp-path wall time")
-    print("=" * 72)
-    from benchmarks import kernel_bench
-    csv += kernel_bench.main(quick=args.quick)
+        print("\n" + "=" * 72)
+        print("CSV (name,us_per_call,derived)")
+        print("=" * 72)
+        for line in csv:
+            print(line)
 
-    print("\n" + "=" * 72)
-    print("Roofline — per (arch x shape), single-pod 256 chips (see EXPERIMENTS.md)")
-    print("=" * 72)
-    from benchmarks import roofline
-    rows = roofline.build_table()
-    print(roofline.format_table(rows))
-    for r in rows:
-        if not r.get("skipped"):
-            csv.append(f'roofline/{r["arch"]}/{r["shape"]},'
-                       f'{r["compute_s"]*1e6:.1f},'
-                       f'dominant={r["dominant"]};frac={r["roofline_fraction"]:.3f}')
-
-    print("\n" + "=" * 72)
-    print("CSV (name,us_per_call,derived)")
-    print("=" * 72)
-    for line in csv:
-        print(line)
+    if args.smoke or (args.json and not quick):
+        # one schema gate guards both the CI smoke check and the committed
+        # longitudinal BENCH records a full --json run is about to write
+        errors = validate_records(json_records, [f[0] for f in FIGURES])
+        if errors:
+            print("\n".join(errors), file=sys.stderr)
+            sys.exit(1)
+        print(f"{len(json_records)} records from {len(FIGURES)} figures "
+              f"— schema valid")
 
     if args.json:
         with open(args.json, "w", encoding="utf-8") as f:
             json.dump(json_records, f, indent=1)
         print(f"\nwrote {len(json_records)} sweep records to {args.json}")
+        if quick:
+            # quick/smoke numbers are not comparable run-to-run: never let
+            # them clobber the committed longitudinal BENCH records
+            print("quick/smoke run: BENCH_<figure>.json records not updated")
+        else:
+            for path in write_bench_files(json_records):
+                print(f"wrote {path}")
 
 
 if __name__ == "__main__":

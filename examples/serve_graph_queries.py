@@ -3,9 +3,15 @@
     PYTHONPATH=src python examples/serve_graph_queries.py
 
 The serving runtime interleaves three traffic classes with zero locking:
-LM decode steps, graph mutation batches, and snapshot-consistent GetPath
-queries (the paper's obstruction-free protocol). Reports decode throughput
-and the per-query collect-round counts.
+LM decode steps, graph mutation batches, and snapshot-consistent
+reachability queries. With ``index=True`` the server additionally maintains
+a versioned 2-hop reachability index (DESIGN.md §9): query batches are
+answered from the index whenever its epoch stamp matches the live version
+metadata (the freshness check doubles as the double-collect validation) and
+fall back to the paper's obstruction-free BFS protocol after mutations,
+while ``serve`` refreshes the index in the gaps between decode steps.
+Reports decode throughput, per-query collect rounds, and the index
+hit/miss/refresh balance.
 """
 import numpy as np
 
@@ -23,18 +29,21 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    graph = GraphCoServer(capacity=128)
+    graph = GraphCoServer(capacity=128, index=True)
     graph.submit([(OP_ADD_V, k) for k in range(24)])
     graph.submit([(OP_ADD_E, int(a), int(b))
                   for a, b in rng.integers(0, 24, (40, 2))])
 
     def mutator(i):
+        if i % 4 != 3:        # read-heavy mix: mutate every 4th step only
+            return []
         a, b = (int(x) for x in rng.integers(0, 24, 2))
         return [(OP_ADD_E if rng.random() < 0.6 else OP_REM_E, a, b)]
 
     def queries(i):
-        if i % 3 == 1:
-            return tuple(int(x) for x in rng.integers(0, 24, 2))
+        if i % 3 == 1:        # a BATCH of pairs: index-served when fresh
+            return [tuple(int(x) for x in rng.integers(0, 24, 2))
+                    for _ in range(4)]
         return None
 
     prompts = rng.integers(0, cfg.vocab, (4, 12)).astype(np.int32)
@@ -44,9 +53,11 @@ def main():
     print(f"decoded {stats.decode_tokens} tokens in {stats.wall_s:.2f}s "
           f"({stats.decode_tokens / stats.wall_s:.1f} tok/s)")
     print(f"graph mutations applied: {stats.graph_ops}")
-    print(f"GetPath queries: {stats.getpath_calls} "
-          f"(avg collect rounds {stats.getpath_rounds / max(1, stats.getpath_calls):.2f}; "
-          f"2.0 = clean double collect, >2 = retried past mutations)")
+    print(f"reachability queries: {stats.getpath_calls} "
+          f"(index hits {stats.index_hits}, BFS fallbacks "
+          f"{stats.index_misses}, refreshes {stats.index_refreshes})")
+    counts = graph.get_reach_counts(list(range(6)))
+    print(f"reachable-set sizes of vertices 0..5: {list(counts)}")
 
 
 if __name__ == "__main__":

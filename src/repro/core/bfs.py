@@ -182,9 +182,9 @@ class MultiBFSResult(NamedTuple):
     supersteps: jax.Array  # int32    — shared loop iterations actually run
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend", "parents"))
 def multi_bfs(state: GraphState, src_slots, dst_slots,
-              backend: str = "jnp") -> MultiBFSResult:
+              backend: str = "jnp", parents: bool = True) -> MultiBFSResult:
     """Fused BFS from Q sources with per-query early exit (DESIGN.md §7).
 
     Per-query results are bit-identical to ``jax.vmap(bfs)`` over the same
@@ -197,6 +197,15 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
     contributing work; the loop exits when every query is done.
 
     ``dst_slots[q] < 0`` explores query q's full reachable set.
+
+    ``parents=False`` is closure-only mode (DESIGN.md §9): parent
+    extraction — the [Q,V,V]-shaped masked min that dominates each
+    superstep — is skipped and ``parent`` comes back all -1. found, dist,
+    expanded and steps are bit-identical to the default mode. The
+    reachability-index build drives this: label construction needs
+    closures, never trees. The expansion is the plain frontier matmul
+    regardless of ``backend`` (the Pallas superstep earns its keep on
+    parent extraction; the matmul alone XLA already tiles well).
     """
     src_slots = jnp.asarray(src_slots, jnp.int32)
     dst_slots = jnp.asarray(dst_slots, jnp.int32)
@@ -232,8 +241,13 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
         # single-query loop had terminated.
         f = frontiers & act[:, None]
         expanded = expanded | f
-        new, par = step_fn(f, state.adj, alive, visited)
-        parent = jnp.where(new, par, parent)
+        if parents:
+            new, par = step_fn(f, state.adj, alive, visited)
+            parent = jnp.where(new, par, parent)
+        else:
+            ff = f.astype(jnp.float32)
+            new = ((ff @ state.adj.astype(jnp.float32)) > 0) \
+                & alive[None, :] & ~visited
         dist = jnp.where(new, step + 1, dist)
         visited = visited | new
         steps = steps + act.astype(jnp.int32)

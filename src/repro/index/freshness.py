@@ -1,0 +1,229 @@
+"""Epoch validation: serving from the index as a cached double collect
+(DESIGN.md §9).
+
+The index was built from a consistent snapshot and stamped with that
+state's full ``(ecnt, vver)`` version vector. At serve time we read the
+LIVE replicated version metadata and compare — exactly the check
+``compare_collects`` performs between two collects, with the index stamp
+playing the role of the first collect. Equality proves the graph is
+byte-identical to the build state (counters are monotone, so equal
+versions cannot hide an intervening mutate-and-undo), hence every
+index answer is linearizable at the comparison point. The check is O(V)
+replicated compute on dense AND mesh-sharded states (the metadata is
+replicated by the DESIGN.md §8 placement) — no adjacency traffic at all.
+
+On mismatch the session transparently falls back to the fused BFS double
+collect (``get_paths_session``), which is always correct — the index is a
+pure accelerator, never a semantic dependency. Undecided queries of a
+partial (non-complete) index take the same fallback.
+
+``refresh`` restores freshness incrementally: rows whose versions advanced
+("dirty") implicate only the landmarks whose closures could have changed,
+and the implication argument is direction-asymmetric because versions
+stamp SOURCE rows:
+
+  * forward closures: any new/removed edge on a path from landmark i has a
+    dirty source that i already reached, so
+    ``affected_fwd[i] = any(dirty & fwd[i])`` (plus i's own slot) suffices;
+  * backward closures additionally need a new-edge term — in the reverse
+    graph the dirty endpoint of an edge is its HEAD, so a freshly attached
+    chain x → y →* i is invisible to the first test when x never reached i
+    before. But every newly-reaching path runs through a dirty source, so
+    the extra affected landmarks are exactly those inside the NEW-graph
+    forward closure of the dirty rows: one fused BFS with Q = |dirty|.
+
+Only the affected rows are re-traversed (two fused multi-BFS calls with
+Q = |affected|); the landmark list and hence the canonical pruning order
+stay fixed, so the refreshed index is bit-identical to a full rebuild
+over the same landmarks (tests/test_index.py asserts this).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bfs import multi_bfs
+from repro.core.graph import find_slots, version_vector
+from repro.core.snapshot import get_paths_session
+from repro.index.labels import (
+    ReachIndex,
+    _as_dense,
+    build_index,
+    coverage_complete,
+    pad8,
+    rebuild_rows,
+)
+from repro.index.query import query_reach, reach_counts
+
+
+def index_fresh(index: ReachIndex | None, state) -> bool:
+    """True iff the live version metadata equals the index's build stamp —
+    the second half of the double collect (DESIGN.md §9). Capacity change
+    (grow) is a trivial mismatch."""
+    if index is None:
+        return False
+    if state.capacity != index.capacity:
+        return False
+    return bool(jnp.all(version_vector(state) == index.versions))
+
+
+def affected_landmarks(index: ReachIndex, state, *, backend: str = "jnp"):
+    """(aff_fwd bool[L], aff_bwd bool[L], dirty bool[V]) — the provably
+    sufficient sets of landmark closures to re-traverse (module docstring
+    has the soundness argument for each term)."""
+    vv = np.asarray(version_vector(state))
+    dirty = (vv != np.asarray(index.versions)).any(axis=1)
+    lm = np.asarray(index.landmarks)
+    fwd = np.asarray(index.fwd)
+    bwd = np.asarray(index.bwd)
+    aff_fwd = (fwd & dirty[None, :]).any(axis=1) | dirty[lm]
+    aff_bwd = (bwd & dirty[None, :]).any(axis=1) | dirty[lm]
+    if dirty.any() and lm.size:
+        # new-edge term (reverse-graph asymmetry, see above): any NEWLY
+        # reaching path u →* v_i runs through a dirty source, so the
+        # affected backward closures are exactly the landmarks inside the
+        # NEW-graph forward closure of the dirty rows — one fused BFS with
+        # Q = |dirty| (tiny), instead of a conservative adjacency product
+        # that would implicate every landmark near a dirty hub
+        dslots = pad8(np.nonzero(dirty)[0].astype(np.int32))
+        res = multi_bfs(_as_dense(state), jnp.asarray(dslots),
+                        jnp.full((dslots.size,), -1, jnp.int32),
+                        backend=backend, parents=False)
+        reach_from_dirty = np.asarray((res.dist >= 0).any(axis=0))
+        aff_bwd |= reach_from_dirty[lm]
+    return aff_fwd, aff_bwd, dirty
+
+
+def refresh(index: ReachIndex, state, *, backend: str = "jnp",
+            full_threshold: float = 0.5):
+    """Bring a stale index up to the state's epoch. Returns
+    (index, info) with info = {"mode": "noop"|"incremental"|"full",
+    "rebuilt": #landmark closures re-traversed}.
+
+    ``state`` is a functional snapshot, so build-time consistency is free;
+    the caller swaps the returned index in atomically (a reference swap —
+    queries racing the refresh keep validating against the OLD stamp and
+    simply fall back, which is the non-blocking property at this layer).
+    Rebuilds from scratch (fresh landmark pick) when capacity grew or more
+    than ``full_threshold`` of the closures are affected anyway.
+    """
+    if state.capacity != index.capacity:
+        return (build_index(state, index.requested, backend=backend),
+                {"mode": "full", "rebuilt": index.num_landmarks})
+    aff_fwd, aff_bwd, dirty = affected_landmarks(index, state,
+                                                 backend=backend)
+    if not dirty.any():
+        return index, {"mode": "noop", "rebuilt": 0}
+    if index.requested is None and not coverage_complete(
+            np.asarray(index.landmarks), state.valive, index.capacity):
+        # complete-coverage index: a new alive vertex outside the landmark
+        # set would leave negatives undecided forever — re-pick landmarks
+        # (a pinned or budgeted index keeps its landmark budget instead)
+        return (build_index(state, None, backend=backend),
+                {"mode": "full", "rebuilt": index.num_landmarks})
+    n = int(aff_fwd.sum()) + int(aff_bwd.sum())
+    if index.num_landmarks and n > full_threshold * 2 * index.num_landmarks:
+        return (build_index(state, index.requested, backend=backend),
+                {"mode": "full", "rebuilt": index.num_landmarks})
+    return (rebuild_rows(index, state, aff_fwd, aff_bwd, backend=backend),
+            {"mode": "incremental", "rebuilt": n})
+
+
+@dataclass
+class ReachSessionResult:
+    """Batched reachability answers plus lazy path materialization.
+
+    ``found[q]`` is linearizable: either at the freshness-check point
+    (index-served) or inside its BFS double-collect session (fallback).
+    ``paths()`` runs a fresh fused-BFS session over ALL pairs on demand —
+    an index hit proves reachability without paying for a tree, so the
+    witness path is materialized only when asked for (and linearizes at
+    materialization time, like any later GetPath on a live graph).
+    """
+
+    found: list[bool]
+    from_index: int   # queries answered on the index fast path
+    fellback: int     # queries answered by the BFS double-collect session
+    stale: bool       # an epoch mismatch forced the whole batch to BFS
+    rounds: int       # collect rounds spent in the BFS session (0 if none)
+    _materialize: Callable = field(repr=False, default=lambda: [])
+
+    def paths(self):
+        """[(found, keys)] per pair — lazy witness paths via fused BFS."""
+        return self._materialize()
+
+
+def reach_session(fetch_state, index: ReachIndex | None, pairs, *,
+                  engine: str = "fused", backend: str = "jnp",
+                  join_backend: str = "jnp", max_rounds: int = 64
+                  ) -> ReachSessionResult:
+    """Answer Q (k, l) key-pair reachability queries against a live state
+    reference, preferring the index (DESIGN.md §9).
+
+    Fresh index: slot lookup + one label_join contraction answers every
+    decided query — no traversal; the freshness comparison doubles as the
+    snapshot validation. Undecided queries (partial landmark sets) and the
+    whole batch on a stale epoch run the ordinary obstruction-free
+    ``get_paths_session`` fallback.
+    """
+    pairs = list(pairs)
+    q = len(pairs)
+
+    def materialize():
+        out, _ = get_paths_session(fetch_state, pairs, max_rounds=max_rounds,
+                                   backend=backend, engine=engine)
+        return out
+
+    if q == 0:
+        return ReachSessionResult([], 0, 0, False, 0, materialize)
+    state = fetch_state()
+    if index_fresh(index, state):
+        ks = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        ls = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        reach, decided, _ = query_reach(
+            index, find_slots(state, ks), find_slots(state, ls),
+            backend=join_backend)
+        dec = np.asarray(decided)
+        found = [bool(x) for x in np.asarray(reach)]
+        und = np.nonzero(~dec)[0]
+        rounds = 0
+        if und.size:
+            out, rounds = get_paths_session(
+                fetch_state, [pairs[i] for i in und], max_rounds=max_rounds,
+                backend=backend, engine=engine)
+            for i, (f, _keys) in zip(und, out):
+                found[int(i)] = bool(f)
+        return ReachSessionResult(found, q - int(und.size), int(und.size),
+                                  False, rounds, materialize)
+    out, rounds = get_paths_session(fetch_state, pairs, max_rounds=max_rounds,
+                                    backend=backend, engine=engine)
+    return ReachSessionResult([bool(f) for f, _ in out], 0, q,
+                              index is not None, rounds, materialize)
+
+
+def reach_counts_session(fetch_state, index: ReachIndex | None, keys, *,
+                         backend: str = "jnp"):
+    """Batched ``core.bfs.reachable_count``: (counts int64 np[Q],
+    served_from_index bool). Index-served when fresh and every count is
+    decided (complete cover); otherwise one fused multi-BFS in
+    full-reachable-set mode over the fetched snapshot (a functional
+    snapshot, so a single fetch is already consistent)."""
+    from repro.core import partition
+    from repro.core.partition import ShardedGraphState
+
+    state = fetch_state()
+    slots = find_slots(state, jnp.asarray(list(keys), jnp.int32))
+    if index_fresh(index, state):
+        counts, decided = reach_counts(index, slots)
+        if bool(jnp.all(decided)):
+            return np.asarray(counts), True
+    if isinstance(state, ShardedGraphState):
+        res = partition.multi_bfs(state, slots, jnp.full_like(slots, -1),
+                                  backend=backend)
+    else:  # closure-only: counts never need the BFS tree
+        res = multi_bfs(state, slots, jnp.full_like(slots, -1),
+                        backend=backend, parents=False)
+    return np.asarray(jnp.sum((res.dist >= 0).astype(jnp.int32), axis=1)), False

@@ -1,0 +1,248 @@
+"""Pruned 2-hop landmark labeling built over the fused BFS engine
+(DESIGN.md §9).
+
+A ``ReachIndex`` precomputes reachability through a set of L *landmark*
+vertices (picked by degree — hubs first):
+
+  fwd[i, v] = landmark i reaches v      (forward closure)
+  bwd[i, v] = v reaches landmark i      (backward closure)
+
+Both closures come from the EXISTING fused multi-source BFS: one
+``core.bfs.multi_bfs`` with Q = L sources on the graph for ``fwd`` and one
+on the transposed adjacency for ``bwd`` — the index build is just two
+batched traversals, so every engine property (alive-masked edges, Pallas
+superstep, mesh-sharded form) is inherited rather than re-implemented.
+
+The 2-hop labels are the transposed closures with *canonical-hub pruning*
+(the pruned-landmark-labeling rule applied post-hoc): label entry
+(v, landmark k) is dropped when an earlier landmark j < k already covers
+the (v, v_k) pair via v →* v_j →* v_k (OUT side) or v_k →* v_j →* v (IN
+side). Pruning preserves exactly the *canonical hub* — the smallest-index
+landmark on any s →* hub →* t path — of every covered pair:
+
+  if the canonical hub c of (s, t) lost its OUT bit at s, some j < c had
+  s →* v_j →* v_c, but then v_j →* v_c →* t makes j a smaller hub —
+  contradiction (symmetrically for the IN bit).
+
+So the pruned labels decide the same pairs as the unpruned closures with
+far fewer bits, concentrated on the few high-degree hubs — which is what
+makes the label_join kernel's @pl.when pruned-tile skip effective.
+
+Decidability: a nonempty label intersection proves reachability outright.
+An EMPTY intersection proves unreachability only when the landmark set is
+``complete`` (every alive vertex is a landmark — the default build): then
+t itself is a landmark and s →* t →* t would be a hub. With a partial
+landmark set, empty-intersection queries are *undecided* and the query
+layer reports them for BFS fallback (index/freshness.py).
+
+The index is stamped with the full ``(ecnt, vver)`` version vector of the
+state it was built from: a transitive closure depends on every adjacency
+row, so its "dependency set" is all V slots — the freshness check in
+index/freshness.py compares the stamp against the live metadata exactly
+like the second half of a double collect (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bfs import multi_bfs
+from repro.core.graph import GraphState, version_vector
+
+
+class ReachIndex(NamedTuple):
+    """Versioned 2-hop reachability index (DESIGN.md §9).
+
+    Array fields are device arrays; ``complete`` and ``requested`` are host
+    metadata (the index is orchestrated host-side like the double-collect
+    sessions, with jitted array helpers underneath).
+    """
+
+    landmarks: jax.Array   # int32[L]   — landmark slot ids, degree-ordered
+    out_label: jax.Array   # bool[V, L] — pruned: slot v reaches landmark i
+    in_label: jax.Array    # bool[V, L] — pruned: landmark i reaches slot v
+    fwd: jax.Array         # bool[L, V] — unpruned forward closures (refresh)
+    bwd: jax.Array         # bool[L, V] — unpruned backward closures (refresh)
+    alive: jax.Array       # bool[V]    — liveness at build time
+    versions: jax.Array    # int32[V,2] — (ecnt, vver) build epoch stamp
+    complete: bool         # every alive vertex at build is a landmark
+    requested: int | None  # landmark budget for full rebuilds: None means
+    #                        complete coverage (refresh escalates to keep
+    #                        it complete); an int — including the pinned
+    #                        landmark_slots count — caps rebuild cost
+
+    @property
+    def capacity(self) -> int:
+        return self.alive.shape[0]
+
+    @property
+    def num_landmarks(self) -> int:
+        return self.landmarks.shape[0]
+
+
+def _as_dense(state) -> GraphState:
+    """Dense view of a dense or mesh-sharded state (index build gathers:
+    the backward traversal needs the transposed adjacency, and a transpose
+    of a row-sharded matrix is a full exchange anyway — DESIGN.md §9)."""
+    from repro.core.partition import ShardedGraphState, unshard
+
+    if isinstance(state, ShardedGraphState):
+        return unshard(state)
+    return state
+
+
+def _transposed(state: GraphState) -> GraphState:
+    """The reverse graph: same slots/versions, adjacency transposed.
+    BFS on it from landmark i yields {v : v reaches i} = bwd[i]."""
+    return GraphState(state.vkey, state.valive, state.vver, state.ecnt,
+                      state.adj.T)
+
+
+def pad8(idx: np.ndarray) -> np.ndarray:
+    """Pad an index list up to a multiple of 8 by repeating its first entry
+    (a duplicated BFS source recomputes an identical row — harmless), so
+    varying affected/dirty counts reuse a handful of multi_bfs jit shapes
+    across refreshes instead of recompiling per count."""
+    pad = (-len(idx)) % 8
+    if pad:
+        idx = np.concatenate([idx, np.full((pad,), idx[0], idx.dtype)])
+    return idx
+
+
+def coverage_complete(landmarks: np.ndarray, alive, capacity: int) -> bool:
+    """Every alive vertex is a landmark — the condition under which an
+    empty label intersection is an exact negative (module docstring)."""
+    is_lm = np.zeros((capacity,), bool)
+    is_lm[landmarks] = True
+    return bool(np.all(~np.asarray(alive) | is_lm))
+
+
+def pick_landmarks(state, num_landmarks: int | None = None) -> np.ndarray:
+    """Degree-ordered landmark selection (hubs first, ties by slot).
+
+    ``None`` selects EVERY alive vertex — the complete (exact) index. The
+    degree order then still matters: canonical-hub pruning keeps the
+    smallest-index cover, so hub-heavy orderings concentrate the surviving
+    label bits on the first few landmark columns.
+    """
+    dense = _as_dense(state)
+    alive = np.asarray(dense.valive)
+    m = alive[:, None] & alive[None, :]
+    adj = np.asarray(dense.adj) * m
+    deg = adj.sum(axis=1) + adj.sum(axis=0)
+    slots = np.arange(alive.shape[0])
+    order = np.lexsort((slots, -deg))          # degree desc, slot asc
+    order = order[alive[order]]                # alive only
+    if num_landmarks is not None:
+        order = order[: max(0, int(num_landmarks))]
+    return order.astype(np.int32)
+
+
+@jax.jit
+def _prune(fwd, bwd, landmarks):
+    """Canonical-hub pruning: one [L,L] landmark-closure matrix and two
+    [L,L] @ [L,V] cover products (see module docstring for the exactness
+    argument). Returns (out_label bool[V,L], in_label bool[V,L])."""
+    lgl = fwd[:, landmarks]                    # lgl[k, j] = v_k reaches v_j
+    lt = jnp.tril(jnp.ones_like(lgl), k=-1)    # j < k mask
+    f32 = jnp.float32
+    # IN bit (k, u) = fwd[k, u] redundant iff exists j < k: v_k →* v_j →* u
+    cover_in = ((lgl.astype(f32) * lt.astype(f32)) @ fwd.astype(f32)) > 0
+    # OUT bit (k, u) = bwd[k, u] redundant iff exists j < k: u →* v_j →* v_k
+    cover_out = ((lgl.T.astype(f32) * lt.astype(f32)) @ bwd.astype(f32)) > 0
+    return (bwd & ~cover_out).T, (fwd & ~cover_in).T
+
+
+def _closures(dense: GraphState, lm: jax.Array, backend: str):
+    """Forward and backward closures of the landmark set: two fused
+    multi-BFS calls (Q = L, full-reachable-set mode dst = -1)."""
+    dsts = jnp.full((lm.shape[0],), -1, jnp.int32)
+    f = multi_bfs(dense, lm, dsts, backend=backend, parents=False)
+    b = multi_bfs(_transposed(dense), lm, dsts, backend=backend,
+                  parents=False)
+    return f.dist >= 0, b.dist >= 0
+
+
+def build_index(state, num_landmarks: int | None = None, *,
+                landmark_slots=None, backend: str = "jnp") -> ReachIndex:
+    """Construct a ``ReachIndex`` from a state snapshot (DESIGN.md §9).
+
+    ``state`` is a functional snapshot (dense ``GraphState`` or sharded
+    ``core.partition.ShardedGraphState``), so a single fetch is already a
+    consistent Collect — the concurrent-validation burden moves entirely to
+    serve time, where index/freshness.py compares the stamp taken here
+    against the live metadata like the second collect of a double collect.
+
+    ``num_landmarks=None`` (default) indexes every alive vertex: the index
+    is then *complete* — label intersection decides every pair exactly.
+    A smaller budget trades coverage for build cost; undecided pairs fall
+    back to the fused BFS. ``landmark_slots`` pins an explicit slot list
+    (refresh and tests use it to rebuild with a fixed landmark set).
+    """
+    dense = _as_dense(state)
+    v = dense.capacity
+    if landmark_slots is not None:
+        lm = np.asarray(landmark_slots, np.int32)
+    else:
+        lm = pick_landmarks(dense, num_landmarks)
+    n = lm.shape[0]
+    lm_j = jnp.asarray(lm, jnp.int32)
+    if n == 0:
+        fwd = jnp.zeros((0, v), jnp.bool_)
+        bwd = jnp.zeros((0, v), jnp.bool_)
+    else:
+        fwd, bwd = _closures(dense, lm_j, backend)
+    out_label, in_label = _prune(fwd, bwd, lm_j) if n else (
+        jnp.zeros((v, 0), jnp.bool_), jnp.zeros((v, 0), jnp.bool_))
+    alive = dense.valive
+    complete = coverage_complete(lm, alive, v)
+    return ReachIndex(
+        landmarks=lm_j,
+        out_label=out_label,
+        in_label=in_label,
+        fwd=fwd,
+        bwd=bwd,
+        alive=alive,
+        versions=version_vector(dense),
+        complete=complete,
+        requested=num_landmarks if landmark_slots is None else int(n),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _scatter_rows(mat, rows_idx, rows):
+    return mat.at[rows_idx].set(rows)
+
+
+def rebuild_rows(index: ReachIndex, state, aff_fwd: np.ndarray,
+                 aff_bwd: np.ndarray, backend: str = "jnp") -> ReachIndex:
+    """Recompute only the given landmark rows against ``state`` and
+    re-prune — the array half of ``freshness.refresh`` (which supplies the
+    provably-sufficient affected sets). Landmark list, and therefore the
+    canonical-hub pruning order, stays fixed, so the result is bit-identical
+    to a full ``build_index(state, landmark_slots=index.landmarks)``."""
+    dense = _as_dense(state)
+    lm = np.asarray(index.landmarks)
+
+    def recompute(mask, mat, g):
+        idx = np.nonzero(mask)[0]
+        if idx.size == 0:
+            return mat
+        idx = pad8(idx)
+        srcs = jnp.asarray(lm[idx], jnp.int32)
+        res = multi_bfs(g, srcs, jnp.full((idx.size,), -1, jnp.int32),
+                        backend=backend, parents=False)
+        return _scatter_rows(mat, jnp.asarray(idx), res.dist >= 0)
+
+    fwd = recompute(aff_fwd, index.fwd, dense)
+    bwd = recompute(aff_bwd, index.bwd, _transposed(dense))
+    out_label, in_label = _prune(fwd, bwd, index.landmarks)
+    alive = dense.valive
+    complete = coverage_complete(lm, alive, index.capacity)
+    return index._replace(
+        out_label=out_label, in_label=in_label, fwd=fwd, bwd=bwd,
+        alive=alive, versions=version_vector(dense), complete=complete)

@@ -1,0 +1,94 @@
+"""Index-side query answering: one label-intersection contraction per batch
+(DESIGN.md §9).
+
+A batch of Q (src, dst) slot pairs is answered by gathering the sources'
+OUT labels and the destinations' IN labels into two [Q, L] slabs and
+intersecting them along the landmark axis — the ``kernels/label_join``
+Pallas package (``backend="pallas"``) or its jnp reference
+(``backend="jnp"``). Cost: O(Q·L) bits touched, no traversal, no
+adjacency stream — this is the fast path the whole subsystem exists for.
+
+Answer semantics mirror ``core.bfs.multi_bfs`` exactly: a query with an
+absent (slot < 0) or dead endpoint is unreachable by definition (and
+*decided* — the fused engine returns found=False for those too). A
+nonempty intersection is a 2-hop witness src →* hub →* dst, so
+``reach=True`` answers are exact unconditionally. Empty intersections are
+exact only for a ``complete`` index (see labels.py); otherwise they come
+back ``decided=False`` and the session layer (freshness.py) routes them to
+the BFS fallback.
+
+NOTE: these helpers answer *against the index epoch*. Callers must have
+validated the epoch against the live state (``freshness.index_fresh``)
+for the answers to be linearizable — the validation IS the double collect.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _join(out_rows, in_rows, backend: str):
+    if backend == "jnp":
+        from repro.kernels.label_join.ref import label_join_ref
+
+        return label_join_ref(out_rows.astype(jnp.int32),
+                              in_rows.astype(jnp.int32))
+    if backend == "pallas":
+        from repro.kernels.label_join.ops import label_join
+
+        return label_join(out_rows, in_rows)
+    raise ValueError(f"unknown label_join backend {backend!r}")
+
+
+def _endpoint_ok(index, slots):
+    v = index.capacity
+    return (slots >= 0) & index.alive[jnp.clip(slots, 0, v - 1)]
+
+
+def query_reach(index, src_slots, dst_slots, *, backend: str = "jnp"):
+    """Batched reachability probe.
+
+    src_slots/dst_slots: int32[Q] (slot ids, -1 = absent). Returns
+    (reach bool[Q], decided bool[Q], hub int32[Q]): ``reach[q]`` matches
+    ``multi_bfs(...).found[q]`` wherever ``decided[q]``; ``hub[q]`` is the
+    canonical 2-hop witness as an INDEX into ``index.landmarks`` (-1 if
+    none) — slot ``index.landmarks[hub[q]]`` is the vertex a witness path
+    can be stitched through when the caller materializes one.
+    """
+    src_slots = jnp.asarray(src_slots, jnp.int32)
+    dst_slots = jnp.asarray(dst_slots, jnp.int32)
+    v = index.capacity
+    sok = _endpoint_ok(index, src_slots)
+    dok = _endpoint_ok(index, dst_slots)
+    a = index.out_label[jnp.clip(src_slots, 0, v - 1)] & sok[:, None]
+    b = index.in_label[jnp.clip(dst_slots, 0, v - 1)] & dok[:, None]
+    hits, hub = _join(a, b, backend)
+    hit = hits > 0
+    # hit => reachable, always. Empty intersection decides only when the
+    # landmark set covers every alive vertex; absent/dead endpoints are
+    # decided unreachable by the same rule the BFS engine applies.
+    decided = hit | ~sok | ~dok | jnp.asarray(index.complete)
+    return hit, decided, hub
+
+
+def reach_sets(index, src_slots):
+    """Full reachable sets: bool[Q, V] via one [Q, L] @ [L, V] product.
+
+    Returns (sets bool[Q,V], decided bool[Q]) — rows are exact where
+    decided (complete index, or absent/dead source whose set is empty).
+    """
+    src_slots = jnp.asarray(src_slots, jnp.int32)
+    v = index.capacity
+    sok = _endpoint_ok(index, src_slots)
+    a = (index.out_label[jnp.clip(src_slots, 0, v - 1)]
+         & sok[:, None]).astype(jnp.float32)
+    sets = (a @ index.in_label.T.astype(jnp.float32)) > 0
+    sets = sets & index.alive[None, :]
+    decided = jnp.asarray(index.complete) | ~sok
+    return sets, decided
+
+
+def reach_counts(index, src_slots):
+    """|reachable set| per source — the index-served form of
+    ``core.bfs.reachable_count`` (int32[Q], decided bool[Q])."""
+    sets, decided = reach_sets(index, src_slots)
+    return jnp.sum(sets.astype(jnp.int32), axis=1), decided

@@ -1,0 +1,2 @@
+from repro.kernels.label_join.ops import label_join  # noqa: F401
+from repro.kernels.label_join.ref import label_join_ref  # noqa: F401

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the label_join kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT32_MAX = jnp.int32(2**31 - 1)
+
+
+def label_join_ref(out_rows, in_rows):
+    """Same contract as kernel.label_join_pallas.
+
+    out_rows int32[Q, L] (0/1) — OUT labels of the Q query sources
+    in_rows  int32[Q, L] (0/1) — IN labels of the Q query destinations
+    -> (hits int32[Q]  — number of common landmarks (2-hop witnesses),
+        hub  int32[Q]  — smallest common landmark index, -1 if none)
+    """
+    q, l = out_rows.shape
+    if l == 0:
+        return (jnp.zeros((q,), jnp.int32), jnp.full((q,), -1, jnp.int32))
+    common = (out_rows > 0) & (in_rows > 0)
+    hits = jnp.sum(common.astype(jnp.int32), axis=1)
+    ids = jnp.arange(l, dtype=jnp.int32)
+    hub = jnp.min(jnp.where(common, ids[None, :], INT32_MAX), axis=1)
+    hub = jnp.where(hits > 0, hub, jnp.int32(-1))
+    return hits, hub

@@ -31,6 +31,13 @@ from repro.core import (
     make_op_batch,
 )
 from repro.core import partition
+from repro.index import (
+    build_index,
+    index_fresh,
+    reach_counts_session,
+    reach_session,
+    refresh,
+)
 
 
 @dataclass
@@ -41,6 +48,9 @@ class ServeStats:
     getpath_calls: int = 0
     getpath_rounds: int = 0
     grow_events: int = 0
+    index_hits: int = 0       # queries answered on the index fast path
+    index_misses: int = 0     # queries that fell back to the fused BFS
+    index_refreshes: int = 0  # index builds/refreshes performed
     wall_s: float = 0.0
 
 
@@ -59,14 +69,32 @@ class GraphCoServer:
     ``submit`` never surfaces slot exhaustion to clients — directly or as
     cascaded VERTEX-NOT-PRESENT failures — and the returned results are
     one clean lane-order linearization.
+
+    ``index=True`` maintains a versioned 2-hop reachability index
+    (DESIGN.md §9): ``get_reach``/``get_reach_counts`` answer from the
+    index whenever its epoch stamp matches the live version metadata (the
+    freshness check doubles as the snapshot validation) and fall back to
+    the fused BFS double collect otherwise — the index is an accelerator,
+    never a consistency dependency, so mutations proceed untouched.
+    ``index_tick()`` (called between decode steps by ``serve``) refreshes a
+    stale index in the background of the serving loop: refresh runs on a
+    functional snapshot and lands as a reference swap, so queries racing
+    it simply keep falling back (non-blocking co-serving, DESIGN.md §5(ii)).
     """
 
     def __init__(self, capacity: int = 256, query_engine: str = "fused",
-                 mesh=None, auto_grow: bool = True):
+                 mesh=None, auto_grow: bool = True, index: bool = False,
+                 index_landmarks: int | None = None):
         self.mesh = mesh
         self.auto_grow = auto_grow
         self.query_engine = query_engine
         self.grow_events = 0
+        self.index_enabled = bool(index)
+        self.index_landmarks = index_landmarks
+        self.index = None
+        self.index_hits = 0
+        self.index_misses = 0
+        self.index_refreshes = 0
         dense = make_graph(capacity)
         self.state = partition.shard_state(mesh, dense) if mesh is not None else dense
 
@@ -118,6 +146,51 @@ class GraphCoServer:
                                  max_rounds=max_rounds,
                                  engine=self.query_engine)
 
+    # -- reachability index surface (DESIGN.md §9) -------------------------
+    def index_tick(self) -> bool:
+        """Build/refresh the index if enabled and stale; returns True when
+        a refresh ran. ``serve`` calls this between decode steps so the
+        index converges back to fresh in the gaps of the decode schedule."""
+        if not self.index_enabled:
+            return False
+        if self.index is None:
+            self.index = build_index(self.state, self.index_landmarks)
+        elif not index_fresh(self.index, self.state):
+            self.index, _ = refresh(self.index, self.state)
+        else:
+            return False
+        self.index_refreshes += 1
+        return True
+
+    def get_reach(self, pairs: list, max_rounds: int = 64):
+        """Batched reachability WITHOUT paths — the read-heavy fast path.
+        Index-served when fresh (answers linearize at the freshness check);
+        stale epochs and undecided pairs transparently fall back to the
+        fused BFS double collect. Returns a ``ReachSessionResult`` whose
+        ``.paths()`` lazily materializes witness paths on demand."""
+        res = reach_session(lambda: self.state,
+                            self.index if self.index_enabled else None,
+                            pairs, engine=self.query_engine,
+                            max_rounds=max_rounds)
+        if self.index_enabled:   # a server without an index has no misses
+            self.index_hits += res.from_index
+            self.index_misses += res.fellback
+        return res
+
+    def get_reach_counts(self, keys: list) -> np.ndarray:
+        """Batched ``core.bfs.reachable_count`` endpoint: |reachable set|
+        per source key, answered from the index when fresh (one [Q,L]@[L,V]
+        label product) and by one fused multi-BFS otherwise."""
+        counts, from_index = reach_counts_session(
+            lambda: self.state, self.index if self.index_enabled else None,
+            keys)
+        if self.index_enabled:
+            if from_index:
+                self.index_hits += len(counts)
+            else:
+                self.index_misses += len(counts)
+        return counts
+
 
 def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
           cache_len: int, graph: GraphCoServer | None = None,
@@ -128,6 +201,10 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
     """
     t0 = time.time()
     stats = ServeStats()
+    # index counters on the server are lifetime-cumulative; ServeStats
+    # reports per-serve deltas like every other field
+    idx0 = ((graph.index_hits, graph.index_misses, graph.index_refreshes)
+            if graph is not None else (0, 0, 0))
     b, p = prompts.shape
     last, caches = model.prefill(params, {"tokens": jnp.asarray(prompts)})
     caches = model.cache_from_prefill(caches, cache_len)
@@ -143,6 +220,11 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
             if ops:
                 graph.submit(ops)
                 stats.graph_ops += len(ops)
+        if graph is not None:
+            # background index refresh between decode steps: co-serving
+            # stays non-blocking — queries racing a stale index fall back
+            # to BFS and mutations never wait (DESIGN.md §5(ii), §9)
+            graph.index_tick()
         if graph is not None and query_stream is not None:
             q = query_stream(i)
             if q is not None and len(q) > 0:
@@ -152,11 +234,23 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
                 if hasattr(q[0], "__len__"):
                     # one fused multi-query session for the whole batch;
                     # every query in it shares the session's round count, so
-                    # rounds-per-call stays comparable with the single path
-                    _, rounds = graph.get_paths(
-                        [(int(p[0]), int(p[1])) for p in q])
+                    # rounds-per-call stays comparable with the single path.
+                    # With the index enabled, the batch goes through the
+                    # reachability fast path instead (DESIGN.md §9) — serve
+                    # only consumes found/rounds, so nothing is lost and
+                    # fresh-epoch batches skip the BFS entirely.
+                    batch_pairs = [(int(p[0]), int(p[1])) for p in q]
+                    if graph.index_enabled:
+                        res = graph.get_reach(batch_pairs)
+                        rounds = res.rounds
+                    else:
+                        _, rounds = graph.get_paths(batch_pairs)
                     stats.getpath_calls += len(q)
                     stats.getpath_rounds += rounds * len(q)
+                elif graph.index_enabled:
+                    res = graph.get_reach([(int(q[0]), int(q[1]))])
+                    stats.getpath_calls += 1
+                    stats.getpath_rounds += res.rounds
                 else:
                     res = graph.get_path(int(q[0]), int(q[1]))
                     stats.getpath_calls += 1
@@ -167,5 +261,8 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         stats.decode_tokens += b
     if graph is not None:
         stats.grow_events = graph.grow_events
+        stats.index_hits = graph.index_hits - idx0[0]
+        stats.index_misses = graph.index_misses - idx0[1]
+        stats.index_refreshes = graph.index_refreshes - idx0[2]
     stats.wall_s = time.time() - t0
     return out, stats

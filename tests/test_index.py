@@ -1,0 +1,337 @@
+"""Versioned reachability index vs the fused BFS engine and the oracle.
+
+The contract under test (DESIGN.md §9):
+
+  1. On a fresh index, index-served answers are IDENTICAL to
+     ``multi_bfs`` and the sequential ``core.oracle`` for every (src, dst)
+     pair — including absent keys and dead endpoints — on both label_join
+     backends (jnp reference and Pallas kernel).
+  2. A mutation between build and query makes the epoch stale: the session
+     provably takes the BFS fallback (``fellback > 0``) and the answers
+     are still correct; ``refresh()`` restores index hits.
+  3. Incremental refresh is bit-identical to a full rebuild over the same
+     landmark list (the affected-landmark sets are sufficient).
+  4. Partial landmark sets never lie: decided answers match the oracle,
+     positive answers are exact, undecided queries fall back.
+  5. The property holds across random mutation streams on dense AND
+     mesh-sharded state.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from repro.testing.proptest import given, settings, strategies as st
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, OP_REM_E, OP_REM_V,
+    GraphOracle, apply_ops, apply_ops_fast, find_slots, make_graph,
+    make_op_batch, multi_bfs,
+)
+from repro.core import partition
+from repro.core.bfs import reachable_count
+from repro.core.distributed import make_graph_mesh
+from repro.index import (
+    build_index,
+    index_fresh,
+    query_reach,
+    reach_counts,
+    reach_session,
+    refresh,
+)
+
+NV, CAP = 10, 32
+
+
+def _build(edge_ops, nv=NV, cap=CAP):
+    g = make_graph(cap)
+    oracle = GraphOracle(cap)
+    ops = [(OP_ADD_V, k, -1, -1) for k in range(nv)]
+    ops += [(op, u, v, -1) for (op, u, v) in edge_ops]
+    g, _ = apply_ops(g, make_op_batch(ops))
+    oracle.apply_batch(ops)
+    return g, oracle
+
+
+def _all_pairs(nv=NV, extra=None):
+    keys = list(range(nv)) + list((-5, nv + 3) if extra is None else extra)
+    return [(a, b) for a in keys for b in keys]
+
+
+def _slots(g, pairs):
+    sk = find_slots(g, jnp.asarray([p[0] for p in pairs], jnp.int32))
+    sl = find_slots(g, jnp.asarray([p[1] for p in pairs], jnp.int32))
+    return sk, sl
+
+
+def _assert_index_exact(g, oracle, idx, pairs, backend):
+    sk, sl = _slots(g, pairs)
+    reach, decided, hub = query_reach(idx, sk, sl, backend=backend)
+    m = multi_bfs(g, sk, sl)
+    reach, decided = np.asarray(reach), np.asarray(decided)
+    assert decided.all(), "complete index must decide every pair"
+    np.testing.assert_array_equal(reach, np.asarray(m.found))
+    for (a, b), r in zip(pairs, reach):
+        assert bool(r) == oracle.reachable(a, b), (backend, a, b)
+    # every positive has a 2-hop witness landmark on an s ->* hub ->* t path
+    hub = np.asarray(hub)
+    lm = np.asarray(idx.landmarks)
+    fwd, bwd = np.asarray(idx.fwd), np.asarray(idx.bwd)
+    sk_np, sl_np = np.asarray(sk), np.asarray(sl)
+    for qi in np.nonzero(reach)[0]:
+        h = hub[qi]
+        assert h >= 0
+        assert bwd[h, sk_np[qi]] and fwd[h, sl_np[qi]], (qi, lm[h])
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_index_matches_engine_and_oracle_all_pairs(backend, seed):
+    rng = np.random.default_rng(seed)
+    edge_ops = [(OP_ADD_E, int(a), int(b))
+                for a, b in rng.integers(0, NV, (2 * NV, 2))]
+    g, oracle = _build(edge_ops)
+    idx = build_index(g)
+    assert idx.complete and index_fresh(idx, g)
+    _assert_index_exact(g, oracle, idx, _all_pairs(), backend)
+
+
+def test_index_dead_endpoints_and_absent_keys():
+    g, oracle = _build([(OP_ADD_E, 0, 1), (OP_ADD_E, 1, 2), (OP_ADD_E, 2, 3)])
+    g, _ = apply_ops(g, make_op_batch([(OP_REM_V, 2, -1, -1)]))
+    oracle.remove_vertex(2)
+    idx = build_index(g)          # built AFTER the removal: fresh & exact
+    _assert_index_exact(g, oracle, idx, _all_pairs(), "jnp")
+
+
+def test_pruning_is_canonical_and_lossless():
+    """Pruned labels decide exactly the pairs the raw closures cover, with
+    (usually far) fewer bits — the canonical-hub argument of labels.py."""
+    rng = np.random.default_rng(7)
+    edge_ops = [(OP_ADD_E, int(a), int(b))
+                for a, b in rng.integers(0, NV, (3 * NV, 2))]
+    g, _ = _build(edge_ops)
+    idx = build_index(g)
+    out_l = np.asarray(idx.out_label)
+    in_l = np.asarray(idx.in_label)
+    fwd, bwd = np.asarray(idx.fwd), np.asarray(idx.bwd)
+    assert out_l.sum() <= bwd.sum() and in_l.sum() <= fwd.sum()
+    # decided sets are equal: exists-hub via pruned == via unpruned
+    pruned = (out_l.astype(np.int32) @ in_l.T.astype(np.int32)) > 0
+    raw = (bwd.T.astype(np.int32) @ fwd.astype(np.int32)) > 0
+    np.testing.assert_array_equal(pruned, raw)
+
+
+def test_staleness_forces_fallback_and_refresh_restores_hits():
+    g, oracle = _build([(OP_ADD_E, k, k + 1) for k in range(NV - 1)])
+    idx = build_index(g)
+    pairs = [(0, NV - 1), (NV - 1, 0), (3, 7)]
+
+    # mutation between build and query: sever the chain at 8 -> 9
+    g2, _ = apply_ops(g, make_op_batch([(OP_REM_E, 8, 9, -1)]))
+    oracle.remove_edge(8, 9)
+    assert not index_fresh(idx, g2)
+    res = reach_session(lambda: g2, idx, pairs)
+    assert res.stale and res.fellback == len(pairs) and res.from_index == 0
+    assert res.found == [oracle.reachable(a, b) for a, b in pairs] \
+        == [False, False, True]
+
+    idx2, info = refresh(idx, g2)
+    assert info["mode"] != "noop" and index_fresh(idx2, g2)
+    res2 = reach_session(lambda: g2, idx2, pairs)
+    assert not res2.stale and res2.from_index == len(pairs) \
+        and res2.fellback == 0
+    assert res2.found == res.found
+    # lazily materialized witness paths agree with the found flags
+    paths = res2.paths()
+    assert [f for f, _ in paths] == res2.found
+    assert paths[2][1] == [3, 4, 5, 6, 7]
+
+
+def test_incremental_refresh_bitwise_equals_full_rebuild():
+    rng = np.random.default_rng(5)
+    edge_ops = [(OP_ADD_E, int(a), int(b))
+                for a, b in rng.integers(0, NV, (2 * NV, 2))]
+    g, oracle = _build(edge_ops)
+    idx = build_index(g)
+    for step in range(6):
+        op = (int(rng.choice([OP_ADD_E, OP_REM_E, OP_REM_V])),
+              int(rng.integers(0, NV)), int(rng.integers(0, NV)))
+        g, _ = apply_ops(g, make_op_batch([op]))
+        oracle.apply(op[0], op[1], op[2])
+        idx, info = refresh(idx, g, full_threshold=1.1)  # force incremental
+        assert info["mode"] in ("incremental", "noop")
+        assert index_fresh(idx, g)
+        ref = build_index(g, landmark_slots=np.asarray(idx.landmarks))
+        for f in ("out_label", "in_label", "fwd", "bwd", "alive", "versions"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(idx, f)), np.asarray(getattr(ref, f)),
+                err_msg=f"step {step} field {f} after {op}")
+        if idx.complete:
+            _assert_index_exact(g, oracle, idx, _all_pairs(), "jnp")
+
+
+def test_refresh_repicks_landmarks_when_new_vertex_appears():
+    """A complete-by-default index must stay complete: AddVertex of a new
+    key escalates refresh to a full rebuild that picks up the new slot."""
+    g, oracle = _build([(OP_ADD_E, 0, 1)])
+    idx = build_index(g)
+    batch = [(OP_ADD_V, NV, -1, -1), (OP_ADD_E, 1, NV, -1)]
+    g, _ = apply_ops(g, make_op_batch(batch))
+    oracle.apply_batch(batch)
+    idx, info = refresh(idx, g)
+    assert info["mode"] == "full" and idx.complete and index_fresh(idx, g)
+    _assert_index_exact(g, oracle, idx, _all_pairs(nv=NV + 1), "jnp")
+
+
+@pytest.mark.parametrize("num_landmarks", [0, 1, 3])
+def test_partial_landmark_index_never_lies(num_landmarks):
+    rng = np.random.default_rng(13)
+    edge_ops = [(OP_ADD_E, int(a), int(b))
+                for a, b in rng.integers(0, NV, (2 * NV, 2))]
+    g, oracle = _build(edge_ops)
+    idx = build_index(g, num_landmarks)
+    assert idx.num_landmarks == num_landmarks and not idx.complete
+    pairs = _all_pairs()
+    sk, sl = _slots(g, pairs)
+    reach, decided, _ = query_reach(idx, sk, sl)
+    for (a, b), r, d in zip(pairs, np.asarray(reach), np.asarray(decided)):
+        if d:
+            assert bool(r) == oracle.reachable(a, b), (a, b)
+        if r:  # positives are exact even when undecidedness exists
+            assert oracle.reachable(a, b), (a, b)
+    # the session transparently patches undecided queries via BFS
+    res = reach_session(lambda: g, idx, pairs)
+    assert res.found == [oracle.reachable(a, b) for a, b in pairs]
+    assert res.from_index == int(np.asarray(decided).sum())
+    assert res.fellback == len(pairs) - res.from_index
+
+
+def test_reach_counts_matches_reachable_count():
+    rng = np.random.default_rng(21)
+    edge_ops = [(OP_ADD_E, int(a), int(b))
+                for a, b in rng.integers(0, NV, (2 * NV, 2))]
+    g, _ = _build(edge_ops)
+    idx = build_index(g)
+    keys = list(range(NV)) + [-2, NV + 5]
+    slots = find_slots(g, jnp.asarray(keys, jnp.int32))
+    counts, decided = reach_counts(idx, slots)
+    assert bool(np.asarray(decided).all())
+    for i, _k in enumerate(keys):
+        assert int(counts[i]) == int(reachable_count(g, slots[i])), keys[i]
+
+
+def test_label_join_pallas_matches_ref():
+    from repro.kernels.label_join.ops import label_join
+    from repro.kernels.label_join.ref import label_join_ref
+
+    rng = np.random.default_rng(3)
+    for q, l in ((1, 1), (5, 7), (16, 130), (33, 256)):
+        a = jnp.asarray(rng.random((q, l)) < 0.2)
+        b = jnp.asarray(rng.random((q, l)) < 0.2)
+        hk, uk = label_join(a, b)
+        hr, ur = label_join_ref(a.astype(jnp.int32), b.astype(jnp.int32))
+        np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr), err_msg=f"{q},{l}")
+        np.testing.assert_array_equal(np.asarray(uk), np.asarray(ur), err_msg=f"{q},{l}")
+
+
+def test_server_index_surface_counts_hits_and_misses():
+    from repro.runtime.serve_loop import GraphCoServer
+
+    srv = GraphCoServer(capacity=64, index=True)
+    srv.submit([(OP_ADD_V, k) for k in range(8)])
+    srv.submit([(OP_ADD_E, a, a + 1) for a in range(7)])
+    assert srv.index_tick() and not srv.index_tick()
+    res = srv.get_reach([(0, 7), (7, 0)])
+    assert res.found == [True, False] and srv.index_hits == 2
+    srv.submit([(OP_REM_E, 3, 4)])   # mutation between build and query
+    res = srv.get_reach([(0, 7), (0, 3)])
+    assert res.stale and srv.index_misses == 2
+    assert res.found == [False, True]  # fallback answers are still correct
+    assert srv.index_tick()            # background refresh restores hits
+    res = srv.get_reach([(0, 7), (0, 3)])
+    assert res.found == [False, True] and res.from_index == 2
+    # batched reachable-count endpoint, index-served when fresh
+    counts = srv.get_reach_counts([0, 4, 99])
+    assert list(counts) == [4, 4, 0]
+    before = srv.index_misses
+    srv.submit([(OP_ADD_E, 3, 4)])
+    counts = srv.get_reach_counts([0, 4, 99])  # stale -> fused BFS fallback
+    assert list(counts) == [8, 4, 0] and srv.index_misses == before + 3
+
+
+def test_server_auto_grow_keeps_index_correct():
+    from repro.runtime.serve_loop import GraphCoServer
+
+    srv = GraphCoServer(capacity=8, index=True)
+    srv.submit([(OP_ADD_V, k) for k in range(6)])
+    srv.index_tick()
+    srv.submit([(OP_ADD_V, k) for k in range(6, 20)])   # forces grow()
+    assert srv.grow_events > 0
+    srv.submit([(OP_ADD_E, a, a + 1) for a in range(19)])
+    srv.index_tick()
+    res = srv.get_reach([(0, 19), (19, 0)])
+    assert res.found == [True, False] and res.from_index == 2
+
+
+# ----------------------------------------------------------------------------
+# Property: random mutation streams on dense and sharded state
+# ----------------------------------------------------------------------------
+KEYS = st.integers(min_value=0, max_value=7)
+OPC = st.sampled_from([OP_ADD_V, OP_REM_V, OP_ADD_E, OP_REM_E])
+OP = st.tuples(OPC, KEYS, KEYS)
+STREAM = st.lists(st.lists(OP, min_size=1, max_size=6), min_size=1, max_size=3)
+
+
+def _run_stream(op_lists, make_state, apply_fn, to_probe):
+    """Shared property body: replay a mutation stream, refreshing the index
+    after every batch; all-pairs index answers must match the oracle."""
+    g = make_state()
+    oracle = GraphOracle(CAP)
+    setup = [(OP_ADD_V, k, -1, -1) for k in range(8)]
+    g, _ = apply_fn(g, make_op_batch(setup))
+    oracle.apply_batch(setup)
+    idx = build_index(g)
+    pairs = [(a, b) for a in range(8) for b in range(8)]
+    for ops in op_lists:
+        batch = [(op, a, b, -1) for (op, a, b) in ops]
+        g, _ = apply_fn(g, make_op_batch(batch))
+        oracle.apply_batch(batch)
+        stale = not index_fresh(idx, g)
+        # stale-but-unrefreshed sessions must fall back and stay correct
+        res = reach_session(lambda: g, idx, pairs[:8])
+        assert res.found == [oracle.reachable(a, b) for a, b in pairs[:8]]
+        assert not stale or res.fellback > 0
+        idx, _ = refresh(idx, g)
+        assert index_fresh(idx, g)
+        probe = to_probe(g)
+        sk, sl = _slots(probe, pairs)
+        reach, decided, _ = query_reach(idx, sk, sl)
+        m = multi_bfs(probe, sk, sl)
+        np.testing.assert_array_equal(np.asarray(reach), np.asarray(m.found))
+        for (a, b), r, d in zip(pairs, np.asarray(reach),
+                                np.asarray(decided)):
+            assert bool(d), (a, b)
+            assert bool(r) == oracle.reachable(a, b), (a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(STREAM)
+def test_index_tracks_mutation_stream_dense(op_lists):
+    _run_stream(op_lists, lambda: make_graph(CAP),
+                apply_ops_fast, lambda g: g)
+
+
+@settings(max_examples=6, deadline=None)
+@given(STREAM)
+def test_index_tracks_mutation_stream_sharded(op_lists):
+    mesh = make_graph_mesh()
+    _run_stream(
+        op_lists,
+        lambda: partition.shard_state(mesh, make_graph(CAP)),
+        partition.apply_ops_fast,
+        partition.unshard,
+    )
