@@ -40,7 +40,7 @@ def run_mix(engine, g0, mix, lanes, nv, *, total_ops=2048, getpath_frac=0.02, se
             n_queries += 1
             rounds += int(pr.rounds)
             found += int(bool(pr.found))
-    jax.block_until_ready(state["g"].adj)
+    jax.block_until_ready(state["g"].adj_packed)
     dt = time.perf_counter() - t0
     return ((n_ops + n_queries) / dt, n_queries, rounds / max(n_queries, 1),
             found, n_ops + n_queries)

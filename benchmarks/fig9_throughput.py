@@ -70,12 +70,12 @@ def bench_engine(engine, g0, mix, lanes, nv, *, total_ops=4096, seed=1):
         n += lanes
     # warmup / compile
     g, _ = engine(g0, batches[0])
-    jax.block_until_ready(g.adj)
+    jax.block_until_ready(g.adj_packed)
     t0 = time.perf_counter()
     g = g0
     for b in batches:
         g, res = engine(g, b)
-    jax.block_until_ready(g.adj)
+    jax.block_until_ready(g.adj_packed)
     dt = time.perf_counter() - t0
     return n / dt
 
@@ -93,6 +93,19 @@ def bench_oracle(oracle_proto, mix, lanes, nv, *, total_ops=4096, seed=1):
     return len(ops) / (time.perf_counter() - t0)
 
 
+def adj_meta(g):
+    """Adjacency-memory metadata (DESIGN.md §10): every engine now mutates
+    word-packed storage — one uint32 word RMW per edge op instead of a
+    dense row/cell write — so the storage footprint rides on the records."""
+    v = g.capacity
+    packed_bytes = int(g.adj_packed.size * 4)
+    return {
+        "adj_packed_bytes": packed_bytes,
+        "adj_float32_bytes": int(v * v * 4),
+        "adj_compression": int(v * v * 4) / packed_bytes,
+    }
+
+
 def run(lanes_list=(1, 4, 16, 64, 256), total_ops=2048, quick=False):
     g0, oracle, nv = seed_graph()
     rows = []
@@ -105,10 +118,10 @@ def run(lanes_list=(1, 4, 16, 64, 256), total_ops=2048, quick=False):
             rows.append((mix_name, lanes, tput_fast, tput_lock, tput_seq))
         if quick:
             break
-    return rows
+    return rows, adj_meta(g0)
 
 
-def json_rows(rows, total_ops, figure="fig9_throughput"):
+def json_rows(rows, total_ops, figure="fig9_throughput", meta=None):
     """Long-format records in the schema shared with fig_multiquery (one
     per engine per sweep point; lanes play the batch-size role of ``q``,
     sequential oracle is the baseline) so benchmarks/run.py --json
@@ -126,15 +139,16 @@ def json_rows(rows, total_ops, figure="fig9_throughput"):
                 "steps_per_s": tput,
                 "speedup_vs_baseline": tput / s,
                 "mix": mix,
+                **(meta or {}),
             })
     return out
 
 
 def main(quick=False, rows_out=None):
     total_ops = 1024 if quick else 4096
-    rows = run(total_ops=total_ops, quick=quick)
+    rows, meta = run(total_ops=total_ops, quick=quick)
     if rows_out is not None:
-        rows_out.extend(json_rows(rows, total_ops))
+        rows_out.extend(json_rows(rows, total_ops, meta=meta))
     print(f'{"mix":8s} {"lanes":>6s} {"nonblocking":>12s} {"coarselock":>12s} '
           f'{"sequential":>12s} {"nb/seq":>7s}')
     out = []

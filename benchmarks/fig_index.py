@@ -79,7 +79,7 @@ def _serve_index(g0, idx0, sched):
         res = reach_session(lambda: state["g"], idx, pairs)
         hits += res.from_index
         misses += res.fellback
-    jax.block_until_ready(state["g"].adj)
+    jax.block_until_ready(state["g"].adj_packed)
     return hits, misses, refreshes
 
 
@@ -89,7 +89,7 @@ def _serve_fused(g0, sched):
         if ops is not None:
             state["g"], _ = apply_ops_fast(state["g"], make_op_batch(ops))
         get_paths_session(lambda: state["g"], pairs)
-    jax.block_until_ready(state["g"].adj)
+    jax.block_until_ready(state["g"].adj_packed)
 
 
 def _time(fn, reps):

@@ -36,18 +36,38 @@ def _vmap_multi(state, srcs, dsts, backend="jnp"):
 def _time(fn, *args, reps=5):
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps, out
+        ts.append(time.perf_counter() - t0)
+    # median per-call time: robust to the CPU container's scheduling noise
+    return float(np.median(ts)), out
 
 
-def run_sweep(*, backend="jnp", reps=5, seed=3, quick=False):
+def _adj_meta(g):
+    """Adjacency-memory metadata (DESIGN.md §10): the packed engines store
+    AND stream uint32 words; the float32 path stores the same words but
+    expands them to a dense f32 operand per superstep."""
+    v = g.capacity
+    packed_bytes = int(g.adj_packed.size * 4)
+    unpacked_bytes = int(v * v * 4)  # the f32 matmul operand
+    return {
+        "adj_packed_bytes": packed_bytes,
+        "adj_float32_bytes": unpacked_bytes,
+        "adj_compression": unpacked_bytes / packed_bytes,
+    }
+
+
+def run_sweep(*, backend="jnp", reps=None, seed=3, quick=False):
+    if reps is None:
+        reps = 3 if quick else 10
     g, _, nv = seed_graph()
     rng = np.random.default_rng(seed)
     rows = []
     qs = QS[:2] if quick else QS
+    meta = _adj_meta(g)
     for q in qs:
         keys = rng.integers(0, nv, (q, 2))
         # keys are dense 0..nv-1 in seed_graph insertion order == slot order
@@ -55,27 +75,36 @@ def run_sweep(*, backend="jnp", reps=5, seed=3, quick=False):
         dsts = jnp.asarray(keys[:, 1], jnp.int32)
 
         fused_fn = jax.jit(lambda s, d: multi_bfs(g, s, d, backend=backend))
+        packed_fn = jax.jit(lambda s, d: multi_bfs(g, s, d, backend="packed"))
         vmap_fn = jax.jit(lambda s, d: _vmap_multi(g, s, d, backend=backend))
         t_fused, m = _time(fused_fn, srcs, dsts, reps=reps)
+        t_packed, pm = _time(packed_fn, srcs, dsts, reps=reps)
         t_vmap, vm = _time(vmap_fn, srcs, dsts, reps=reps)
         steps_total = int(jnp.sum(m.steps))
         assert steps_total == int(jnp.sum(vm.steps)), "engines disagree on work"
+        assert steps_total == int(jnp.sum(pm.steps)), "packed engine disagrees"
         rows.append({
             "q": q,
             "fused_s": t_fused,
+            "fused_packed_s": t_packed,
             "vmap_s": t_vmap,
             "steps": steps_total,
             "fused_steps_per_s": steps_total / t_fused,
+            "fused_packed_steps_per_s": steps_total / t_packed,
             "vmap_steps_per_s": steps_total / t_vmap,
             "speedup": t_vmap / t_fused,
+            "packed_vs_float": t_fused / t_packed,
+            **meta,
         })
     return rows
 
 
-def json_rows(rows, figure="multiquery", engines=("fused", "vmap")):
+def json_rows(rows, figure="multiquery",
+              engines=("fused", "fused_packed", "vmap")):
     """Long-format JSON records (one per engine per sweep point) — the
     schema shared with fig_sharded so benchmarks/run.py --json aggregates
-    all figures uniformly."""
+    all figures uniformly. The packed-adjacency memory metadata rides on
+    every record (DESIGN.md §10)."""
     out = []
     for r in rows:
         base_s = r[f"{engines[-1]}_s"]
@@ -88,25 +117,37 @@ def json_rows(rows, figure="multiquery", engines=("fused", "vmap")):
                 "steps": r["steps"],
                 "steps_per_s": r[f"{eng}_steps_per_s"],
                 "speedup_vs_baseline": base_s / r[f"{eng}_s"],
+                "adj_packed_bytes": r["adj_packed_bytes"],
+                "adj_float32_bytes": r["adj_float32_bytes"],
+                "adj_compression": r["adj_compression"],
             })
     return out
 
 
 def main(quick=False, rows_out=None):
     out = []
-    print(f'{"Q":>4s} {"engine":>6s} {"ms/batch":>10s} {"qsteps/s":>12s} '
+    print(f'{"Q":>4s} {"engine":>12s} {"ms/batch":>10s} {"qsteps/s":>12s} '
           f'{"speedup":>8s}')
     for backend in ("jnp",):
         sweep = run_sweep(backend=backend, quick=quick)
         if rows_out is not None:
             rows_out.extend(json_rows(sweep))
         for r in sweep:
-            print(f'{r["q"]:4d} {"fused":>6s} {r["fused_s"]*1e3:10.2f} '
+            print(f'{r["q"]:4d} {"fused":>12s} {r["fused_s"]*1e3:10.2f} '
                   f'{r["fused_steps_per_s"]:12.0f} {r["speedup"]:7.2f}x')
-            print(f'{r["q"]:4d} {"vmap":>6s} {r["vmap_s"]*1e3:10.2f} '
+            print(f'{r["q"]:4d} {"fused_packed":>12s} '
+                  f'{r["fused_packed_s"]*1e3:10.2f} '
+                  f'{r["fused_packed_steps_per_s"]:12.0f} '
+                  f'{r["packed_vs_float"]:6.2f}xf')
+            print(f'{r["q"]:4d} {"vmap":>12s} {r["vmap_s"]*1e3:10.2f} '
                   f'{r["vmap_steps_per_s"]:12.0f} {"":>8s}')
             out.append(f'multiquery/fused/q{r["q"]},{r["fused_s"]*1e6:.1f},'
                        f'qsteps_per_s={r["fused_steps_per_s"]:.0f}')
+            out.append(f'multiquery/fused_packed/q{r["q"]},'
+                       f'{r["fused_packed_s"]*1e6:.1f},'
+                       f'qsteps_per_s={r["fused_packed_steps_per_s"]:.0f};'
+                       f'vs_float={r["packed_vs_float"]:.2f}x;'
+                       f'adj_compression={r["adj_compression"]:.0f}x')
             out.append(f'multiquery/vmap/q{r["q"]},{r["vmap_s"]*1e6:.1f},'
                        f'qsteps_per_s={r["vmap_steps_per_s"]:.0f};'
                        f'fused_speedup={r["speedup"]:.2f}')

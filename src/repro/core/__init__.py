@@ -41,6 +41,11 @@ from repro.core.graph import (  # noqa: F401
     make_op_batch,
     num_edges,
     num_vertices,
+    pack_bits,
+    packed_width,
+    traversable,
+    traversable_packed,
+    unpack_bits,
     version_vector,
 )
 from repro.core.ops import (  # noqa: F401

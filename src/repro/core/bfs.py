@@ -9,8 +9,17 @@ traversal is a sequence of *frontier expansion* steps over adjacency tiles:
 
 One step costs O(V^2 / P) dense work with high arithmetic intensity instead of
 O(E) random accesses — the hardware-adaptation core of this reproduction
-(DESIGN.md §1). ``step_fn`` is pluggable: ``"jnp"`` (pure reference, always
-available) or ``"pallas"`` (kernels/bfs_step, interpret=True on CPU).
+(DESIGN.md §1). ``step_fn`` is pluggable per backend (DESIGN.md §10):
+
+  "jnp"           float32-MXU reference: unpack the packed words, expand via
+                  a frontier mat-vec (always available)
+  "pallas"        kernels/bfs_step on the unpacked view (interpret on CPU)
+  "packed"        pure-jnp AND/OR reduction over the packed uint32 words —
+                  no unpack, no matmul, ~32x less adjacency traffic
+  "packed_pallas" kernels/bfs_step packed kernel (words streamed HBM->VMEM)
+
+All four backends produce bit-identical BFSResults; every edge view is
+derived from the ONE ``core.graph.traversable`` predicate.
 """
 from __future__ import annotations
 
@@ -20,23 +29,53 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import GraphState
+from repro.core.graph import (
+    GraphState,
+    or_reduce,
+    pack_bits,
+    traversable,
+    traversable_packed,
+    unpack_bits,
+)
 
 INT32_MAX = jnp.int32(2**31 - 1)
+
+# backends whose step functions consume ``state.adj_packed`` directly
+PACKED_BACKENDS = ("packed", "packed_pallas")
 
 
 def bfs_step_jnp(frontier, adj, alive, visited):
     """Reference frontier expansion. Returns (new_frontier[V] bool, parent[V] int32).
 
-    parent[j] = smallest frontier index i with an edge i->j (or -1).
+    parent[j] = smallest frontier index i with a traversable edge i->j (-1
+    if none). Both the expansion and the parent scan read the SAME
+    ``traversable`` mask, so endpoint liveness cannot drift between them.
     """
+    t = traversable(adj, alive)
     f = frontier.astype(jnp.float32)
-    reach = (f @ adj.astype(jnp.float32)) > 0
-    new = reach & alive & ~visited
+    reach = (f @ t.astype(jnp.float32)) > 0
+    new = reach & ~visited
     v = adj.shape[0]
     idx = jnp.arange(v, dtype=jnp.int32)
-    # candidate parent rows: masked min over i of (frontier_i & adj_ij)
-    cand = jnp.where(frontier[:, None] & (adj > 0), idx[:, None], INT32_MAX)
+    # candidate parent rows: masked min over i of (frontier_i & t_ij)
+    cand = jnp.where(frontier[:, None] & t, idx[:, None], INT32_MAX)
+    parent = jnp.min(cand, axis=0)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new, parent
+
+
+def bfs_step_packed_jnp(frontier, adj_packed, alive, visited):
+    """Packed frontier expansion (DESIGN.md §10): reach is a bitwise OR of
+    the frontier rows' traversable words — no unpack of the streamed
+    adjacency, no matmul. Bit-identical to ``bfs_step_jnp``."""
+    v = alive.shape[0]
+    t = traversable_packed(adj_packed, alive, pack_bits(alive))
+    sel = jnp.where(frontier[:, None], t, jnp.uint32(0))
+    reach = unpack_bits(or_reduce(sel, 0), v)
+    new = reach & ~visited
+    idx = jnp.arange(v, dtype=jnp.int32)
+    cand = jnp.where(frontier[:, None] & unpack_bits(t, v),
+                     idx[:, None], INT32_MAX)
     parent = jnp.min(cand, axis=0)
     parent = jnp.where(new, parent, jnp.int32(-1))
     return new, parent
@@ -45,10 +84,16 @@ def bfs_step_jnp(frontier, adj, alive, visited):
 def _get_step_fn(backend: str):
     if backend == "jnp":
         return bfs_step_jnp
+    if backend == "packed":
+        return bfs_step_packed_jnp
     if backend == "pallas":
         from repro.kernels.bfs_step.ops import bfs_step as bfs_step_pallas
 
         return bfs_step_pallas
+    if backend == "packed_pallas":
+        from repro.kernels.bfs_step.ops import bfs_step_packed
+
+        return bfs_step_packed
     raise ValueError(f"unknown bfs backend {backend!r}")
 
 
@@ -79,6 +124,9 @@ def bfs(state: GraphState, src_slot, dst_slot, backend: str = "jnp") -> BFSResul
     dist0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
     expanded0 = jnp.zeros((v,), jnp.bool_)
     step_fn = _get_step_fn(backend)
+    # packed backends stream the stored words; the float32-MXU backends get
+    # the unpacked view, materialized once outside the superstep loop
+    adj_arg = state.adj_packed if backend in PACKED_BACKENDS else state.adj
 
     def cond(c):
         frontier, visited, parent, dist, expanded, step = c
@@ -88,7 +136,7 @@ def bfs(state: GraphState, src_slot, dst_slot, backend: str = "jnp") -> BFSResul
     def body(c):
         frontier, visited, parent, dist, expanded, step = c
         expanded = expanded | frontier
-        new, par = step_fn(frontier, state.adj, alive, visited)
+        new, par = step_fn(frontier, adj_arg, alive, visited)
         parent = jnp.where(new, par, parent)
         dist = jnp.where(new, step + 1, dist)
         visited = visited | new
@@ -143,20 +191,39 @@ def multi_bfs_step_jnp(frontiers, adj, alive, visited):
 
     frontiers: bool[Q, V], visited: bool[Q, V], alive: bool[V].
     Returns (new bool[Q, V], parent int32[Q, V]) with
-    parent[q, j] = smallest i with frontiers[q, i] and an edge i->j (else -1)
-    — identical per-query semantics to ``bfs_step_jnp``, but the frontier
-    expansion is one real [Q,V]x[V,V] matmul instead of Q mat-vecs.
+    parent[q, j] = smallest i with frontiers[q, i] and a traversable edge
+    i->j (else -1) — identical per-query semantics to ``bfs_step_jnp``, but
+    the frontier expansion is one real [Q,V]x[V,V] matmul instead of Q
+    mat-vecs. Expansion and parent scan share the ``traversable`` mask.
     """
+    t = traversable(adj, alive)
     f = frontiers.astype(jnp.float32)
-    reach = (f @ adj.astype(jnp.float32)) > 0
-    new = reach & alive[None, :] & ~visited
+    reach = (f @ t.astype(jnp.float32)) > 0
+    new = reach & ~visited
     v = adj.shape[1]
     idx = jnp.arange(v, dtype=jnp.int32)
     # per-query masked min over source rows, laid out src-major
     # [V(src), Q, V(dst)] so the reduction runs over the leading axis
     # (contiguous inner [Q, V] panels — measurably faster than the
     # query-major layout on CPU/VPU)
-    cand = jnp.where(frontiers.T[:, :, None] & (adj[:, None, :] > 0),
+    cand = jnp.where(frontiers.T[:, :, None] & t[:, None, :],
+                     idx[:, None, None], INT32_MAX)
+    parent = jnp.min(cand, axis=0)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new, parent
+
+
+def multi_bfs_step_packed_jnp(frontiers, adj_packed, alive, visited):
+    """Packed fused expansion (DESIGN.md §10): per query, reach is the
+    bitwise OR of its frontier rows' traversable words. Bit-identical to
+    ``multi_bfs_step_jnp``."""
+    v = alive.shape[0]
+    t = traversable_packed(adj_packed, alive, pack_bits(alive))
+    sel = jnp.where(frontiers[:, :, None], t[None, :, :], jnp.uint32(0))
+    reach = unpack_bits(or_reduce(sel, 1), v)
+    new = reach & ~visited
+    idx = jnp.arange(v, dtype=jnp.int32)
+    cand = jnp.where(frontiers.T[:, :, None] & unpack_bits(t, v)[:, None, :],
                      idx[:, None, None], INT32_MAX)
     parent = jnp.min(cand, axis=0)
     parent = jnp.where(new, parent, jnp.int32(-1))
@@ -166,10 +233,16 @@ def multi_bfs_step_jnp(frontiers, adj, alive, visited):
 def _get_multi_step_fn(backend: str):
     if backend == "jnp":
         return multi_bfs_step_jnp
+    if backend == "packed":
+        return multi_bfs_step_packed_jnp
     if backend == "pallas":
         from repro.kernels.bfs_multi_step.ops import multi_bfs_step
 
         return multi_bfs_step
+    if backend == "packed_pallas":
+        from repro.kernels.bfs_multi_step.ops import multi_bfs_step_packed
+
+        return multi_bfs_step_packed
     raise ValueError(f"unknown multi-bfs backend {backend!r}")
 
 
@@ -203,9 +276,11 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
     superstep — is skipped and ``parent`` comes back all -1. found, dist,
     expanded and steps are bit-identical to the default mode. The
     reachability-index build drives this: label construction needs
-    closures, never trees. The expansion is the plain frontier matmul
-    regardless of ``backend`` (the Pallas superstep earns its keep on
-    parent extraction; the matmul alone XLA already tiles well).
+    closures, never trees. The expansion operand is hoisted out of the
+    loop: the float32 traversable matrix for the MXU backends (the Pallas
+    superstep earns its keep on parent extraction; the matmul alone XLA
+    already tiles well), the traversable WORDS for the packed backends
+    (DESIGN.md §10) — the latter stream 32x less adjacency per superstep.
     """
     src_slots = jnp.asarray(src_slots, jnp.int32)
     dst_slots = jnp.asarray(dst_slots, jnp.int32)
@@ -222,6 +297,16 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
     expanded0 = jnp.zeros((q, v), jnp.bool_)
     steps0 = jnp.zeros((q,), jnp.int32)
     step_fn = _get_multi_step_fn(backend)
+    is_packed = backend in PACKED_BACKENDS
+    adj_arg = state.adj_packed if is_packed else state.adj
+    if not parents:
+        # closure-only expansion operand, hoisted out of the superstep loop:
+        # traversable words for the packed path, the float32 traversable
+        # matrix for the MXU path (DESIGN.md §9, §10)
+        closure_op = (
+            traversable_packed(state.adj_packed, alive, pack_bits(alive))
+            if is_packed else
+            traversable(state.adj, alive).astype(jnp.float32))
 
     def _active(frontiers, visited, step):
         # mirrors the single-query cond, evaluated per query
@@ -242,12 +327,14 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
         f = frontiers & act[:, None]
         expanded = expanded | f
         if parents:
-            new, par = step_fn(f, state.adj, alive, visited)
+            new, par = step_fn(f, adj_arg, alive, visited)
             parent = jnp.where(new, par, parent)
+        elif is_packed:
+            sel = jnp.where(f[:, :, None], closure_op[None, :, :],
+                            jnp.uint32(0))
+            new = unpack_bits(or_reduce(sel, 1), v) & ~visited
         else:
-            ff = f.astype(jnp.float32)
-            new = ((ff @ state.adj.astype(jnp.float32)) > 0) \
-                & alive[None, :] & ~visited
+            new = ((f.astype(jnp.float32) @ closure_op) > 0) & ~visited
         dist = jnp.where(new, step + 1, dist)
         visited = visited | new
         steps = steps + act.astype(jnp.int32)

@@ -60,6 +60,9 @@ from repro.core.graph import (
     EMPTY_KEY,
     GraphState,
     OpBatch,
+    pack_bits,
+    traversable,
+    unpack_bits,
 )
 from repro.core import ops as gops
 
@@ -82,7 +85,7 @@ def shard_graph(mesh: Mesh, state: GraphState) -> GraphState:
         valive=jax.device_put(state.valive, row),
         vver=jax.device_put(state.vver, row),
         ecnt=jax.device_put(state.ecnt, row),
-        adj=jax.device_put(state.adj, mat),
+        adj_packed=jax.device_put(state.adj_packed, mat),
     )
 
 
@@ -146,9 +149,12 @@ def dbfs(mesh: Mesh, state: GraphState, src_slot, dst_slot):
         # frontier/parents), which the VMA analysis cannot infer past pvary.
         **_SM_NOCHECK,
     )
-    def run(vkey_l, valive_l, adj_l, src, dst):
+    def run(vkey_l, valive_l, adjw_l, src, dst):
         _, _, per, row0 = _row_block_info(v, mesh.shape[AXIS])
         alive_g = jax.lax.all_gather(valive_l, AXIS, tiled=True)  # bool[V]
+        # legacy engine: dense local block, edge view via the ONE
+        # traversable predicate (row-slice form, DESIGN.md §10)
+        adj_l = traversable(unpack_bits(adjw_l, v), valive_l, alive_g)
         src_ok = (src >= 0) & alive_g[jnp.maximum(src, 0)]
         s = jnp.maximum(src, 0)
         frontier0 = jnp.zeros((v,), jnp.bool_).at[s].set(src_ok)
@@ -173,7 +179,7 @@ def dbfs(mesh: Mesh, state: GraphState, src_slot, dst_slot):
             fa = f_mine.astype(jnp.float32)
             reach_part = (fa @ adj_l.astype(jnp.float32)) > 0
             idx = (jnp.arange(per, dtype=jnp.int32) + row0)[:, None]
-            cand = jnp.where(f_mine[:, None] & (adj_l > 0), idx, jnp.int32(2**31 - 1))
+            cand = jnp.where(f_mine[:, None] & adj_l, idx, jnp.int32(2**31 - 1))
             par_part = jnp.min(cand, axis=0)
             reach = jax.lax.psum(reach_part.astype(jnp.int32), AXIS) > 0
             parent_new = jax.lax.pmin(par_part, AXIS)
@@ -190,7 +196,7 @@ def dbfs(mesh: Mesh, state: GraphState, src_slot, dst_slot):
         return found, parent, dist, expanded, steps
 
     return run(
-        state.vkey, state.valive, state.adj,
+        state.vkey, state.valive, state.adj_packed,
         jnp.asarray(src_slot, jnp.int32), jnp.asarray(dst_slot, jnp.int32),
     )
 
@@ -222,8 +228,11 @@ def dapply_ops(mesh: Mesh, state: GraphState, ops: OpBatch):
         # stays enabled); the outputs are correct by the psum/pmax combines.
         **_SM_NOCHECK_LEGACY_ONLY,
     )
-    def run(vkey_l, valive_l, vver_l, ecnt_l, adj_l, opc, k1, k2, expect):
+    def run(vkey_l, valive_l, vver_l, ecnt_l, adjw_l, opc, k1, k2, expect):
         sid, ssize, per, row0 = _row_block_info(v, mesh.shape[AXIS])
+        # legacy engine: run the lane loop on the dense local block, repack
+        # at the boundary (the production packed engines live in partition.py)
+        adj_l = unpack_bits(adjw_l, v).astype(jnp.uint8)
 
         def body(i, carry):
             vkey_l, valive_l, vver_l, ecnt_l, adj_l, res = carry
@@ -294,11 +303,13 @@ def dapply_ops(mesh: Mesh, state: GraphState, ops: OpBatch):
             return vkey_l, valive_l, vver_l, ecnt_l, adj_l, res
 
         res0 = jnp.zeros((b,), jnp.int32)
-        out = jax.lax.fori_loop(0, b, body, (vkey_l, valive_l, vver_l, ecnt_l, adj_l, res0))
-        return out
+        vkey_l, valive_l, vver_l, ecnt_l, adj_l, res = jax.lax.fori_loop(
+            0, b, body, (vkey_l, valive_l, vver_l, ecnt_l, adj_l, res0))
+        return (vkey_l, valive_l, vver_l, ecnt_l,
+                pack_bits(adj_l.astype(jnp.bool_)), res)
 
     vkey, valive, vver, ecnt, adj, res = run(
-        state.vkey, state.valive, state.vver, state.ecnt, state.adj,
+        state.vkey, state.valive, state.vver, state.ecnt, state.adj_packed,
         ops.opcode, ops.key1, ops.key2, ops.expect,
     )
     return GraphState(vkey, valive, vver, ecnt, adj), res

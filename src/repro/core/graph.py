@@ -17,9 +17,17 @@ dense, tiled device arrays:
               analogue of a unique VNode address.
   ecnt[V]   : the paper's ``ecnt`` — bumped by every edge add/remove whose
               source row is this vertex, and by logical vertex removal.
-  adj[V,V]  : adjacency matrix tiles, adj[i, j] = 1 iff edge slot_i -> slot_j.
-              The edge-list of v is row i; an ENode's ``ptv`` is implicit
-              (column index), and "ENode marked" is adj[i,j] == 0.
+  adj_packed[V, ceil(V/32)] : WORD-PACKED adjacency (DESIGN.md §10): bit
+              ``c % 32`` of word ``adj_packed[r, c // 32]`` is 1 iff edge
+              slot_r -> slot_c. One ENode costs exactly one bit — the same
+              budget the paper pays per edge — instead of the float32 lane a
+              dense matmul operand would occupy; bits at column positions
+              >= V in the last word are always zero (the padding invariant
+              every mutation preserves). The edge-list of v is row r; an
+              ENode's ``ptv`` is implicit (bit position), and "ENode marked"
+              is a cleared bit. Engines that want the float32 MXU path
+              unpack on the fly (``GraphState.adj``); the packed engines
+              stream the words directly (~32x less adjacency HBM traffic).
 
 "Unbounded" growth is functional capacity doubling (``grow``), amortized like
 a vector; the paper's unboundedness is heap allocation, ours is reallocation.
@@ -39,6 +47,120 @@ import jax.numpy as jnp
 # Constants
 # ----------------------------------------------------------------------------
 EMPTY_KEY = jnp.int32(-1)
+
+# Packed-adjacency word width (DESIGN.md §10). uint32 words: the native VPU
+# lane width, and the dtype jax.lax.population_count / shifts handle on every
+# backend.
+WORD_BITS = 32
+
+
+def packed_width(v: int) -> int:
+    """Words per packed row/bitset: ceil(v / 32)."""
+    return -(-int(v) // WORD_BITS)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a boolean bitset along the last axis: bool[..., V] -> uint32[..., W].
+
+    Bit ``c % 32`` of word ``c // 32`` holds ``bits[..., c]``; pad bits past
+    V are zero (the packing invariant, DESIGN.md §10).
+    """
+    v = bits.shape[-1]
+    w = packed_width(v)
+    pad = w * WORD_BITS - v
+    b = bits.astype(jnp.uint32)
+    if pad:
+        b = jnp.pad(b, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = b.reshape(bits.shape[:-1] + (w, WORD_BITS))
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    # bits within a word are disjoint, so the sum IS the bitwise OR
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, v: int) -> jax.Array:
+    """Inverse of ``pack_bits``: uint32[..., W] -> bool[..., v]."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
+    return flat[..., :v].astype(jnp.bool_)
+
+
+def bit_word(col):
+    """Word index of column ``col`` (int32 in, int32 out)."""
+    return jnp.asarray(col, jnp.int32) // WORD_BITS
+
+
+def bit_mask(col):
+    """Single-bit uint32 mask for column ``col``."""
+    return jnp.uint32(1) << (jnp.asarray(col, jnp.int32) % WORD_BITS).astype(jnp.uint32)
+
+
+def get_bit(words: jax.Array, row, col) -> jax.Array:
+    """Bool: is bit (row, col) set in a packed matrix uint32[R, W]."""
+    return (words[row, bit_word(col)] & bit_mask(col)) > 0
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Per-word set-bit count, int32 (same shape as ``words``)."""
+    return jax.lax.population_count(words).astype(jnp.int32)
+
+
+def or_reduce(words: jax.Array, axis: int) -> jax.Array:
+    """Bitwise-OR reduction of uint32 words along ``axis``.
+
+    Implemented as a static halving fold (log2 vectorized ORs) — XLA has no
+    native OR-reduce, and a fori_loop would serialize the row dimension the
+    packed BFS superstep reduces over.
+    """
+    x = jnp.moveaxis(words, axis, 0)
+    n = x.shape[0]
+    if n == 0:
+        return jnp.zeros(x.shape[1:], jnp.uint32)
+    p = 1
+    while p < n:
+        p *= 2
+    if p != n:
+        x = jnp.concatenate(
+            [x, jnp.zeros((p - n,) + x.shape[1:], x.dtype)], axis=0)
+    while p > 1:
+        p //= 2
+        x = x[:p] | x[p:2 * p]
+    return x[0]
+
+
+# ----------------------------------------------------------------------------
+# THE traversable-edge predicate (DESIGN.md §1, §10)
+# ----------------------------------------------------------------------------
+def traversable(adj, alive_src, alive_dst=None):
+    """The ONE traversable-edge predicate: edge u -> w is logically present
+    iff ``adj[u, w] & alive[u] & alive[w]`` — a dead endpoint makes the
+    ENode absent, exactly the paper's marked-ptv rule.
+
+    Every jnp-level edge view — dense AND sharded BFS (core/bfs.py,
+    core/partition.py, core/distributed.py), num_edges/degree/neighbors,
+    and hence the BFS-inherited index closures — derives from this helper
+    (or ``traversable_packed``) so the predicate cannot drift between
+    re-implementations; the Pallas kernels stream raw tiles and apply the
+    identical mask in their epilogue (their documented contract).
+    tests/test_packed.py pins all call sites differentially.
+
+    adj: (u)int/bool [R, V] (R = V, or a contiguous row slice of a sharded
+    state); alive_src: bool[R] liveness of the row slice; alive_dst: bool[V]
+    (defaults to ``alive_src``, valid only when R == V). Returns bool[R, V].
+    """
+    if alive_dst is None:
+        alive_dst = alive_src
+    return (adj > 0) & alive_src[:, None] & alive_dst[None, :]
+
+
+def traversable_packed(adj_packed, alive_src, alive_dst_words):
+    """``traversable`` on packed words: uint32[R, W] of live edge bits.
+
+    alive_dst_words is the packed destination-liveness bitset
+    (``pack_bits(alive)``); dead rows contribute all-zero words.
+    """
+    return jnp.where(alive_src[:, None],
+                     adj_packed & alive_dst_words[None, :], jnp.uint32(0))
 
 # Op codes for batched operations (structure-of-arrays op batches).
 OP_NOP = 0
@@ -76,17 +198,38 @@ RESULT_NAMES = {
 
 
 class GraphState(NamedTuple):
-    """Dense dynamic graph state. All fields are device arrays."""
+    """Dense dynamic graph state. All fields are device arrays.
 
-    vkey: jax.Array    # int32[V]
-    valive: jax.Array  # bool[V]
-    vver: jax.Array    # int32[V]
-    ecnt: jax.Array    # int32[V]
-    adj: jax.Array     # uint8[V, V]
+    Adjacency is STORED word-packed (``adj_packed``, DESIGN.md §10); the
+    ``adj`` property materializes the uint8[V, V] dense view for engines
+    that choose the float32-MXU expansion path (a transient — the packed
+    words remain the only persistent O(V^2/32) representation).
+    """
+
+    vkey: jax.Array        # int32[V]
+    valive: jax.Array      # bool[V]
+    vver: jax.Array        # int32[V]
+    ecnt: jax.Array        # int32[V]
+    adj_packed: jax.Array  # uint32[V, ceil(V/32)]
 
     @property
     def capacity(self) -> int:
         return self.vkey.shape[0]
+
+    @property
+    def words(self) -> int:
+        """Packed words per adjacency row: ceil(capacity / 32)."""
+        return self.adj_packed.shape[1]
+
+    @property
+    def adj(self) -> jax.Array:
+        """Dense uint8[V, V] adjacency view (unpacked on demand)."""
+        return unpack_bits(self.adj_packed, self.capacity).astype(jnp.uint8)
+
+    @property
+    def alive_words(self) -> jax.Array:
+        """Packed liveness bitset uint32[W] (for ``traversable_packed``)."""
+        return pack_bits(self.valive)
 
 
 class OpBatch(NamedTuple):
@@ -117,26 +260,30 @@ def make_graph(capacity: int = 256) -> GraphState:
         valive=jnp.zeros((v,), dtype=jnp.bool_),
         vver=jnp.zeros((v,), dtype=jnp.int32),
         ecnt=jnp.zeros((v,), dtype=jnp.int32),
-        adj=jnp.zeros((v, v), dtype=jnp.uint8),
+        adj_packed=jnp.zeros((v, packed_width(v)), dtype=jnp.uint32),
     )
 
 
 def grow(state: GraphState, new_capacity: int) -> GraphState:
     """Functionally grow capacity (the 'unbounded' part of the paper's title).
 
-    Amortized O(V^2) like a vector doubling; existing slots, versions and
-    edges are preserved, new slots are free.
+    Amortized O(V^2/32) like a vector doubling; existing slots, versions and
+    edges are preserved, new slots are free. Packed rows grow in place: a
+    column's (word, bit) address depends only on the column index, and the
+    padding invariant guarantees the bits the new columns move into were
+    zero (DESIGN.md §10).
     """
     old = state.capacity
     if new_capacity <= old:
         return state
     pad = new_capacity - old
+    wpad = packed_width(new_capacity) - state.words
     return GraphState(
         vkey=jnp.concatenate([state.vkey, jnp.full((pad,), EMPTY_KEY, jnp.int32)]),
         valive=jnp.concatenate([state.valive, jnp.zeros((pad,), jnp.bool_)]),
         vver=jnp.concatenate([state.vver, jnp.zeros((pad,), jnp.int32)]),
         ecnt=jnp.concatenate([state.ecnt, jnp.zeros((pad,), jnp.int32)]),
-        adj=jnp.pad(state.adj, ((0, pad), (0, pad))),
+        adj_packed=jnp.pad(state.adj_packed, ((0, pad), (0, wpad))),
     )
 
 
@@ -194,7 +341,7 @@ def contains_edge(state: GraphState, k, l) -> jax.Array:
     sk = find_slot(state, jnp.asarray(k, jnp.int32))
     sl = find_slot(state, jnp.asarray(l, jnp.int32))
     both = (sk >= 0) & (sl >= 0)
-    present = state.adj[jnp.maximum(sk, 0), jnp.maximum(sl, 0)] > 0
+    present = get_bit(state.adj_packed, jnp.maximum(sk, 0), jnp.maximum(sl, 0))
     return jnp.where(
         both,
         jnp.where(present, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT),
@@ -208,10 +355,11 @@ def num_vertices(state: GraphState) -> jax.Array:
 
 def num_edges(state: GraphState) -> jax.Array:
     """Edges between *alive* endpoints (lazy rows of dead vertices excluded,
-    mirroring the paper: an ENode whose ptv is marked is logically absent)."""
-    m = state.valive
-    live = state.adj * (m[:, None] & m[None, :]).astype(state.adj.dtype)
-    return jnp.sum(live.astype(jnp.int32))
+    mirroring the paper: an ENode whose ptv is marked is logically absent).
+    One popcount over the ``traversable_packed`` words (DESIGN.md §10)."""
+    live = traversable_packed(state.adj_packed, state.valive,
+                              state.alive_words)
+    return jnp.sum(popcount(live))
 
 
 def to_networkx_like(state: GraphState) -> tuple[list[int], list[tuple[int, int]]]:

@@ -75,8 +75,37 @@ from repro.core.graph import (
     R_VERTEX_NOT_PRESENT,
     GraphState,
     OpBatch,
+    bit_mask,
+    bit_word,
     find_slot,
+    get_bit,
+    pack_bits,
+    popcount,
+    traversable,
+    traversable_packed,
+    unpack_bits,
 )
+
+
+# ----------------------------------------------------------------------------
+# Packed-word adjacency primitives (DESIGN.md §10): every edge mutation is a
+# masked bit set/clear on one uint32 word instead of a dense row/cell write.
+# ----------------------------------------------------------------------------
+def _clear_row_col(adj_packed, slot, do):
+    """Clear adjacency row ``slot`` and column bit ``slot`` in every row
+    (the stale-adjacency scrub a slot reuse needs), when ``do``."""
+    w, m = bit_word(slot), bit_mask(slot)
+    cleared = adj_packed.at[slot, :].set(jnp.uint32(0))
+    cleared = cleared.at[:, w].set(cleared[:, w] & ~m)
+    return jnp.where(do, cleared, adj_packed)
+
+
+def _set_edge_bit(adj_packed, row, col, present, do):
+    """Masked single-bit write: bit (row, col) := present when ``do``."""
+    w, m = bit_word(col), bit_mask(col)
+    cur = adj_packed[row, w]
+    new = jnp.where(do, jnp.where(present, cur | m, cur & ~m), cur)
+    return adj_packed.at[row, w].set(new)
 
 
 # ----------------------------------------------------------------------------
@@ -100,11 +129,7 @@ def _add_vertex(state: GraphState, k: jax.Array):
     valive = state.valive.at[tgt].set(jnp.where(do, True, state.valive[tgt]))
     vver = state.vver.at[tgt].add(jnp.where(do, 1, 0))
     # A reused slot may carry stale adjacency from a dead predecessor: clear.
-    adj = jnp.where(
-        do,
-        state.adj.at[tgt, :].set(0).at[:, tgt].set(0),
-        state.adj,
-    )
+    adj = _clear_row_col(state.adj_packed, tgt, do)
     ecnt = state.ecnt.at[tgt].set(jnp.where(do, 0, state.ecnt[tgt]))
     res = jnp.where(exists, R_FALSE, jnp.where(full, R_TABLE_FULL, R_TRUE))
     return GraphState(vkey, valive, vver, ecnt, adj), res.astype(jnp.int32)
@@ -121,11 +146,13 @@ def _remove_vertex(state: GraphState, k: jax.Array):
     # Incoming edges must invalidate their sources' collects: removing v
     # changes reachability through every u with (u -> v), and the paper's
     # adversary argument needs those rows' versions to move. Bump ecnt of all
-    # sources of live in-edges (vectorized FAA over the column).
-    in_src = (state.adj[:, tgt] > 0) & state.valive & do
+    # sources of live in-edges (vectorized FAA over the column's bit lane).
+    in_src = ((state.adj_packed[:, bit_word(tgt)] & bit_mask(tgt)) > 0) \
+        & state.valive & do
     ecnt = ecnt + in_src.astype(jnp.int32)
     res = jnp.where(do, R_TRUE, R_FALSE)
-    return GraphState(state.vkey, valive, vver, ecnt, state.adj), res.astype(jnp.int32)
+    return GraphState(state.vkey, valive, vver, ecnt,
+                      state.adj_packed), res.astype(jnp.int32)
 
 
 def _edge_op(state: GraphState, k, l, expect, *, add: bool):
@@ -134,16 +161,14 @@ def _edge_op(state: GraphState, k, l, expect, *, add: bool):
     both = (sk >= 0) & (sl >= 0)
     rk, rl = jnp.maximum(sk, 0), jnp.maximum(sl, 0)
     cas_ok = (expect < 0) | (state.ecnt[rk] == expect)
-    present = state.adj[rk, rl] > 0
+    present = get_bit(state.adj_packed, rk, rl)
     if add:
         do = both & cas_ok & ~present
         ok_res = jnp.where(present, R_EDGE_PRESENT, R_EDGE_ADDED)
-        newval = jnp.uint8(1)
     else:
         do = both & cas_ok & present
         ok_res = jnp.where(present, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT)
-        newval = jnp.uint8(0)
-    adj = state.adj.at[rk, rl].set(jnp.where(do, newval, state.adj[rk, rl]))
+    adj = _set_edge_bit(state.adj_packed, rk, rl, jnp.asarray(add), do)
     ecnt = state.ecnt.at[rk].add(jnp.where(do, 1, 0))  # the paper's FAA
     res = jnp.where(
         both,
@@ -157,7 +182,7 @@ def _contains_edge_op(state: GraphState, k, l):
     sk = find_slot(state, k)
     sl = find_slot(state, l)
     both = (sk >= 0) & (sl >= 0)
-    present = state.adj[jnp.maximum(sk, 0), jnp.maximum(sl, 0)] > 0
+    present = get_bit(state.adj_packed, jnp.maximum(sk, 0), jnp.maximum(sl, 0))
     res = jnp.where(
         both,
         jnp.where(present, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT),
@@ -355,7 +380,11 @@ def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array,
     valive = state.valive.at[alloc].set(True, mode="drop")
     vver = state.vver.at[alloc].add(1, mode="drop")
     ecnt = state.ecnt.at[alloc].set(0, mode="drop")
-    adj = state.adj.at[alloc, :].set(0, mode="drop").at[:, alloc].set(0, mode="drop")
+    # stale-adjacency scrub on reused slots: rows by scatter, columns by ONE
+    # packed AND-NOT mask (several lanes may land in the same word)
+    adj = state.adj_packed.at[alloc, :].set(jnp.uint32(0), mode="drop")
+    clear_cols = jnp.zeros((cap,), jnp.bool_).at[alloc].set(True, mode="drop")
+    adj = adj & ~pack_bits(clear_cols)[None, :]
     res = jnp.where(is_addv, jnp.where(wants, R_TRUE, R_FALSE), res)
 
     # --- ContainsVertex -------------------------------------------------------
@@ -364,14 +393,20 @@ def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array,
     # --- Edge ops -------------------------------------------------------------
     both = (s1 >= 0) & (s2 >= 0)
     r1, r2 = jnp.maximum(s1, 0), jnp.maximum(s2, 0)
-    cur = state.adj[r1, r2] > 0
+    cur = get_bit(state.adj_packed, r1, r2)
     cas_ok = (ops.expect < 0) | (state.ecnt[r1] == ops.expect)
 
     do_add = is_adde & both & cas_ok & ~cur
     do_rem = is_reme & both & cas_ok & cur
-    tgt_r = jnp.where(do_add | do_rem, r1, cap)
-    tgt_c = jnp.where(do_add | do_rem, r2, cap)
-    adj = adj.at[tgt_r, tgt_c].set(do_add.astype(state.adj.dtype), mode="drop")
+    # masked bit set/clear: clean lanes own pairwise-distinct source rows, so
+    # the word read-modify-writes below are scatter-conflict-free (the word is
+    # re-read AFTER the AddVertex scrub so unrelated bits survive)
+    fire = do_add | do_rem
+    tgt_r = jnp.where(fire, r1, cap)
+    wcol, mbit = bit_word(r2), bit_mask(r2)
+    curw = adj[jnp.minimum(tgt_r, cap - 1), wcol]
+    neww = jnp.where(do_add, curw | mbit, curw & ~mbit)
+    adj = adj.at[tgt_r, wcol].set(neww, mode="drop")
     ecnt = ecnt.at[tgt_r].add(1, mode="drop")
 
     res = jnp.where(
@@ -441,19 +476,15 @@ def _edge_op_undirected(state: GraphState, k, l, expect, *, add: bool):
     both = (sk >= 0) & (sl >= 0)
     rk, rl = jnp.maximum(sk, 0), jnp.maximum(sl, 0)
     cas_ok = (expect < 0) | (state.ecnt[rk] == expect)
-    present = state.adj[rk, rl] > 0
+    present = get_bit(state.adj_packed, rk, rl)
     if add:
         do = both & cas_ok & ~present
         ok_res = jnp.where(present, R_EDGE_PRESENT, R_EDGE_ADDED)
-        newval = jnp.uint8(1)
     else:
         do = both & cas_ok & present
         ok_res = jnp.where(present, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT)
-        newval = jnp.uint8(0)
-    cur_kl = state.adj[rk, rl]
-    cur_lk = state.adj[rl, rk]
-    adj = state.adj.at[rk, rl].set(jnp.where(do, newval, cur_kl))
-    adj = adj.at[rl, rk].set(jnp.where(do, newval, cur_lk))
+    adj = _set_edge_bit(state.adj_packed, rk, rl, jnp.asarray(add), do)
+    adj = _set_edge_bit(adj, rl, rk, jnp.asarray(add), do)
     ecnt = state.ecnt.at[rk].add(jnp.where(do, 1, 0))
     ecnt = ecnt.at[rl].add(jnp.where(do & (rk != rl), 1, 0))
     res = jnp.where(
@@ -488,7 +519,7 @@ def neighbors(state: GraphState, k):
     same sense as ContainsVertex (paper Thm 4.2(i))."""
     slot = find_slot(state, jnp.asarray(k, jnp.int32))
     ok = slot >= 0
-    row = state.adj[jnp.maximum(slot, 0)] > 0
+    row = unpack_bits(state.adj_packed[jnp.maximum(slot, 0)], state.capacity)
     live = row & state.valive & ok
     n = jnp.sum(live.astype(jnp.int32))
     order = jnp.argsort(~live)  # live slots first (stable)
@@ -498,13 +529,15 @@ def neighbors(state: GraphState, k):
 
 @jax.jit
 def degree(state: GraphState, k):
-    """(out_degree, in_degree) of v(k); (-1, -1) if absent."""
+    """(out_degree, in_degree) of v(k); (-1, -1) if absent. Out-degree is one
+    popcount over the slot's traversable row words (DESIGN.md §10)."""
     slot = find_slot(state, jnp.asarray(k, jnp.int32))
     ok = slot >= 0
     s = jnp.maximum(slot, 0)
     live = state.valive
-    out_d = jnp.sum(((state.adj[s] > 0) & live).astype(jnp.int32))
-    in_d = jnp.sum(((state.adj[:, s] > 0) & live & live[s]).astype(jnp.int32))
+    out_d = jnp.sum(popcount(state.adj_packed[s] & state.alive_words))
+    col = (state.adj_packed[:, bit_word(s)] & bit_mask(s)) > 0
+    in_d = jnp.sum((col & live & live[s]).astype(jnp.int32))
     return (jnp.where(ok, out_d, -1), jnp.where(ok, in_d, -1))
 
 
@@ -521,7 +554,8 @@ def compact(state: GraphState) -> GraphState:
     dead = (~state.valive) & (state.vkey != EMPTY_KEY)
     keep = ~dead
     vkey = jnp.where(dead, EMPTY_KEY, state.vkey)
-    adj = state.adj * (keep[:, None] & keep[None, :]).astype(state.adj.dtype)
+    adj = jnp.where(keep[:, None],
+                    state.adj_packed & pack_bits(keep)[None, :], jnp.uint32(0))
     return GraphState(vkey, state.valive, state.vver, state.ecnt, adj)
 
 

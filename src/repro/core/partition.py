@@ -5,8 +5,9 @@
 split placement over a 1-D device mesh (axis ``"rows"``, shared with
 core/distributed.py):
 
-  * ``adj`` — the only O(V^2) array — is ROW-SHARDED: every device owns
-    V/S contiguous adjacency rows (the edge-lists of its vertices);
+  * ``adj_packed`` — the only O(V^2/32) array (word-packed adjacency,
+    DESIGN.md §10) — is ROW-SHARDED: every device owns V/S contiguous
+    packed adjacency rows (the edge-lists of its vertices);
   * ``vkey``/``valive``/``vver``/``ecnt`` — the O(V) version metadata — are
     REPLICATED, so lookups (LocV/LocC), the double-collect validation
     vector, and the lane-order mutation schedule are shard-local replicated
@@ -36,7 +37,12 @@ tests/test_linearizability_prop.py enforces it):
                     a LOCAL [Q, V/S] @ [V/S, V] frontier-matrix product per
                     shard (``backend="pallas"`` reuses the bfs_multi_step
                     kernel on the shard's row slice) followed by ONE psum
-                    frontier exchange + pmin parent combine. Per-query early
+                    frontier exchange + pmin parent combine. The packed
+                    backends ("packed", "packed_pallas", DESIGN.md §10)
+                    expand over the shard's packed WORDS and exchange the
+                    partial next frontiers as packed uint32 bitsets —
+                    [Q, V/32] words on the wire instead of [Q, V] int32, a
+                    32x cut in frontier-exchange volume. Per-query early
                     exit and the double-collect version check carry over
                     unchanged because the validation vector is replicated.
 
@@ -53,7 +59,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import graph as ggraph
 from repro.core import ops as gops
-from repro.core.bfs import MultiBFSResult
+from repro.core.bfs import PACKED_BACKENDS, MultiBFSResult
 from repro.core.distributed import (
     AXIS,
     _SM_NOCHECK,
@@ -81,6 +87,11 @@ from repro.core.graph import (
     R_VERTEX_NOT_PRESENT,
     GraphState,
     OpBatch,
+    bit_mask,
+    bit_word,
+    or_reduce,
+    pack_bits,
+    unpack_bits,
 )
 from repro.parallel.sharding import graph_state_shardings
 
@@ -97,16 +108,17 @@ class ShardedGraphState:
     the state alone.
     """
 
-    def __init__(self, mesh, vkey, valive, vver, ecnt, adj):
+    def __init__(self, mesh, vkey, valive, vver, ecnt, adj_packed):
         self.mesh = mesh
         self.vkey = vkey
         self.valive = valive
         self.vver = vver
         self.ecnt = ecnt
-        self.adj = adj
+        self.adj_packed = adj_packed
 
     def tree_flatten(self):
-        return (self.vkey, self.valive, self.vver, self.ecnt, self.adj), self.mesh
+        return (self.vkey, self.valive, self.vver, self.ecnt,
+                self.adj_packed), self.mesh
 
     @classmethod
     def tree_unflatten(cls, mesh, children):
@@ -122,7 +134,13 @@ class ShardedGraphState:
 
     def as_dense(self) -> GraphState:
         """View as a GraphState pytree (arrays keep their placement)."""
-        return GraphState(self.vkey, self.valive, self.vver, self.ecnt, self.adj)
+        return GraphState(self.vkey, self.valive, self.vver, self.ecnt,
+                          self.adj_packed)
+
+    @property
+    def adj(self) -> jax.Array:
+        """Dense uint8[V, V] adjacency view (unpacked on demand)."""
+        return self.as_dense().adj
 
     def __repr__(self):  # pragma: no cover - debugging aid
         return (f"ShardedGraphState(capacity={self.capacity}, "
@@ -145,7 +163,7 @@ def shard_state(mesh, dense: GraphState) -> ShardedGraphState:
         jax.device_put(dense.valive, sh["valive"]),
         jax.device_put(dense.vver, sh["vver"]),
         jax.device_put(dense.ecnt, sh["ecnt"]),
-        jax.device_put(dense.adj, sh["adj"]),
+        jax.device_put(dense.adj_packed, sh["adj_packed"]),
     )
 
 
@@ -189,13 +207,14 @@ def compact(state: ShardedGraphState) -> ShardedGraphState:
         shard_map, mesh=mesh, in_specs=(P(AXIS, None), P()),
         out_specs=P(AXIS, None), **_SM_NOCHECK,
     )
-    def scrub(adj_l, keep_g):
+    def scrub(adjw_l, keep_g):
         _, _, per, row0 = _row_block_info(v, size)
         keep_l = jax.lax.dynamic_slice(keep_g, (row0,), (per,))
-        return adj_l * (keep_l[:, None] & keep_g[None, :]).astype(adj_l.dtype)
+        return jnp.where(keep_l[:, None],
+                         adjw_l & pack_bits(keep_g)[None, :], jnp.uint32(0))
 
     return ShardedGraphState(mesh, vkey, state.valive, state.vver,
-                             state.ecnt, scrub(state.adj, keep))
+                             state.ecnt, scrub(state.adj_packed, keep))
 
 
 # ----------------------------------------------------------------------------
@@ -271,27 +290,35 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
         ecnt = ecnt.at[alloc].set(0, mode="drop")
         lr = alloc - row0
         lr = jnp.where((lr >= 0) & (lr < per), lr, per)
-        adj_l = adj_l.at[lr, :].set(0, mode="drop")
-        adj_l = adj_l.at[:, alloc].set(0, mode="drop")
+        adj_l = adj_l.at[lr, :].set(jnp.uint32(0), mode="drop")
+        # column-bit scrub: one packed AND-NOT mask over the local rows
+        clear_cols = jnp.zeros((v,), jnp.bool_).at[alloc].set(True, mode="drop")
+        adj_l = adj_l & ~pack_bits(clear_cols)[None, :]
         res = jnp.where(is_addv, jnp.where(wantsv, R_TRUE, R_FALSE), res)
 
         # ContainsVertex
         res = jnp.where(is_conv, jnp.where(s1 >= 0, R_TRUE, R_FALSE), res)
 
-        # Edge ops: presence lives on the owner shard -> masked read + pmax
+        # Edge ops: presence lives on the owner shard -> masked bit read + pmax
         both = (s1 >= 0) & (s2 >= 0)
         r1, r2 = jnp.maximum(s1, 0), jnp.maximum(s2, 0)
         l1 = r1 - row0
         mine1 = (l1 >= 0) & (l1 < per)
-        cur_loc = adj0_l[jnp.clip(l1, 0, per - 1), r2]
+        cur_loc = (adj0_l[jnp.clip(l1, 0, per - 1), bit_word(r2)]
+                   & bit_mask(r2)) > 0
         cur = jax.lax.pmax(
             jnp.where(mine1, cur_loc.astype(jnp.int32), 0), AXIS) > 0
         cas_ok = (expect < 0) | (ecnt0[r1] == expect)
 
         do_add = is_adde & both & cas_ok & ~cur
         do_rem = is_reme & both & cas_ok & cur
+        # masked bit set/clear on the owner's word (clean lanes own
+        # pairwise-distinct rows, so the word RMWs are conflict-free)
         el = jnp.where((do_add | do_rem) & mine1, l1, per)
-        adj_l = adj_l.at[el, r2].set(do_add.astype(adj_l.dtype), mode="drop")
+        wc, mb = bit_word(r2), bit_mask(r2)
+        curw = adj_l[jnp.clip(el, 0, per - 1), wc]
+        neww = jnp.where(do_add, curw | mb, curw & ~mb)
+        adj_l = adj_l.at[el, wc].set(neww, mode="drop")
         ecnt = ecnt.at[jnp.where(do_add | do_rem, r1, v)].add(1, mode="drop")
 
         res = jnp.where(
@@ -335,8 +362,12 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
             ecnt = ecnt.at[tgt].set(0, mode="drop")
             ltgt = tgt - row0
             ltgt = jnp.where((ltgt >= 0) & (ltgt < per), ltgt, per)
-            adj_l = adj_l.at[ltgt, :].set(0, mode="drop")
-            adj_l = adj_l.at[:, tgt].set(0, mode="drop")
+            adj_l = adj_l.at[ltgt, :].set(jnp.uint32(0), mode="drop")
+            # column-bit scrub, guarded by the scalar do_av
+            tsafe = jnp.minimum(tgt, v - 1)
+            colw = adj_l[:, bit_word(tsafe)]
+            adj_l = adj_l.at[:, bit_word(tsafe)].set(
+                jnp.where(do_av, colw & ~bit_mask(tsafe), colw))
             r_addv = jnp.where(exists, R_FALSE, jnp.where(have, R_TRUE, R_TABLE_FULL))
 
             # RemoveVertex (in-edge-source bumps read the pre-lane liveness)
@@ -348,7 +379,8 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
             ecnt = ecnt.at[t].add(1, mode="drop")
             col = jnp.maximum(sa, 0)
             valive_l = jax.lax.dynamic_slice(valive_in, (row0,), (per,))
-            bump_l = do_rv & (adj_l[:, col] > 0) & valive_l
+            bump_l = do_rv & ((adj_l[:, bit_word(col)] & bit_mask(col)) > 0) \
+                & valive_l
             bump = jax.lax.all_gather(bump_l, AXIS, tiled=True)
             ecnt = ecnt + bump.astype(jnp.int32)
             r_remv = jnp.where(sa >= 0, R_TRUE, R_FALSE)
@@ -362,13 +394,17 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
             la = ra - row0
             amine = (la >= 0) & (la < per)
             cur = jax.lax.pmax(
-                jnp.where(amine, adj_l[jnp.clip(la, 0, per - 1), rb].astype(jnp.int32), 0),
+                jnp.where(amine,
+                          ((adj_l[jnp.clip(la, 0, per - 1), bit_word(rb)]
+                            & bit_mask(rb)) > 0).astype(jnp.int32), 0),
                 AXIS) > 0
             ecas = (exp < 0) | (ecnt[ra] == exp)
             do_ea = m & (op == OP_ADD_E) & eboth & ecas & ~cur
             do_er = m & (op == OP_REM_E) & eboth & ecas & cur
             ela = jnp.where((do_ea | do_er) & amine, la, per)
-            adj_l = adj_l.at[ela, rb].set(do_ea.astype(adj_l.dtype), mode="drop")
+            ecurw = adj_l[jnp.clip(ela, 0, per - 1), bit_word(rb)]
+            enew = jnp.where(do_ea, ecurw | bit_mask(rb), ecurw & ~bit_mask(rb))
+            adj_l = adj_l.at[ela, bit_word(rb)].set(enew, mode="drop")
             ecnt = ecnt.at[jnp.where(do_ea | do_er, ra, v)].add(1, mode="drop")
             r_adde = jnp.where(eboth, jnp.where(ecas, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_ADDED), R_CAS_FAIL), R_VERTEX_NOT_PRESENT)
             r_reme = jnp.where(eboth, jnp.where(ecas, jnp.where(cur, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT), R_CAS_FAIL), R_VERTEX_NOT_PRESENT)
@@ -392,7 +428,7 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
         return vkey, valive, vver, ecnt, adj_l, res
 
     vkey, valive, vver, ecnt, adj, res = run(
-        state.vkey, state.valive, state.vver, state.ecnt, state.adj,
+        state.vkey, state.valive, state.vver, state.ecnt, state.adj_packed,
         ops.opcode, ops.key1, ops.key2, ops.expect,
         clean, serial, wants, slot,
     )
@@ -432,8 +468,24 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
         # superstep), which the 0.4.x checker cannot infer past while_loop.
         **_SM_NOCHECK,
     )
-    def run(alive, adj_l, srcs, dsts):
+    def run(alive, adjw_l, srcs, dsts):
         _, _, per, row0 = _row_block_info(v, size)
+        packed = backend in PACKED_BACKENDS
+        alive_l = jax.lax.dynamic_slice(alive, (row0,), (per,))
+        # the jnp-level edge views derive from the ONE traversable
+        # predicate (row-slice form, DESIGN.md §10) — the Pallas branches
+        # stream raw tiles and apply the same mask in their epilogue, per
+        # the kernel contract. Loop-invariant, so hoisted out of the body.
+        t_l = tw_l = None
+        if backend == "packed":
+            tw_l = ggraph.traversable_packed(adjw_l, alive_l,
+                                             pack_bits(alive))
+            # parent candidates still need per-bit rows, unpacked ONCE
+            t_l = unpack_bits(tw_l, v)
+        elif backend == "jnp":
+            t_l = ggraph.traversable(unpack_bits(adjw_l, v), alive_l, alive)
+        elif backend == "pallas":
+            adj_l = unpack_bits(adjw_l, v).astype(jnp.uint8)
         src_ok = (srcs >= 0) & alive[jnp.maximum(srcs, 0)]
         s = jnp.maximum(srcs, 0)
         frontier0 = jnp.zeros((q, v), jnp.bool_).at[jnp.arange(q), s].set(src_ok)
@@ -465,14 +517,37 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
                 new_p, par_p = multi_bfs_step(f_l, adj_l, alive, visited)
                 reach_part = new_p  # already masked by alive & ~visited
                 cand = jnp.where(par_p >= 0, par_p + row0, INT32_MAX)
-            else:
-                fa = f_l.astype(jnp.float32)
-                reach_part = (fa @ adj_l.astype(jnp.float32)) > 0
+            elif backend == "packed_pallas":
+                from repro.kernels.bfs_multi_step.ops import multi_bfs_step_packed
+
+                new_p, par_p = multi_bfs_step_packed(f_l, adjw_l, alive,
+                                                     visited)
+                reach_part = new_p  # already masked by alive & ~visited
+                cand = jnp.where(par_p >= 0, par_p + row0, INT32_MAX)
+            elif backend == "packed":
+                sel = jnp.where(f_l[:, :, None], tw_l[None, :, :],
+                                jnp.uint32(0))
+                reach_part = unpack_bits(or_reduce(sel, 1), v)
                 idx = (jnp.arange(per, dtype=jnp.int32) + row0)[:, None, None]
-                cand3 = jnp.where(f_l.T[:, :, None] & (adj_l[:, None, :] > 0),
+                cand3 = jnp.where(f_l.T[:, :, None] & t_l[:, None, :],
                                   idx, INT32_MAX)
                 cand = jnp.min(cand3, axis=0)
-            reach = jax.lax.psum(reach_part.astype(jnp.int32), AXIS) > 0
+            else:
+                fa = f_l.astype(jnp.float32)
+                reach_part = (fa @ t_l.astype(jnp.float32)) > 0
+                idx = (jnp.arange(per, dtype=jnp.int32) + row0)[:, None, None]
+                cand3 = jnp.where(f_l.T[:, :, None] & t_l[:, None, :],
+                                  idx, INT32_MAX)
+                cand = jnp.min(cand3, axis=0)
+            if packed:
+                # the DESIGN.md §10 frontier exchange: the partial next
+                # frontiers cross the wire as packed uint32 bitsets
+                # ([Q, V/32] words, 32x less than the int32 psum), OR-folded
+                # after ONE all_gather
+                parts = jax.lax.all_gather(pack_bits(reach_part), AXIS)
+                reach = unpack_bits(or_reduce(parts, 0), v)
+            else:
+                reach = jax.lax.psum(reach_part.astype(jnp.int32), AXIS) > 0
             par_min = jax.lax.pmin(cand, AXIS)
             new = reach & alive[None, :] & ~visited
             parent = jnp.where(new, par_min, parent)
@@ -491,7 +566,7 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
         return found, parent, dist, expanded, steps, supersteps
 
     found, parent, dist, expanded, steps, supersteps = run(
-        state.valive, state.adj, src_slots, dst_slots)
+        state.valive, state.adj_packed, src_slots, dst_slots)
     return MultiBFSResult(found, parent, dist, expanded, steps, supersteps)
 
 

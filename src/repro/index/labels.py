@@ -26,7 +26,10 @@ landmark on any s →* hub →* t path — of every covered pair:
 
 So the pruned labels decide the same pairs as the unpruned closures with
 far fewer bits, concentrated on the few high-degree hubs — which is what
-makes the label_join kernel's @pl.when pruned-tile skip effective.
+makes the label_join kernel's @pl.when pruned-tile skip effective. The
+surviving label bits are STORED word-packed over the landmark axis
+(uint32[V, ceil(L/32)], DESIGN.md §10): one bit per (vertex, landmark)
+pair, joined by popcount over AND-ed words.
 
 Decidability: a nonempty label intersection proves reachability outright.
 An EMPTY intersection proves unreachability only when the landmark set is
@@ -51,7 +54,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bfs import multi_bfs
-from repro.core.graph import GraphState, version_vector
+from repro.core.graph import (
+    GraphState,
+    pack_bits,
+    packed_width,
+    unpack_bits,
+    version_vector,
+)
 
 
 class ReachIndex(NamedTuple):
@@ -59,12 +68,15 @@ class ReachIndex(NamedTuple):
 
     Array fields are device arrays; ``complete`` and ``requested`` are host
     metadata (the index is orchestrated host-side like the double-collect
-    sessions, with jitted array helpers underneath).
+    sessions, with jitted array helpers underneath). The pruned labels are
+    stored WORD-PACKED over the landmark axis (uint32[V, ceil(L/32)],
+    DESIGN.md §10): a label probe gathers 32x fewer bytes per query row and
+    the label join is a popcount over AND-ed words.
     """
 
     landmarks: jax.Array   # int32[L]   — landmark slot ids, degree-ordered
-    out_label: jax.Array   # bool[V, L] — pruned: slot v reaches landmark i
-    in_label: jax.Array    # bool[V, L] — pruned: landmark i reaches slot v
+    out_label: jax.Array   # uint32[V, ceil(L/32)] — packed: v reaches lm i
+    in_label: jax.Array    # uint32[V, ceil(L/32)] — packed: lm i reaches v
     fwd: jax.Array         # bool[L, V] — unpruned forward closures (refresh)
     bwd: jax.Array         # bool[L, V] — unpruned backward closures (refresh)
     alive: jax.Array       # bool[V]    — liveness at build time
@@ -83,6 +95,16 @@ class ReachIndex(NamedTuple):
     def num_landmarks(self) -> int:
         return self.landmarks.shape[0]
 
+    @property
+    def out_label_bits(self) -> jax.Array:
+        """Unpacked bool[V, L] view of the packed OUT labels."""
+        return unpack_bits(self.out_label, self.num_landmarks)
+
+    @property
+    def in_label_bits(self) -> jax.Array:
+        """Unpacked bool[V, L] view of the packed IN labels."""
+        return unpack_bits(self.in_label, self.num_landmarks)
+
 
 def _as_dense(state) -> GraphState:
     """Dense view of a dense or mesh-sharded state (index build gathers:
@@ -97,9 +119,12 @@ def _as_dense(state) -> GraphState:
 
 def _transposed(state: GraphState) -> GraphState:
     """The reverse graph: same slots/versions, adjacency transposed.
-    BFS on it from landmark i yields {v : v reaches i} = bwd[i]."""
+    BFS on it from landmark i yields {v : v reaches i} = bwd[i]. A packed
+    transpose is unpack -> T -> repack — a build-time cost the two closure
+    traversals dwarf (DESIGN.md §10)."""
     return GraphState(state.vkey, state.valive, state.vver, state.ecnt,
-                      state.adj.T)
+                      pack_bits(unpack_bits(state.adj_packed,
+                                            state.capacity).T))
 
 
 def pad8(idx: np.ndarray) -> np.ndarray:
@@ -196,14 +221,14 @@ def build_index(state, num_landmarks: int | None = None, *,
         bwd = jnp.zeros((0, v), jnp.bool_)
     else:
         fwd, bwd = _closures(dense, lm_j, backend)
-    out_label, in_label = _prune(fwd, bwd, lm_j) if n else (
+    out_bits, in_bits = _prune(fwd, bwd, lm_j) if n else (
         jnp.zeros((v, 0), jnp.bool_), jnp.zeros((v, 0), jnp.bool_))
     alive = dense.valive
     complete = coverage_complete(lm, alive, v)
     return ReachIndex(
         landmarks=lm_j,
-        out_label=out_label,
-        in_label=in_label,
+        out_label=pack_bits(out_bits),
+        in_label=pack_bits(in_bits),
         fwd=fwd,
         bwd=bwd,
         alive=alive,
@@ -240,9 +265,10 @@ def rebuild_rows(index: ReachIndex, state, aff_fwd: np.ndarray,
 
     fwd = recompute(aff_fwd, index.fwd, dense)
     bwd = recompute(aff_bwd, index.bwd, _transposed(dense))
-    out_label, in_label = _prune(fwd, bwd, index.landmarks)
+    out_bits, in_bits = _prune(fwd, bwd, index.landmarks)
     alive = dense.valive
     complete = coverage_complete(lm, alive, index.capacity)
     return index._replace(
-        out_label=out_label, in_label=in_label, fwd=fwd, bwd=bwd,
+        out_label=pack_bits(out_bits), in_label=pack_bits(in_bits),
+        fwd=fwd, bwd=bwd,
         alive=alive, versions=version_vector(dense), complete=complete)

@@ -2,11 +2,13 @@
 (DESIGN.md §9).
 
 A batch of Q (src, dst) slot pairs is answered by gathering the sources'
-OUT labels and the destinations' IN labels into two [Q, L] slabs and
-intersecting them along the landmark axis — the ``kernels/label_join``
-Pallas package (``backend="pallas"``) or its jnp reference
-(``backend="jnp"``). Cost: O(Q·L) bits touched, no traversal, no
-adjacency stream — this is the fast path the whole subsystem exists for.
+OUT labels and the destinations' IN labels into two [Q, ceil(L/32)]
+PACKED word slabs (DESIGN.md §10) and intersecting them along the landmark
+axis — the packed ``kernels/label_join`` Pallas kernel
+(``backend="pallas"``) or its packed jnp reference (``backend="jnp"``):
+hits is a popcount of AND-ed words, the witness hub a count-trailing-zeros.
+Cost: O(Q·L/32) words touched, no traversal, no adjacency stream — this is
+the fast path the whole subsystem exists for.
 
 Answer semantics mirror ``core.bfs.multi_bfs`` exactly: a query with an
 absent (slot < 0) or dead endpoint is unreachable by definition (and
@@ -26,16 +28,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def _join(out_rows, in_rows, backend: str):
+def _join(out_words, in_words, backend: str):
     if backend == "jnp":
-        from repro.kernels.label_join.ref import label_join_ref
+        from repro.kernels.label_join.ref import label_join_packed_ref
 
-        return label_join_ref(out_rows.astype(jnp.int32),
-                              in_rows.astype(jnp.int32))
+        return label_join_packed_ref(out_words, in_words)
     if backend == "pallas":
-        from repro.kernels.label_join.ops import label_join
+        from repro.kernels.label_join.ops import label_join_packed
 
-        return label_join(out_rows, in_rows)
+        return label_join_packed(out_words, in_words)
     raise ValueError(f"unknown label_join backend {backend!r}")
 
 
@@ -59,8 +60,12 @@ def query_reach(index, src_slots, dst_slots, *, backend: str = "jnp"):
     v = index.capacity
     sok = _endpoint_ok(index, src_slots)
     dok = _endpoint_ok(index, dst_slots)
-    a = index.out_label[jnp.clip(src_slots, 0, v - 1)] & sok[:, None]
-    b = index.in_label[jnp.clip(dst_slots, 0, v - 1)] & dok[:, None]
+    a = jnp.where(sok[:, None],
+                  index.out_label[jnp.clip(src_slots, 0, v - 1)],
+                  jnp.uint32(0))
+    b = jnp.where(dok[:, None],
+                  index.in_label[jnp.clip(dst_slots, 0, v - 1)],
+                  jnp.uint32(0))
     hits, hub = _join(a, b, backend)
     hit = hits > 0
     # hit => reachable, always. Empty intersection decides only when the
@@ -79,9 +84,9 @@ def reach_sets(index, src_slots):
     src_slots = jnp.asarray(src_slots, jnp.int32)
     v = index.capacity
     sok = _endpoint_ok(index, src_slots)
-    a = (index.out_label[jnp.clip(src_slots, 0, v - 1)]
+    a = (index.out_label_bits[jnp.clip(src_slots, 0, v - 1)]
          & sok[:, None]).astype(jnp.float32)
-    sets = (a @ index.in_label.T.astype(jnp.float32)) > 0
+    sets = (a @ index.in_label_bits.T.astype(jnp.float32)) > 0
     sets = sets & index.alive[None, :]
     decided = jnp.asarray(index.complete) | ~sok
     return sets, decided

@@ -30,6 +30,13 @@ VMEM footprint per program instance (TQ=64, TR=TC=256 defaults):
     frontier slab  64*256 f32       =  64 KiB
     out slabs      2 * 64*256 i32   = 128 KiB
     parent scratch (see above)      <= 4 MiB        << 16 MiB VMEM
+
+The PACKED variant (``multi_bfs_step_packed_pallas``, DESIGN.md §10)
+streams uint32[TR, TW] word tiles of the packed adjacency — 32x less HBM
+per superstep, the term this kernel is bandwidth-bound on — and expands
+every query's frontier with a bitwise OR fold over its active rows' words
+instead of the MXU matmul. Parent extraction unpacks the word tile in
+registers; the HBM stream stays packed.
 """
 from __future__ import annotations
 
@@ -38,6 +45,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.graph import WORD_BITS, or_reduce, unpack_bits
 
 INT32_MAX = 2**31 - 1  # python int: pallas kernels must not capture tracers
 
@@ -141,3 +150,107 @@ def multi_bfs_step_pallas(frontiers, adj, alive, visited, *, tr: int = 256,
         ) if not interpret else None,
         interpret=interpret,
     )(frontiers, adj, alive, visited)
+
+
+# ----------------------------------------------------------------------------
+# Packed-word variant (DESIGN.md §10)
+# ----------------------------------------------------------------------------
+def _multi_bfs_step_packed_kernel(f_ref, adjw_ref, alive_ref, visited_ref,
+                                  reach_ref, parent_ref, words_ref, *,
+                                  tq: int, tr: int, tw: int,
+                                  bcast_budget: int):
+    r = pl.program_id(1)
+    nr = pl.num_programs(1)
+    tc = tw * WORD_BITS
+
+    @pl.when(r == 0)
+    def _init():
+        words_ref[...] = jnp.zeros_like(words_ref)
+        reach_ref[...] = jnp.zeros_like(reach_ref)
+        parent_ref[...] = jnp.full_like(parent_ref, INT32_MAX)
+
+    f = f_ref[...]  # f32[TQ, TR] — all queries' slice of this row tile
+
+    @pl.when(jnp.any(f > 0))
+    def _accumulate():
+        a = adjw_ref[...]                               # uint32[TR, TW]
+        sel = jnp.where(f[:, :, None] > 0, a[None, :, :], jnp.uint32(0))
+        words_ref[...] |= or_reduce(sel, 1)             # [TQ, TW] OR fold
+        bits = unpack_bits(a, tc)                       # in-register unpack
+        row_ids = r * tr + jax.lax.iota(jnp.int32, tr)
+        if tq * tr * tc * 4 <= bcast_budget:
+            cand = jnp.where((f[:, :, None] > 0) & bits[None, :, :],
+                             row_ids[None, :, None], INT32_MAX)
+            cand_min = jnp.min(cand, axis=1)            # [TQ, TC]
+        else:
+            def qrow(qi, acc):
+                fq = jax.lax.dynamic_slice_in_dim(f, qi, 1, axis=0)[0]
+                c = jnp.where((fq[:, None] > 0) & bits,
+                              row_ids[:, None], INT32_MAX)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    acc, jnp.min(c, axis=0)[None, :], qi, axis=0)
+            cand_min = jax.lax.fori_loop(
+                0, tq, qrow, jnp.full((tq, tc), INT32_MAX, jnp.int32))
+        parent_ref[...] = jnp.minimum(parent_ref[...], cand_min)
+
+    @pl.when(r == nr - 1)
+    def _epilogue():
+        reach = unpack_bits(words_ref[...], tc)
+        new = (reach & (alive_ref[...][None, :] > 0)
+               & (visited_ref[...] == 0))
+        reach_ref[...] = new.astype(jnp.int32)
+        parent_ref[...] = jnp.where(new, parent_ref[...], jnp.int32(-1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tr", "tw", "interpret", "parent_bcast_budget")
+)
+def multi_bfs_step_packed_pallas(frontiers, adj_packed, alive, visited, *,
+                                 tr: int = 256, tw: int = 8,
+                                 interpret: bool = True,
+                                 parent_bcast_budget: int = _PARENT_BCAST_BUDGET):
+    """One packed fused expansion of Q frontiers. R % tr == 0, W % tw == 0.
+
+    frontiers: f32[Q, R] (0/1)   adj_packed: uint32[R, W]
+    alive:     int32[W*32]       visited: int32[Q, W*32]
+    Returns (new int32[Q, W*32], parent int32[Q, W*32], reach_words
+    uint32[Q, W]). Like the dense kernel, ``adj_packed`` may be a contiguous
+    ROW SLICE of the packed adjacency (the per-shard superstep, DESIGN.md
+    §8): parent ids come back slice-relative, and ``reach_words`` carries
+    the raw pre-mask OR partial the sharded engine exchanges as packed
+    uint32 frontiers. Callers slice the word padding (columns >= V) off.
+    """
+    q, rows = frontiers.shape
+    w = adj_packed.shape[1]
+    vc = w * WORD_BITS
+    assert adj_packed.shape[0] == rows, (frontiers.shape, adj_packed.shape)
+    assert alive.shape == (vc,) and visited.shape == (q, vc), \
+        (alive.shape, visited.shape, vc)
+    assert rows % tr == 0 and w % tw == 0, (rows, w, tr, tw)
+    tc = tw * WORD_BITS
+    grid = (w // tw, rows // tr)
+    return pl.pallas_call(
+        functools.partial(_multi_bfs_step_packed_kernel, tq=q, tr=tr, tw=tw,
+                          bcast_budget=parent_bcast_budget),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, tr), lambda c, r: (0, r)),
+            pl.BlockSpec((tr, tw), lambda c, r: (r, c)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+            pl.BlockSpec((q, tc), lambda c, r: (0, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q, tc), lambda c, r: (0, c)),
+            pl.BlockSpec((q, tc), lambda c, r: (0, c)),
+            pl.BlockSpec((q, tw), lambda c, r: (0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, vc), jnp.int32),
+            jax.ShapeDtypeStruct((q, vc), jnp.int32),
+            jax.ShapeDtypeStruct((q, w), jnp.uint32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(frontiers, adj_packed, alive, visited)

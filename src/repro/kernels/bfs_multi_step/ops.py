@@ -12,8 +12,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bfs_multi_step.kernel import multi_bfs_step_pallas
-from repro.kernels.bfs_step.ops import _pick_tile
+from repro.core.graph import WORD_BITS
+from repro.kernels.bfs_multi_step.kernel import (
+    multi_bfs_step_packed_pallas,
+    multi_bfs_step_pallas,
+)
+from repro.kernels.bfs_step.ops import _pick_tile, _pick_word_tile
 
 _Q_ALIGN = 8  # f32 sublane multiple
 
@@ -46,3 +50,36 @@ def multi_bfs_step(frontiers, adj, alive, visited):
         interpret=True,  # CPU container; on TPU set interpret=False
     )
     return new[:q] > 0, parent[:q]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def multi_bfs_step_packed(frontiers, adj_packed, alive, visited):
+    """Packed drop-in replacement for core.bfs.multi_bfs_step_packed_jnp.
+
+    frontiers: bool[Q, R]; adj_packed: uint32[R, W]; alive: bool[V];
+    visited: bool[Q, V] -> (new bool[Q, V], parent int32[Q, V])
+
+    R == V for the dense engine, R = V/S rows of one shard otherwise
+    (parent ids then local to the slice). The kernel sees the word-padded
+    column range W * 32 (alive/visited zero-padded; padding sliced off).
+    """
+    q, rows = frontiers.shape
+    v = alive.shape[0]
+    w = adj_packed.shape[1]
+    vc = w * WORD_BITS
+    qpad = -(-q // _Q_ALIGN) * _Q_ALIGN
+    f = jnp.zeros((qpad, rows), jnp.float32).at[:q].set(
+        frontiers.astype(jnp.float32))
+    alive_p = jnp.zeros((vc,), jnp.int32).at[:v].set(alive.astype(jnp.int32))
+    vis_p = jnp.zeros((qpad, vc), jnp.int32).at[:q, :v].set(
+        visited.astype(jnp.int32))
+    new, parent, _words = multi_bfs_step_packed_pallas(
+        f,
+        adj_packed,
+        alive_p,
+        vis_p,
+        tr=_pick_tile(rows),
+        tw=_pick_word_tile(w),
+        interpret=True,  # CPU container; on TPU set interpret=False
+    )
+    return new[:q, :v] > 0, parent[:q, :v]

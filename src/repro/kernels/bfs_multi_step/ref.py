@@ -1,7 +1,9 @@
-"""Pure-jnp oracle for the bfs_multi_step kernel."""
+"""Pure-jnp oracles for the bfs_multi_step kernels (dense and packed)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.core.graph import WORD_BITS, pack_bits, unpack_bits
 
 INT32_MAX = jnp.int32(2**31 - 1)
 
@@ -22,3 +24,25 @@ def multi_bfs_step_ref(frontiers, adj, alive, visited):
     parent = jnp.min(cand, axis=1)
     parent = jnp.where(new, parent, jnp.int32(-1))
     return new.astype(jnp.int32), parent
+
+
+def multi_bfs_step_packed_ref(frontiers, adj_packed, alive, visited):
+    """Same contract as kernel.multi_bfs_step_packed_pallas
+    (unpack-then-dense-ref, including the raw reach-words output).
+
+    frontiers f32[Q, R] (0/1), adj_packed uint32[R, W], alive int32[W*32],
+    visited int32[Q, W*32] -> (new int32[Q, W*32], parent int32[Q, W*32],
+    reach_words uint32[Q, W]).
+    """
+    q, rows = frontiers.shape
+    w = adj_packed.shape[1]
+    vc = w * WORD_BITS
+    adj = unpack_bits(adj_packed, vc).astype(jnp.uint8)  # [R, W*32]
+    reach = (frontiers.astype(jnp.float32) @ adj.astype(jnp.float32)) > 0
+    new = reach & (alive[None, :] > 0) & (visited == 0)
+    idx = jnp.arange(rows, dtype=jnp.int32)
+    cand = jnp.where((frontiers[:, :, None] > 0) & (adj[None, :, :] > 0),
+                     idx[None, :, None], INT32_MAX)
+    parent = jnp.min(cand, axis=1)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new.astype(jnp.int32), parent, pack_bits(reach)

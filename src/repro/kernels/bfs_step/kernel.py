@@ -19,6 +19,13 @@ VMEM footprint per program instance (TR=TC=256, defaults):
     frontier tile 256 f32       =   1 KiB
     out tiles     2 * 256 i32   =   2 KiB          << 16 MiB VMEM
 MXU alignment: TR, TC multiples of 128 (f32/bf16 tiles).
+
+The PACKED variant (``bfs_step_packed_pallas``, DESIGN.md §10) streams the
+word-packed adjacency instead — uint32[TR, TW] tiles, 32x less HBM traffic
+per superstep — and replaces the MXU mat-vec with a popcount-free bitwise
+OR fold over the frontier rows' words (a log2(TR) halving tree on the VPU).
+Parent extraction unpacks the tile IN REGISTERS (VMEM-resident compute is
+free relative to the HBM stream this kernel exists to shrink).
 """
 from __future__ import annotations
 
@@ -27,6 +34,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.graph import WORD_BITS, or_reduce, unpack_bits
 
 INT32_MAX = 2**31 - 1  # python int: pallas kernels must not capture tracers
 
@@ -94,3 +103,86 @@ def bfs_step_pallas(frontier, adj, alive, visited, *, tr: int = 256, tc: int = 2
         ) if not interpret else None,
         interpret=interpret,
     )(frontier, adj, alive, visited)
+
+
+# ----------------------------------------------------------------------------
+# Packed-word variant (DESIGN.md §10)
+# ----------------------------------------------------------------------------
+def _bfs_step_packed_kernel(f_ref, adjw_ref, alive_ref, visited_ref,
+                            reach_ref, parent_ref, words_ref, *, tr: int,
+                            tw: int):
+    c, r = pl.program_id(0), pl.program_id(1)
+    nr = pl.num_programs(1)
+    tc = tw * WORD_BITS
+
+    @pl.when(r == 0)
+    def _init():
+        words_ref[...] = jnp.zeros_like(words_ref)
+        reach_ref[...] = jnp.zeros_like(reach_ref)
+        parent_ref[...] = jnp.full_like(parent_ref, INT32_MAX)
+
+    f = f_ref[...]  # f32[TR]
+
+    @pl.when(jnp.any(f > 0))
+    def _accumulate():
+        a = adjw_ref[...]                             # uint32[TR, TW]
+        sel = jnp.where(f[:, None] > 0, a, jnp.uint32(0))
+        words_ref[...] |= or_reduce(sel, 0)           # VPU halving OR tree
+        bits = unpack_bits(a, tc)                     # in-register unpack
+        row_ids = (r * tr + jax.lax.iota(jnp.int32, tr))[:, None]
+        cand = jnp.where((f[:, None] > 0) & bits, row_ids, INT32_MAX)
+        parent_ref[...] = jnp.minimum(parent_ref[...], jnp.min(cand, axis=0))
+
+    @pl.when(r == nr - 1)
+    def _epilogue():
+        reach = unpack_bits(words_ref[...], tc)
+        new = reach & (alive_ref[...] > 0) & (visited_ref[...] == 0)
+        reach_ref[...] = new.astype(jnp.int32)
+        parent_ref[...] = jnp.where(new, parent_ref[...], jnp.int32(-1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tr", "tw", "interpret")
+)
+def bfs_step_packed_pallas(frontier, adj_packed, alive, visited, *,
+                           tr: int = 256, tw: int = 8,
+                           interpret: bool = True):
+    """One packed frontier expansion. V % tr == 0, W % tw == 0, and the
+    alive/visited vectors cover the padded column range W * 32.
+
+    frontier: f32[V] (0/1)     adj_packed: uint32[V, W]
+    alive:    int32[W*32]      visited: int32[W*32]
+    Returns (new_frontier int32[W*32], parent int32[W*32], reach_words
+    uint32[W]); callers slice the column padding back off.
+    """
+    v, w = adj_packed.shape
+    assert v % tr == 0 and w % tw == 0, (v, w, tr, tw)
+    vc = w * WORD_BITS
+    assert alive.shape == (vc,) and visited.shape == (vc,), \
+        (alive.shape, visited.shape, vc)
+    tc = tw * WORD_BITS
+    grid = (w // tw, v // tr)
+    return pl.pallas_call(
+        functools.partial(_bfs_step_packed_kernel, tr=tr, tw=tw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr,), lambda c, r: (r,)),
+            pl.BlockSpec((tr, tw), lambda c, r: (r, c)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+            pl.BlockSpec((tc,), lambda c, r: (c,)),
+            pl.BlockSpec((tw,), lambda c, r: (c,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((vc,), jnp.int32),
+            jax.ShapeDtypeStruct((vc,), jnp.int32),
+            jax.ShapeDtypeStruct((w,), jnp.uint32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(frontier, adj_packed, alive, visited)

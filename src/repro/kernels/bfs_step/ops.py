@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the bfs_step kernel (adapts GraphState dtypes)."""
+"""jit'd public wrappers for the bfs_step kernels (adapt GraphState dtypes)."""
 from __future__ import annotations
 
 import functools
@@ -6,7 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bfs_step.kernel import bfs_step_pallas
+from repro.core.graph import WORD_BITS
+from repro.kernels.bfs_step.kernel import bfs_step_packed_pallas, bfs_step_pallas
 
 
 def _pick_tile(v: int) -> int:
@@ -14,6 +15,13 @@ def _pick_tile(v: int) -> int:
         if v % t == 0:
             return t
     return v
+
+
+def _pick_word_tile(w: int) -> int:
+    for t in (64, 32, 16, 8, 4, 2):
+        if w % t == 0:
+            return t
+    return w
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -35,3 +43,30 @@ def bfs_step(frontier, adj, alive, visited):
         interpret=True,  # CPU container; on TPU set interpret=False
     )
     return new > 0, parent
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bfs_step_packed(frontier, adj_packed, alive, visited):
+    """Packed drop-in replacement for core.bfs.bfs_step_packed_jnp.
+
+    frontier/alive/visited: bool[V]; adj_packed: uint32[V, W = ceil(V/32)]
+    -> (new_frontier bool[V], parent int32[V])
+
+    The kernel works on the word-padded column range W * 32; alive/visited
+    are zero-padded (pad columns can never enter the frontier) and the
+    padding is sliced back off here.
+    """
+    v, w = adj_packed.shape
+    vc = w * WORD_BITS
+    alive_p = jnp.zeros((vc,), jnp.int32).at[:v].set(alive.astype(jnp.int32))
+    vis_p = jnp.zeros((vc,), jnp.int32).at[:v].set(visited.astype(jnp.int32))
+    new, parent, _words = bfs_step_packed_pallas(
+        frontier.astype(jnp.float32),
+        adj_packed,
+        alive_p,
+        vis_p,
+        tr=_pick_tile(v),
+        tw=_pick_word_tile(w),
+        interpret=True,  # CPU container; on TPU set interpret=False
+    )
+    return new[:v] > 0, parent[:v]

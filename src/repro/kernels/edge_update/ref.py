@@ -29,3 +29,17 @@ def edge_update_ref(adj, ecnt, rows, cols, vals, mask):
     erow = jnp.where(live, rows, v)
     ecnt2 = ecnt.at[erow].add(1, mode="drop")
     return adj2, ecnt2
+
+
+def edge_update_packed_ref(adj_packed, ecnt, rows, cols, vals, mask):
+    """Same contract as kernel.edge_update_packed_pallas — defined as the
+    dense oracle conjugated by pack/unpack, which IS the packed semantics."""
+    from repro.core.graph import WORD_BITS, pack_bits, unpack_bits
+
+    v, w = adj_packed.shape
+    vc = w * WORD_BITS
+    # unpack to [V, W*32] (the ref's parked col index v stays in range: the
+    # engine guarantees fired cols < v <= W*32), run the dense oracle, repack
+    adj = unpack_bits(adj_packed, vc).astype(jnp.uint8)
+    a2, e2 = edge_update_ref(adj, ecnt, rows, cols, vals, mask)
+    return pack_bits(a2.astype(jnp.bool_)), e2

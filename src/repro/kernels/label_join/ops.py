@@ -14,8 +14,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.label_join.kernel import label_join_pallas
-from repro.kernels.bfs_step.ops import _pick_tile
+from repro.kernels.label_join.kernel import (
+    label_join_packed_pallas,
+    label_join_pallas,
+)
+from repro.kernels.bfs_step.ops import _pick_tile, _pick_word_tile
 
 _Q_ALIGN = 8    # sublane multiple
 _L_ALIGN = 128  # lane multiple
@@ -43,6 +46,31 @@ def label_join(out_rows, in_rows):
         b,
         tq=_pick_tile(qpad),
         tl=_pick_tile(lpad),
+        interpret=True,  # CPU container; on TPU set interpret=False
+    )
+    return hits[:q], hub[:q]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def label_join_packed(out_words, in_words):
+    """Drop-in replacement for label_join_packed_ref (packed interface,
+    DESIGN.md §10).
+
+    out_words/in_words: uint32[Q, W] packed label bitsets
+    -> (hits int32[Q], hub int32[Q]). Padded queries/words carry zero bits,
+    so they contribute neither hits nor hub candidates.
+    """
+    q, w = out_words.shape
+    if q == 0 or w == 0:  # static shapes — resolved at trace time
+        return (jnp.zeros((q,), jnp.int32), jnp.full((q,), -1, jnp.int32))
+    qpad = -(-q // _Q_ALIGN) * _Q_ALIGN
+    a = jnp.zeros((qpad, w), jnp.uint32).at[:q].set(out_words)
+    b = jnp.zeros((qpad, w), jnp.uint32).at[:q].set(in_words)
+    hits, hub = label_join_packed_pallas(
+        a,
+        b,
+        tq=_pick_tile(qpad),
+        tw=_pick_word_tile(w),
         interpret=True,  # CPU container; on TPU set interpret=False
     )
     return hits[:q], hub[:q]

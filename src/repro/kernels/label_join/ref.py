@@ -1,7 +1,10 @@
-"""Pure-jnp oracle for the label_join kernel."""
+"""Pure-jnp oracles for the label_join kernels (dense and packed)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+from repro.core.graph import WORD_BITS
 
 INT32_MAX = jnp.int32(2**31 - 1)
 
@@ -21,5 +24,26 @@ def label_join_ref(out_rows, in_rows):
     hits = jnp.sum(common.astype(jnp.int32), axis=1)
     ids = jnp.arange(l, dtype=jnp.int32)
     hub = jnp.min(jnp.where(common, ids[None, :], INT32_MAX), axis=1)
+    hub = jnp.where(hits > 0, hub, jnp.int32(-1))
+    return hits, hub
+
+
+def label_join_packed_ref(out_words, in_words):
+    """Same contract as kernel.label_join_packed_pallas.
+
+    out_words/in_words uint32[Q, W] packed label bitsets ->
+    (hits int32[Q], hub int32[Q]): popcount of the AND-ed words, smallest
+    common set-bit index via the ctz(x) = popcount(lowbit(x) - 1) identity.
+    """
+    q, w = out_words.shape
+    if w == 0:
+        return (jnp.zeros((q,), jnp.int32), jnp.full((q,), -1, jnp.int32))
+    common = out_words & in_words
+    hits = jnp.sum(jax.lax.population_count(common).astype(jnp.int32), axis=1)
+    low = common & (jnp.uint32(0) - common)
+    ctz = jax.lax.population_count(low - jnp.uint32(1)).astype(jnp.int32)
+    lane0 = jnp.arange(w, dtype=jnp.int32) * WORD_BITS
+    cand = jnp.where(common > 0, lane0[None, :] + ctz, INT32_MAX)
+    hub = jnp.min(cand, axis=1)
     hub = jnp.where(hits > 0, hub, jnp.int32(-1))
     return hits, hub

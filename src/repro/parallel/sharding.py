@@ -214,10 +214,11 @@ GRAPH_ROW_AXIS = "rows"
 def graph_state_specs(axis: str = GRAPH_ROW_AXIS) -> dict:
     """PartitionSpecs for the partitioned graph state (DESIGN.md §8).
 
-    The adjacency matrix — the only O(V^2) array — is row-sharded over the
-    1-D ``rows`` mesh axis; the O(V) version metadata (vkey/valive/vver/ecnt)
-    is replicated so lookups, the double-collect validation vector, and the
-    lane-order mutation schedule stay shard-local replicated compute.
+    The word-packed adjacency — the only O(V^2/32) array (DESIGN.md §10) —
+    is row-sharded over the 1-D ``rows`` mesh axis; the O(V) version
+    metadata (vkey/valive/vver/ecnt) is replicated so lookups, the
+    double-collect validation vector, and the lane-order mutation schedule
+    stay shard-local replicated compute.
     """
     rep = P()
     return {
@@ -225,7 +226,7 @@ def graph_state_specs(axis: str = GRAPH_ROW_AXIS) -> dict:
         "valive": rep,
         "vver": rep,
         "ecnt": rep,
-        "adj": P(axis, None),
+        "adj_packed": P(axis, None),
     }
 
 

@@ -240,13 +240,20 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
                     # only consumes found/rounds, so nothing is lost and
                     # fresh-epoch batches skip the BFS entirely.
                     batch_pairs = [(int(p[0]), int(p[1])) for p in q]
+                    stats.getpath_calls += len(q)
                     if graph.index_enabled:
                         res = graph.get_reach(batch_pairs)
-                        rounds = res.rounds
+                        # rounds accounting is PER PAIR, and only the pairs
+                        # that actually took the BFS fallback session spent
+                        # them — index-served pairs cost 0 rounds. Charging
+                        # rounds * len(q) here would bill index hits for a
+                        # session they never entered (stale-epoch batches
+                        # still charge every pair: fellback == len(q)).
+                        stats.getpath_rounds += res.rounds * res.fellback
                     else:
                         _, rounds = graph.get_paths(batch_pairs)
-                    stats.getpath_calls += len(q)
-                    stats.getpath_rounds += rounds * len(q)
+                        # every pair shares the one session's double collect
+                        stats.getpath_rounds += rounds * len(q)
                 elif graph.index_enabled:
                     res = graph.get_reach([(int(q[0]), int(q[1]))])
                     stats.getpath_calls += 1

@@ -1,0 +1,94 @@
+"""Registry validation for benchmarks/run.py (the --smoke / --json gate).
+
+Covers the fresh-clone case the gate must survive: a registered figure with
+no committed BENCH_<figure>.json yet is a NOTE, never an abort — only
+records that exist but are unreadable or schema-invalid fail.
+"""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.run import (  # noqa: E402
+    FIGURES,
+    check_committed_records,
+    validate_records,
+    write_bench_files,
+)
+
+
+def _rec(figure="fig9_throughput", **over):
+    rec = {
+        "figure": figure,
+        "q": 4,
+        "engine": "nonblocking",
+        "seconds": 0.5,
+        "steps": 1024,
+        "steps_per_s": 2048.0,
+        "speedup_vs_baseline": 2.0,
+    }
+    rec.update(over)
+    return rec
+
+
+def test_validate_records_accepts_schema_and_prefix_figures():
+    records = [_rec(), _rec(figure="sharded_apply"), _rec(figure="sharded_bfs")]
+    assert validate_records(records, ["fig9_throughput", "sharded"]) == []
+
+
+def test_validate_records_reports_missing_keys_and_figures():
+    errors = validate_records([_rec()], ["fig9_throughput", "multiquery"])
+    assert any("multiquery" in e for e in errors)
+    bad = _rec()
+    del bad["steps_per_s"]
+    bad["seconds"] = "fast"
+    errors = validate_records([bad], ["fig9_throughput"])
+    assert any("steps_per_s" in e for e in errors)
+    assert any("seconds" in e for e in errors)
+
+
+def test_missing_committed_records_are_notes_not_errors(tmp_path):
+    """Fresh clone: NO BENCH_<figure>.json exists — quick/smoke must not
+    abort; every registered figure surfaces as a note."""
+    errors, notes = check_committed_records(root=tmp_path)
+    assert errors == []
+    assert len(notes) == len(FIGURES)
+    assert all("fresh clone" in n for n in notes)
+
+
+def test_committed_record_schema_is_enforced_when_present(tmp_path):
+    # valid record (written the way run.py writes it) -> clean
+    write_bench_files([_rec()], root=tmp_path)
+    errors, notes = check_committed_records(["fig9_throughput"], root=tmp_path)
+    assert errors == [] and notes == []
+    # schema-invalid record -> error names the file
+    (tmp_path / "BENCH_multiquery.json").write_text(
+        json.dumps([{"figure": "multiquery"}]), encoding="utf-8")
+    errors, _ = check_committed_records(["multiquery"], root=tmp_path)
+    assert errors and all("BENCH_multiquery.json" in e for e in errors)
+    # unreadable JSON -> error, not crash
+    (tmp_path / "BENCH_index.json").write_text("{not json", encoding="utf-8")
+    errors, _ = check_committed_records(["index"], root=tmp_path)
+    assert errors and "unreadable" in errors[0]
+    # empty list -> error (a committed record must carry rows)
+    (tmp_path / "BENCH_fig10_getpath.json").write_text("[]", encoding="utf-8")
+    errors, _ = check_committed_records(["fig10_getpath"], root=tmp_path)
+    assert errors and "non-empty" in errors[0]
+
+
+def test_prefix_figures_resolve_committed_files(tmp_path):
+    """fig_sharded registers as prefix 'sharded' but writes
+    BENCH_sharded_apply/BENCH_sharded_bfs — both must be found and checked."""
+    write_bench_files([_rec(figure="sharded_apply"),
+                       _rec(figure="sharded_bfs")], root=tmp_path)
+    errors, notes = check_committed_records(["sharded"], root=tmp_path)
+    assert errors == [] and notes == []
+
+
+def test_registry_matches_committed_bench_records_in_repo():
+    """The real repo state: whatever BENCH files are committed must be
+    schema-valid; figures without records are tolerated (fresh-clone rule)."""
+    errors, _notes = check_committed_records()
+    assert errors == [], errors

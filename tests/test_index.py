@@ -115,8 +115,8 @@ def test_pruning_is_canonical_and_lossless():
                 for a, b in rng.integers(0, NV, (3 * NV, 2))]
     g, _ = _build(edge_ops)
     idx = build_index(g)
-    out_l = np.asarray(idx.out_label)
-    in_l = np.asarray(idx.in_label)
+    out_l = np.asarray(idx.out_label_bits)   # unpack the uint32 bitsets
+    in_l = np.asarray(idx.in_label_bits)
     fwd, bwd = np.asarray(idx.fwd), np.asarray(idx.bwd)
     assert out_l.sum() <= bwd.sum() and in_l.sum() <= fwd.sum()
     # decided sets are equal: exists-hub via pruned == via unpruned
@@ -261,6 +261,90 @@ def test_server_index_surface_counts_hits_and_misses():
     srv.submit([(OP_ADD_E, 3, 4)])
     counts = srv.get_reach_counts([0, 4, 99])  # stale -> fused BFS fallback
     assert list(counts) == [8, 4, 0] and srv.index_misses == before + 3
+
+
+def test_server_mixed_batch_stats_count_per_pair():
+    """A fresh PARTIAL index serves some pairs and falls back for the rest
+    in the same batch: hits/misses must be counted PER PAIR (decided pairs
+    are hits, undecided pairs are misses — never the whole batch on either
+    side), and repeated calls must accumulate without double counting."""
+    from repro.runtime.serve_loop import GraphCoServer
+
+    srv = GraphCoServer(capacity=64, index=True, index_landmarks=2)
+    srv.submit([(OP_ADD_V, k) for k in range(8)])
+    srv.submit([(OP_ADD_E, a, a + 1) for a in range(7)])
+    assert srv.index_tick()
+    assert not srv.index.complete
+    pairs = [(0, 7), (1, 6), (7, 0), (6, 1)]   # 2 decided + 2 undecided
+    res = srv.get_reach(pairs)
+    assert not res.stale
+    assert res.found == [True, True, False, False]
+    assert res.from_index == 2 and res.fellback == 2
+    assert srv.index_hits == 2 and srv.index_misses == 2
+    # second identical batch: per-pair accumulation, no double counting
+    res2 = srv.get_reach(pairs)
+    assert srv.index_hits == 4 and srv.index_misses == 4
+    assert res2.from_index == 2 and res2.fellback == 2
+    # undecided-pair fallback spends one clean double collect (2 rounds),
+    # which is attributed to the SESSION, not multiplied across index hits
+    assert res.rounds == 2
+
+
+def test_server_stale_batch_stats_count_per_pair():
+    """The OTHER fallback reason: a stale epoch sends the whole batch to
+    BFS — every pair is one miss, hits untouched, and again no per-batch
+    multiplication on repeats."""
+    from repro.runtime.serve_loop import GraphCoServer
+
+    srv = GraphCoServer(capacity=64, index=True)
+    srv.submit([(OP_ADD_V, k) for k in range(6)])
+    srv.submit([(OP_ADD_E, a, a + 1) for a in range(5)])
+    srv.index_tick()
+    srv.submit([(OP_REM_E, 2, 3)])            # stale now
+    pairs = [(0, 5), (0, 2), (3, 5)]
+    res = srv.get_reach(pairs)
+    assert res.stale and res.fellback == len(pairs) and res.from_index == 0
+    assert srv.index_misses == 3 and srv.index_hits == 0
+    res = srv.get_reach(pairs)                # still stale: +3, not +9
+    assert srv.index_misses == 6 and srv.index_hits == 0
+
+
+class _StubDecoder:
+    """Minimal decode engine for serve(): the graph side is what's under
+    test, the LM side just has to produce tokens."""
+
+    def prefill(self, params, batch):
+        b = batch["tokens"].shape[0]
+        return jnp.zeros((b, 4), jnp.float32), {}
+
+    def cache_from_prefill(self, caches, cache_len):
+        return caches
+
+    def decode_step(self, params, caches, tok, pos):
+        return jnp.zeros((tok.shape[0], 4), jnp.float32), caches
+
+
+def test_serve_rounds_attributed_to_fallback_pairs_only():
+    """Regression (per-batch vs per-pair accounting): with the index
+    enabled, getpath_rounds must charge the BFS session's rounds only to
+    the pairs that actually fell back — an index hit costs 0 rounds. The
+    old accounting multiplied rounds by the WHOLE batch size."""
+    from repro.runtime.serve_loop import GraphCoServer, serve
+
+    graph = GraphCoServer(capacity=64, index=True, index_landmarks=2)
+    graph.submit([(OP_ADD_V, k) for k in range(8)])
+    graph.submit([(OP_ADD_E, a, a + 1) for a in range(7)])
+    graph.index_tick()
+    assert not graph.index.complete
+    # 1 decided pair (index hit, 0 rounds) + 1 undecided (2-round session)
+    streams = {0: [(0, 7), (7, 0)]}
+    prompts = np.zeros((1, 4), np.int32)
+    _, stats = serve(_StubDecoder(), None, prompts, max_new_tokens=2,
+                     cache_len=8, graph=graph,
+                     query_stream=lambda i: streams.get(i))
+    assert stats.getpath_calls == 2
+    assert stats.index_hits == 1 and stats.index_misses == 1
+    assert stats.getpath_rounds == 2   # 2 rounds x 1 fallback pair, not x2
 
 
 def test_server_auto_grow_keeps_index_correct():

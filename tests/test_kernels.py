@@ -4,15 +4,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.graph import pack_bits
 from repro.kernels.bfs_step.kernel import bfs_step_pallas
-from repro.kernels.bfs_step.ops import bfs_step
+from repro.kernels.bfs_step.ops import bfs_step, bfs_step_packed
 from repro.kernels.bfs_step.ref import bfs_step_ref
 from repro.kernels.bfs_multi_step.kernel import multi_bfs_step_pallas
-from repro.kernels.bfs_multi_step.ops import multi_bfs_step
+from repro.kernels.bfs_multi_step.ops import (
+    multi_bfs_step,
+    multi_bfs_step_packed,
+)
 from repro.kernels.bfs_multi_step.ref import multi_bfs_step_ref
 from repro.kernels.edge_update.kernel import edge_update_pallas
-from repro.kernels.edge_update.ops import edge_update
-from repro.kernels.edge_update.ref import edge_update_ref
+from repro.kernels.edge_update.ops import edge_update, edge_update_packed
+from repro.kernels.edge_update.ref import edge_update_packed_ref, edge_update_ref
 
 RNG = np.random.default_rng(42)
 
@@ -169,6 +173,99 @@ def test_edge_update_tile_sweep():
             jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(mask), tr=tr)
         np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]))
         np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref[1]))
+
+
+# ----------------------------------------------------------------------------
+# Packed-word kernel variants (DESIGN.md §10): the kernel and its jnp ref must
+# agree with the DENSE kernel on the packed form of the same inputs — frontier
+# rows restricted to alive vertices, the precondition every engine guarantees.
+# ----------------------------------------------------------------------------
+def _packed_graph_inputs(v, density):
+    adjb = RNG.random((v, v)) < density
+    alive = RNG.random(v) < 0.9
+    frontier = (RNG.random(v) < 0.15) & alive
+    visited = frontier | ((RNG.random(v) < 0.2) & alive)
+    return adjb, frontier, alive, visited
+
+
+@pytest.mark.parametrize("v", [6, 64, 200, 256])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+def test_bfs_step_packed_matches_dense(v, density):
+    adjb, frontier, alive, visited = _packed_graph_inputs(v, density)
+    nf_d, par_d = bfs_step(jnp.asarray(frontier), jnp.asarray(adjb, jnp.uint8),
+                           jnp.asarray(alive), jnp.asarray(visited))
+    nf_p, par_p = bfs_step_packed(jnp.asarray(frontier),
+                                  pack_bits(jnp.asarray(adjb)),
+                                  jnp.asarray(alive), jnp.asarray(visited))
+    np.testing.assert_array_equal(np.asarray(nf_d), np.asarray(nf_p))
+    np.testing.assert_array_equal(np.asarray(par_d), np.asarray(par_p))
+
+
+@pytest.mark.parametrize("q,v", [(1, 64), (5, 200), (8, 256)])
+def test_multi_bfs_step_packed_matches_dense(q, v):
+    adjb = RNG.random((v, v)) < 0.08
+    alive = RNG.random(v) < 0.9
+    f = (RNG.random((q, v)) < 0.15) & alive[None, :]
+    visited = f | ((RNG.random((q, v)) < 0.2) & alive[None, :])
+    args_d = (jnp.asarray(f), jnp.asarray(adjb, jnp.uint8),
+              jnp.asarray(alive), jnp.asarray(visited))
+    nf_d, par_d = multi_bfs_step(*args_d)
+    nf_p, par_p = multi_bfs_step_packed(
+        jnp.asarray(f), pack_bits(jnp.asarray(adjb)),
+        jnp.asarray(alive), jnp.asarray(visited))
+    np.testing.assert_array_equal(np.asarray(nf_d), np.asarray(nf_p))
+    np.testing.assert_array_equal(np.asarray(par_d), np.asarray(par_p))
+
+
+def test_multi_bfs_step_packed_row_slice():
+    """The sharded engine hands the packed kernel a contiguous ROW SLICE;
+    parent ids come back slice-relative, like the dense kernel's."""
+    v, rows, q = 64, 16, 4
+    adjb = jnp.asarray(RNG.random((rows, v)) < 0.1)
+    f = jnp.asarray(RNG.random((q, rows)) < 0.3)
+    alive = jnp.asarray(RNG.random(v) < 0.9)
+    visited = jnp.asarray(RNG.random((q, v)) < 0.2)
+    nf_p, par_p = multi_bfs_step_packed(f, pack_bits(adjb), alive, visited)
+    nf_d, par_d = multi_bfs_step(f, adjb.astype(jnp.uint8), alive, visited)
+    np.testing.assert_array_equal(np.asarray(nf_p), np.asarray(nf_d))
+    np.testing.assert_array_equal(np.asarray(par_p), np.asarray(par_d))
+
+
+@pytest.mark.parametrize("v,b", [(16, 4), (64, 32), (128, 64)])
+def test_edge_update_packed_matches_dense_and_ref(v, b):
+    adjb = RNG.random((v, v)) < 0.05
+    adjp = pack_bits(jnp.asarray(adjb))
+    ecnt = jnp.asarray(RNG.integers(0, 5, v), jnp.int32)
+    rows = jnp.asarray(RNG.integers(0, v, b), jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, v, b), jnp.int32)
+    vals = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+    mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+    a_d, e_d = edge_update(jnp.asarray(adjb, jnp.uint8), ecnt,
+                           rows, cols, vals, mask)
+    a_p, e_p = edge_update_packed(adjp, ecnt, rows, cols, vals, mask)
+    a_r, e_r = edge_update_packed_ref(adjp, ecnt, rows, cols, vals, mask)
+    np.testing.assert_array_equal(
+        np.asarray(pack_bits(a_d.astype(jnp.bool_))), np.asarray(a_p))
+    np.testing.assert_array_equal(np.asarray(a_p), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(e_d), np.asarray(e_p))
+    np.testing.assert_array_equal(np.asarray(e_d), np.asarray(e_r))
+
+
+def test_label_join_packed_matches_dense():
+    from repro.kernels.label_join.ops import label_join_packed
+    from repro.kernels.label_join.ref import label_join_packed_ref, label_join_ref
+
+    for q, l in ((1, 1), (5, 7), (16, 130), (33, 256)):
+        a = jnp.asarray(RNG.random((q, l)) < 0.2)
+        b = jnp.asarray(RNG.random((q, l)) < 0.2)
+        hd, ud = label_join_ref(a.astype(jnp.int32), b.astype(jnp.int32))
+        hp, up = label_join_packed(pack_bits(a), pack_bits(b))
+        hr, ur = label_join_packed_ref(pack_bits(a), pack_bits(b))
+        for got_h, got_u in ((hp, up), (hr, ur)):
+            np.testing.assert_array_equal(np.asarray(hd), np.asarray(got_h),
+                                          err_msg=f"{q},{l}")
+            np.testing.assert_array_equal(np.asarray(ud), np.asarray(got_u),
+                                          err_msg=f"{q},{l}")
 
 
 def test_pallas_backend_full_bfs_matches_jnp():

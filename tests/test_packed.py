@@ -1,0 +1,277 @@
+"""Packed adjacency engine suite (DESIGN.md §10).
+
+Three contracts:
+
+  1. Encoding: pack/unpack roundtrip, the padding invariant (bits at column
+     positions >= V stay zero through every mutation), and grow's in-place
+     word extension.
+  2. ONE traversable-edge predicate: every engine's edge view — num_edges,
+     degree/neighbors, all four BFS backends, the sharded engine, the index
+     closures — equals the view derived from ``core.graph.traversable`` on
+     the same state (the differential test that pins the call sites so the
+     predicate cannot drift between re-implementations again).
+  3. Bit-identity under mutation streams: random add/remove vertex/edge
+     batches interleaved with grow and compact, after each of which the
+     packed backends ("packed", "packed_pallas") must produce bit-identical
+     BFSResults / MultiBFSResults and version vectors to the float32 path
+     ("jnp", "pallas"), on dense AND mesh-sharded state.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from repro.testing.proptest import given, settings, strategies as st
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, OP_REM_E, OP_REM_V,
+    apply_ops, apply_ops_fast, find_slots, make_graph, make_op_batch,
+    multi_bfs, num_edges, version_vector,
+)
+from repro.core import partition
+from repro.core.bfs import PACKED_BACKENDS, bfs
+from repro.core.distributed import make_graph_mesh
+from repro.core.graph import (
+    WORD_BITS,
+    or_reduce,
+    pack_bits,
+    packed_width,
+    traversable,
+    traversable_packed,
+    unpack_bits,
+)
+from repro.core.graph import grow as dense_grow
+from repro.core.ops import compact as dense_compact
+from repro.core.ops import degree, neighbors
+
+RNG = np.random.default_rng(11)
+CAP = 32
+ALL_BACKENDS = ("jnp", "pallas") + PACKED_BACKENDS
+
+
+# ----------------------------------------------------------------------------
+# 1. Encoding
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("v", [1, 6, 31, 32, 33, 64, 100, 256])
+def test_pack_unpack_roundtrip(v):
+    bits = jnp.asarray(RNG.random((5, v)) < 0.4)
+    words = pack_bits(bits)
+    assert words.shape == (5, packed_width(v)) and words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(unpack_bits(words, v)),
+                                  np.asarray(bits))
+    # padding invariant: bits at positions >= v are zero
+    full = unpack_bits(words, packed_width(v) * WORD_BITS)
+    assert not np.asarray(full)[:, v:].any()
+
+
+def test_or_reduce_matches_numpy():
+    x = jnp.asarray(RNG.integers(0, 2**32, (7, 3), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(or_reduce(x, 0)),
+        np.bitwise_or.reduce(np.asarray(x), axis=0))
+    np.testing.assert_array_equal(
+        np.asarray(or_reduce(x, 1)),
+        np.bitwise_or.reduce(np.asarray(x), axis=1))
+
+
+def _random_state(nv=12, cap=CAP, n_edges=40, n_dead=3, seed=0):
+    """A graph with live edges AND stale adjacency bits under dead slots
+    (RemoveVertex leaves rows/columns lazily — the adversarial case for the
+    traversable predicate)."""
+    rng = np.random.default_rng(seed)
+    g = make_graph(cap)
+    ops = [(OP_ADD_V, k) for k in range(nv)]
+    ops += [(OP_ADD_E, int(a), int(b))
+            for a, b in rng.integers(0, nv, (n_edges, 2))]
+    g, _ = apply_ops(g, make_op_batch(ops))
+    dead = rng.choice(nv, size=n_dead, replace=False)
+    g, _ = apply_ops(g, make_op_batch([(OP_REM_V, int(k)) for k in dead]))
+    return g
+
+
+def test_grow_preserves_packed_bits_and_padding():
+    g = _random_state(seed=3)
+    for new_cap in (CAP + 1, 70, 256):
+        gg = dense_grow(g, new_cap)
+        assert gg.adj_packed.shape == (new_cap, packed_width(new_cap))
+        np.testing.assert_array_equal(
+            np.asarray(gg.adj)[: g.capacity, : g.capacity], np.asarray(g.adj))
+        # grown rows/columns are empty; padding bits stay zero
+        assert not np.asarray(gg.adj)[g.capacity:].any()
+        assert not np.asarray(gg.adj)[:, g.capacity:].any()
+        full = unpack_bits(gg.adj_packed, gg.words * WORD_BITS)
+        assert not np.asarray(full)[:, new_cap:].any()
+        assert int(num_edges(gg)) == int(num_edges(g))
+
+
+# ----------------------------------------------------------------------------
+# 2. The ONE traversable-edge predicate, pinned differentially
+# ----------------------------------------------------------------------------
+def _np_traversable(g):
+    adj = np.asarray(g.adj) > 0
+    alive = np.asarray(g.valive)
+    return adj & alive[:, None] & alive[None, :]
+
+
+def _np_closure(t):
+    """Boolean transitive closure rows of the traversable matrix."""
+    v = t.shape[0]
+    reach = np.eye(v, dtype=bool)
+    for _ in range(v):
+        nxt = reach | (reach @ t)
+        if (nxt == reach).all():
+            break
+        reach = nxt
+    return reach
+
+
+def test_traversable_helpers_agree():
+    g = _random_state(seed=5)
+    t_np = _np_traversable(g)
+    t = traversable(g.adj, g.valive)
+    np.testing.assert_array_equal(np.asarray(t), t_np)
+    tw = traversable_packed(g.adj_packed, g.valive, g.alive_words)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(tw, g.capacity)), t_np)
+    # row-slice form (the sharded engines' view)
+    r0, r1 = 8, 24
+    np.testing.assert_array_equal(
+        np.asarray(traversable(g.adj[r0:r1], g.valive[r0:r1], g.valive)),
+        t_np[r0:r1])
+
+
+def test_all_call_sites_pin_to_traversable():
+    """num_edges, degree, neighbors, every BFS backend, the sharded engine
+    and the index closures must all see exactly the traversable() edges."""
+    g = _random_state(seed=7)
+    t = _np_traversable(g)
+    closure = _np_closure(t)
+    vkey = np.asarray(g.vkey)
+    alive = np.asarray(g.valive)
+
+    assert int(num_edges(g)) == int(t.sum())
+
+    for s in np.nonzero(alive)[0]:
+        out_d, in_d = degree(g, int(vkey[s]))
+        assert int(out_d) == int(t[s].sum()), s
+        assert int(in_d) == int(t[:, s].sum()), s
+        n, keys = neighbors(g, int(vkey[s]))
+        assert sorted(int(k) for k in keys[: int(n)]) \
+            == sorted(int(vkey[j]) for j in np.nonzero(t[s])[0]), s
+
+    srcs = np.nonzero(alive)[0].astype(np.int32)
+    dsts = np.full_like(srcs, -1)
+    for backend in ALL_BACKENDS:
+        m = multi_bfs(g, srcs, dsts, backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(m.dist >= 0), closure[srcs],
+            err_msg=f"multi_bfs[{backend}] closure")
+        r = bfs(g, jnp.int32(int(srcs[0])), jnp.int32(-1), backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(r.dist >= 0), closure[srcs[0]],
+            err_msg=f"bfs[{backend}] closure")
+
+    # sharded engine (ambient mesh: 1 shard in the container, 8 under CI)
+    mesh = make_graph_mesh()
+    gs = partition.shard_state(mesh, g)
+    for backend in ("jnp", "packed"):
+        ms = partition.multi_bfs(gs, srcs, dsts, backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(ms.dist >= 0), closure[srcs],
+            err_msg=f"partition.multi_bfs[{backend}] closure")
+
+    # index closures are BFS-inherited — fwd rows ARE traversable closures
+    from repro.index import build_index
+
+    idx = build_index(g)
+    lm = np.asarray(idx.landmarks)
+    np.testing.assert_array_equal(
+        np.asarray(idx.fwd) | np.eye(g.capacity, dtype=bool)[lm],
+        closure[lm], err_msg="index fwd closure")
+
+
+def test_parent_scan_masks_endpoint_liveness():
+    """Regression for the pre-unification drift: the jnp parent scan used
+    ``adj > 0`` without re-masking liveness. A dead destination whose
+    stale adjacency bit survives must never be handed a parent."""
+    g = _random_state(nv=10, n_edges=30, n_dead=4, seed=9)
+    alive = np.asarray(g.valive)
+    stale = (np.asarray(g.adj) > 0) & ~(_np_traversable(g))
+    assert stale.any(), "fixture must contain stale (dead-endpoint) bits"
+    srcs = np.nonzero(alive)[0].astype(np.int32)
+    for backend in ALL_BACKENDS:
+        m = multi_bfs(g, srcs, np.full_like(srcs, -1), backend=backend)
+        parent = np.asarray(m.parent)
+        dist = np.asarray(m.dist)
+        # dead slots are never visited and never parented
+        assert not (dist[:, ~alive] >= 0).any(), backend
+        assert (parent[:, ~alive] == -1).all(), backend
+        # every assigned parent is an alive vertex with a traversable edge
+        t = _np_traversable(g)
+        for qi in range(len(srcs)):
+            for j in np.nonzero(parent[qi] >= 0)[0]:
+                p = parent[qi, j]
+                assert alive[p] and t[p, j], (backend, qi, j, p)
+
+
+# ----------------------------------------------------------------------------
+# 3. Mutation-stream bit-identity property (dense + sharded, all backends)
+# ----------------------------------------------------------------------------
+KEYS = st.integers(min_value=0, max_value=9)
+OPC = st.sampled_from([OP_ADD_V, OP_REM_V, OP_ADD_E, OP_REM_E])
+OP = st.tuples(OPC, KEYS, KEYS)
+STREAM = st.lists(st.lists(OP, min_size=1, max_size=8), min_size=1, max_size=3)
+
+
+def _assert_results_bitwise_equal(a, b, ctx=""):
+    for name, xa, xb in zip(a._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(xa), np.asarray(xb),
+            err_msg=f"{ctx}field {name!r} diverges")
+
+
+@settings(max_examples=8, deadline=None)
+@given(STREAM)
+def test_packed_engines_bit_identical_over_mutation_stream(op_lists):
+    mesh = make_graph_mesh()
+    g = make_graph(CAP)
+    gs = partition.shard_state(mesh, g)
+    g, _ = apply_ops_fast(g, make_op_batch([(OP_ADD_V, k) for k in range(8)]))
+    gs, _ = partition.apply_ops_fast(
+        gs, make_op_batch([(OP_ADD_V, k) for k in range(8)]))
+    pairs = [(0, 7), (3, 1), (5, 5), (2, 9)]
+    for step, ops in enumerate(op_lists):
+        batch = make_op_batch([(op, a, b, -1) for (op, a, b) in ops])
+        g, rd = apply_ops_fast(g, batch)
+        gs, rs = partition.apply_ops_fast(gs, batch)
+        np.testing.assert_array_equal(np.asarray(rd), np.asarray(rs))
+        if step == 1:  # exercise grow + compact mid-stream
+            g = dense_grow(dense_compact(g), CAP * 2)
+            gs = partition.grow(partition.compact(gs), CAP * 2)
+        np.testing.assert_array_equal(
+            np.asarray(version_vector(g)),
+            np.asarray(version_vector(gs.as_dense())),
+            err_msg="version vectors diverge")
+        sk = find_slots(g, jnp.asarray([p[0] for p in pairs], jnp.int32))
+        sl = find_slots(g, jnp.asarray([p[1] for p in pairs], jnp.int32))
+        ref = multi_bfs(g, sk, sl, backend="jnp")
+        for backend in ("packed", "packed_pallas"):
+            _assert_results_bitwise_equal(
+                ref, multi_bfs(g, sk, sl, backend=backend),
+                ctx=f"dense[{backend}] ")
+        for backend in ("packed", "packed_pallas"):
+            _assert_results_bitwise_equal(
+                ref, partition.multi_bfs(gs, sk, sl, backend=backend),
+                ctx=f"sharded[{backend}] ")
+        r_ref = bfs(g, sk[0], sl[0], backend="jnp")
+        for backend in PACKED_BACKENDS:
+            _assert_results_bitwise_equal(
+                r_ref, bfs(g, sk[0], sl[0], backend=backend),
+                ctx=f"bfs[{backend}] ")
+    # final states agree bit for bit (packed words included)
+    for name, xa, xb in zip(g._fields, g, partition.unshard(gs)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb),
+                                      err_msg=name)

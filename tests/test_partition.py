@@ -32,7 +32,7 @@ def test_shard_state_roundtrip_and_specs():
     g, _ = apply_ops_fast(make_graph(32), make_op_batch(_chain_batches(6)))
     s = partition.shard_state(mesh, g)
     specs = graph_state_specs()
-    assert specs["adj"] == type(specs["adj"])(AXIS, None)
+    assert specs["adj_packed"] == type(specs["adj_packed"])(AXIS, None)
     back = partition.unshard(s)
     for name, a, b in zip(g._fields, g, back):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
