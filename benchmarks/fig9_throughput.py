@@ -16,17 +16,33 @@ Workload mixes match the paper §5 set 1 (no GetPath):
 Initial graph: 1000 vertices, ~E/4 random edges (paper §5); CPU wall times —
 the claim reproduced is the SCALING SHAPE (throughput grows with lanes for
 the non-blocking engine, flat/declining for serialized ones).
+
+Second sweep (DESIGN.md §11): the direction-optimizing superstep. One fused
+multi-BFS superstep is timed at controlled frontier densities for the
+packed top-down "push" expansion, the bottom-up "pull" word reduction over
+the maintained in-adjacency, and the "hybrid" alpha/beta chooser — the
+push-vs-pull crossover density is recorded on every superstep row
+(median-of-10 timing; ``bench-smoke`` runs the quick form, so the hybrid
+engine is part of the CI gate).
 """
 from __future__ import annotations
 
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     OP_ADD_E, OP_ADD_V, OP_CON_E, OP_CON_V, OP_REM_E, OP_REM_V,
     GraphOracle, apply_ops, apply_ops_fast, make_graph, make_op_batch,
+)
+from repro.core.bfs import (
+    DEFAULT_ALPHA,
+    DEFAULT_BETA,
+    multi_bfs_step_packed_jnp,
+    multi_bfs_step_pull_jnp,
+    pick_direction,
 )
 from repro.core.graph import OpBatch
 
@@ -106,6 +122,110 @@ def adj_meta(g):
     }
 
 
+# ----------------------------------------------------------------------------
+# Direction-optimizing superstep sweep (DESIGN.md §11)
+# ----------------------------------------------------------------------------
+DENSITIES = (0.01, 0.05, 0.1, 0.25, 0.5, 0.75)
+SUPERSTEP_Q = 8
+
+
+def _time_median(fn, *args, reps=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    # median per-call: robust to the CPU container's scheduling noise
+    return float(np.median(ts)), out
+
+
+def superstep_sweep(*, nv=512, out_deg=16, q=SUPERSTEP_Q, reps=None,
+                    seed=7, quick=False):
+    """Time ONE fused superstep per direction at controlled frontier
+    densities; returns (rows, crossover_density). Engines:
+
+      push   : packed top-down expansion (multi_bfs_step_packed_jnp)
+      pull   : bottom-up word reduction over adj_in_packed
+      hybrid : the alpha/beta chooser of the hybrid backend (one jitted
+               lax.cond superstep — the exact program multi_bfs runs)
+
+    The crossover is the smallest swept density where pull's median beats
+    push's — the empirical anchor for the DEFAULT_ALPHA/BETA knobs.
+    """
+    if reps is None:
+        reps = 3 if quick else 10
+    rng = np.random.default_rng(seed)
+    g = make_graph(nv)
+    g, _ = apply_ops_fast(g, make_op_batch(
+        [(OP_ADD_V, k) for k in range(nv)], nv))
+    edges = [(OP_ADD_E, int(a), int(b))
+             for a, b in rng.integers(0, nv, (nv * out_deg, 2))]
+    for i in range(0, len(edges), 256):
+        g, _ = apply_ops_fast(g, make_op_batch(edges[i:i + 256], 256))
+    v = g.capacity
+    alive = g.valive
+
+    push_fn = jax.jit(lambda f, vis: multi_bfs_step_packed_jnp(
+        f, g.adj_packed, alive, vis))
+    pull_fn = jax.jit(lambda f, vis: multi_bfs_step_pull_jnp(
+        f, g.adj_in_packed, alive, vis))
+
+    @jax.jit
+    def hybrid_fn(f, vis):
+        nf = jnp.sum(f.astype(jnp.int32))
+        nu = jnp.sum((alive[None, :] & ~vis).astype(jnp.int32))
+        pulling = pick_direction(jnp.asarray(False), nf, nu, q * v,
+                                 DEFAULT_ALPHA, DEFAULT_BETA)
+        return jax.lax.cond(
+            pulling,
+            lambda ff, vv: multi_bfs_step_pull_jnp(
+                ff, g.adj_in_packed, alive, vv),
+            lambda ff, vv: multi_bfs_step_packed_jnp(
+                ff, g.adj_packed, alive, vv),
+            f, vis)
+
+    densities = DENSITIES[:2] if quick else DENSITIES
+    rows = []
+    for d in densities:
+        frontiers = jnp.asarray(rng.random((q, v)) < d) & alive[None, :]
+        visited = frontiers  # mid-BFS shape: visited ⊇ frontier
+        t_push, _ = _time_median(push_fn, frontiers, visited, reps=reps)
+        t_pull, _ = _time_median(pull_fn, frontiers, visited, reps=reps)
+        t_hyb, _ = _time_median(hybrid_fn, frontiers, visited, reps=reps)
+        rows.append({"density": d, "push_s": t_push, "pull_s": t_pull,
+                     "hybrid_s": t_hyb})
+    crossover = next((r["density"] for r in rows
+                      if r["pull_s"] < r["push_s"]), None)
+    return rows, crossover
+
+
+def superstep_json_rows(rows, crossover, q=SUPERSTEP_Q,
+                        figure="fig9_throughput"):
+    """Uniform long-format records for the superstep sweep: one row per
+    engine per density, push as the baseline, the measured crossover
+    density riding on every row (None while pull never wins a swept
+    point)."""
+    out = []
+    for r in rows:
+        for eng in ("push", "pull", "hybrid"):
+            sec = r[f"{eng}_s"]
+            out.append({
+                "figure": figure,
+                "q": q,
+                "engine": eng,
+                "seconds": sec,
+                "steps": q,                      # q query-supersteps/call
+                "steps_per_s": q / sec,
+                "speedup_vs_baseline": r["push_s"] / sec,
+                "density": r["density"],
+                "crossover_density": crossover,
+            })
+    return out
+
+
 def run(lanes_list=(1, 4, 16, 64, 256), total_ops=2048, quick=False):
     g0, oracle, nv = seed_graph()
     rows = []
@@ -155,6 +275,22 @@ def main(quick=False, rows_out=None):
     for mix, lanes, f, l, s in rows:
         print(f"{mix:8s} {lanes:6d} {f:12.0f} {l:12.0f} {s:12.0f} {f/s:7.2f}x")
         out.append(f"fig9/{mix}/lanes{lanes},{1e6/f:.1f},nb_ops_s={f:.0f};vs_seq={f/s:.2f}x")
+
+    # direction-optimizing superstep sweep (DESIGN.md §11)
+    srows, crossover = superstep_sweep(quick=quick)
+    if rows_out is not None:
+        rows_out.extend(superstep_json_rows(srows, crossover))
+    print(f'\n{"density":>8s} {"push ms":>9s} {"pull ms":>9s} '
+          f'{"hybrid ms":>10s} {"hyb/push":>9s}')
+    for r in srows:
+        print(f'{r["density"]:8.2f} {r["push_s"]*1e3:9.3f} '
+              f'{r["pull_s"]*1e3:9.3f} {r["hybrid_s"]*1e3:10.3f} '
+              f'{r["push_s"]/r["hybrid_s"]:8.2f}x')
+        out.append(
+            f'fig9/superstep/d{int(r["density"]*100):02d},'
+            f'{r["hybrid_s"]*1e6:.1f},'
+            f'hybrid_vs_push={r["push_s"]/r["hybrid_s"]:.2f}x')
+    print(f"push/pull crossover density: {crossover}")
     return out
 
 

@@ -42,7 +42,9 @@ from repro.core.graph import (  # noqa: F401
     num_edges,
     num_vertices,
     pack_bits,
+    pack_transpose,
     packed_width,
+    transpose_invariant,
     traversable,
     traversable_packed,
     unpack_bits,
@@ -63,8 +65,11 @@ from repro.core.ops import (  # noqa: F401
 )
 from repro.core.bfs import (  # noqa: F401
     BFSResult,
+    HYBRID_BACKENDS,
     MultiBFSResult,
+    PACKED_BACKENDS,
     bfs,
+    default_backend,
     extract_path,
     multi_bfs,
     reachable_count,

@@ -9,7 +9,7 @@ traversal is a sequence of *frontier expansion* steps over adjacency tiles:
 
 One step costs O(V^2 / P) dense work with high arithmetic intensity instead of
 O(E) random accesses — the hardware-adaptation core of this reproduction
-(DESIGN.md §1). ``step_fn`` is pluggable per backend (DESIGN.md §10):
+(DESIGN.md §1). ``step_fn`` is pluggable per backend (DESIGN.md §10, §11):
 
   "jnp"           float32-MXU reference: unpack the packed words, expand via
                   a frontier mat-vec (always available)
@@ -17,22 +17,34 @@ O(E) random accesses — the hardware-adaptation core of this reproduction
   "packed"        pure-jnp AND/OR reduction over the packed uint32 words —
                   no unpack, no matmul, ~32x less adjacency traffic
   "packed_pallas" kernels/bfs_step packed kernel (words streamed HBM->VMEM)
+  "hybrid"        direction-optimizing superstep (DESIGN.md §11): per-step
+                  frontier/unvisited popcounts pick the packed top-down
+                  "push" expansion or a bottom-up "pull" word reduction
+                  over the maintained ``adj_in_packed`` (Beamer-style
+                  alpha/beta switch)
+  "hybrid_pallas" same switch; push = the packed bfs_step kernel, pull =
+                  kernels/bfs_pull_step
 
-All four backends produce bit-identical BFSResults; every edge view is
-derived from the ONE ``core.graph.traversable`` predicate.
+All six backends produce bit-identical BFSResults; every edge view is
+derived from the ONE ``core.graph.traversable`` predicate. ``backend=None``
+anywhere in this module resolves through ``default_backend()`` — the single
+place the repo's fastest engine is named (DESIGN.md §11).
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.graph import (
+    WORD_BITS,
     GraphState,
     or_reduce,
     pack_bits,
+    popcount,
     traversable,
     traversable_packed,
     unpack_bits,
@@ -42,6 +54,38 @@ INT32_MAX = jnp.int32(2**31 - 1)
 
 # backends whose step functions consume ``state.adj_packed`` directly
 PACKED_BACKENDS = ("packed", "packed_pallas")
+# direction-optimizing backends: consume adj_packed AND adj_in_packed
+HYBRID_BACKENDS = ("hybrid", "hybrid_pallas")
+
+# Beamer-style direction-switch knobs (DESIGN.md §11), static jit args:
+# go bottom-up when |frontier| * alpha >= |unvisited|, return top-down once
+# |frontier| < V / beta. Vertex-count forms of Beamer's edge-count rules —
+# the dense engines' per-step cost is row-count-, not edge-count-, shaped.
+# alpha defaults to the packed WORD WIDTH: a pull superstep touches a 32x
+# denser encoding per row (words, not parent-candidate lanes), so bottom-up
+# pays off once the frontier reaches ~1/32 of the unvisited set — matching
+# the measured push/pull crossover recorded in BENCH_fig9_throughput.json.
+# On tile-skipping TPU hardware (where push cost really is
+# frontier-proportional) serve paths can lower alpha toward Beamer's
+# classical ~14; both knobs are static jit args precisely for that.
+DEFAULT_ALPHA = WORD_BITS
+DEFAULT_BETA = 64
+
+
+def default_backend() -> str:
+    """The fastest BFS backend for this build — the ONE resolution point
+    every ``backend=None`` call site threads through (DESIGN.md §11).
+
+    "hybrid" since the direction-optimizing engine landed (previously
+    "packed"); override with the ``REPRO_BFS_BACKEND`` environment variable
+    (e.g. force "packed_pallas" on a real TPU to keep the superstep in the
+    Pallas kernels). tests/test_hybrid.py pins the resolution.
+    """
+    return os.environ.get("REPRO_BFS_BACKEND", "hybrid")
+
+
+def _resolve_backend(backend: str | None) -> str:
+    return default_backend() if backend is None else backend
 
 
 def bfs_step_jnp(frontier, adj, alive, visited):
@@ -81,6 +125,50 @@ def bfs_step_packed_jnp(frontier, adj_packed, alive, visited):
     return new, parent
 
 
+def ctz32(words: jax.Array) -> jax.Array:
+    """Per-word count-trailing-zeros for uint32 (int32 out; 32 for a zero
+    word): isolate the lowest set bit with the two's-complement trick, then
+    popcount the trailing-zero mask below it."""
+    low = words & (jnp.uint32(0) - words)
+    return popcount(low - jnp.uint32(1))
+
+
+def bfs_step_pull_jnp(frontier, adj_in_packed, alive, visited):
+    """Bottom-up ("pull") frontier expansion (DESIGN.md §11): every
+    not-yet-visited vertex scans ITS OWN in-adjacency row for a frontier
+    parent — one [V, W] word AND against the packed frontier bitset instead
+    of the push step's frontier-row selection + [V, V] parent-candidate
+    matrix. parent[j] = lowest set bit of ``adj_in[j] & frontier`` = the
+    smallest frontier index with a traversable edge into j, so the result
+    is bit-identical to ``bfs_step_packed_jnp`` (the masked word-min
+    realizes first-parent-wins at word granularity).
+    """
+    w = adj_in_packed.shape[1]
+    fw = pack_bits(frontier & alive)            # only live sources expand
+    cand = adj_in_packed & fw[None, :]          # [V, W]
+    hit = jnp.any(cand != 0, axis=1)
+    new = hit & alive & ~visited
+    widx = (jnp.arange(w, dtype=jnp.int32) * WORD_BITS)[None, :]
+    pcand = jnp.where(cand != 0, widx + ctz32(cand), INT32_MAX)
+    parent = jnp.min(pcand, axis=1)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new, parent
+
+
+def pick_direction(pulling, nf, nu, v: int, alpha: int, beta: int):
+    """The Beamer-style push/pull switch (DESIGN.md §11), on vertex
+    popcounts: enter pull when the frontier has grown to 1/alpha of the
+    unvisited set, leave it once the frontier shrinks below V/beta. The
+    hysteresis (``pulling`` carried across supersteps) mirrors Beamer's
+    two-threshold design; both directions are bit-identical, so the choice
+    is pure cost steering. Products are formed in float32: the comparison
+    is a heuristic, and nf * alpha can exceed int32 for large Q * V.
+    """
+    go_pull = nf.astype(jnp.float32) * alpha >= nu.astype(jnp.float32)
+    stay_pull = nf.astype(jnp.float32) * beta >= jnp.float32(v)
+    return jnp.where(pulling, stay_pull, go_pull)
+
+
 def _get_step_fn(backend: str):
     if backend == "jnp":
         return bfs_step_jnp
@@ -97,6 +185,21 @@ def _get_step_fn(backend: str):
     raise ValueError(f"unknown bfs backend {backend!r}")
 
 
+def _get_hybrid_step_fns(backend: str):
+    """(push_fn, pull_fn) for the direction-optimizing backends. Push is
+    the packed top-down expansion, pull the bottom-up in-row reduction
+    (DESIGN.md §11); "hybrid" stays in jnp, "hybrid_pallas" runs both
+    directions through their Pallas kernels."""
+    if backend == "hybrid":
+        return bfs_step_packed_jnp, bfs_step_pull_jnp
+    if backend == "hybrid_pallas":
+        from repro.kernels.bfs_pull_step.ops import bfs_pull_step
+        from repro.kernels.bfs_step.ops import bfs_step_packed
+
+        return bfs_step_packed, bfs_pull_step
+    raise ValueError(f"unknown hybrid bfs backend {backend!r}")
+
+
 class BFSResult(NamedTuple):
     found: jax.Array    # bool   — dst reached
     parent: jax.Array   # int32[V] — BFS tree (slot -> parent slot, -1 root/unvisited)
@@ -105,14 +208,30 @@ class BFSResult(NamedTuple):
     steps: jax.Array    # int32  — number of frontier expansions
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def bfs(state: GraphState, src_slot, dst_slot, backend: str = "jnp") -> BFSResult:
+def bfs(state: GraphState, src_slot, dst_slot, backend: str | None = None,
+        alpha: int = DEFAULT_ALPHA, beta: int = DEFAULT_BETA) -> BFSResult:
     """Full BFS from ``src_slot``; early exit when ``dst_slot`` is reached.
 
     ``dst_slot < 0`` explores the full reachable set (used by benchmarks).
     Traversable edge: adj[u, w] & alive[u] & alive[w] — a dead endpoint makes
     the ENode logically absent, exactly the paper's marked-ptv rule.
+
+    ``backend=None`` resolves via ``default_backend()`` — HERE, outside
+    the jit boundary, so the resolved name (not None) is the static cache
+    key and a changed ``REPRO_BFS_BACKEND`` takes effect on the next call.
+    The hybrid backends run the direction-optimizing superstep
+    (DESIGN.md §11): per-step popcounts of the frontier and the unvisited
+    set pick push or pull via ``pick_direction`` (``alpha``/``beta`` are
+    the static Beamer knobs, ignored by the single-direction backends).
     """
+    return _bfs_jit(state, src_slot, dst_slot,
+                    backend=_resolve_backend(backend), alpha=alpha,
+                    beta=beta)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "alpha", "beta"))
+def _bfs_jit(state: GraphState, src_slot, dst_slot, backend: str,
+             alpha: int, beta: int) -> BFSResult:
     v = state.capacity
     alive = state.valive
     src_ok = (src_slot >= 0) & alive[jnp.maximum(src_slot, 0)]
@@ -123,28 +242,47 @@ def bfs(state: GraphState, src_slot, dst_slot, backend: str = "jnp") -> BFSResul
     parent0 = jnp.full((v,), -1, jnp.int32)
     dist0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
     expanded0 = jnp.zeros((v,), jnp.bool_)
-    step_fn = _get_step_fn(backend)
-    # packed backends stream the stored words; the float32-MXU backends get
-    # the unpacked view, materialized once outside the superstep loop
-    adj_arg = state.adj_packed if backend in PACKED_BACKENDS else state.adj
+    hybrid = backend in HYBRID_BACKENDS
+    if hybrid:
+        push_fn, pull_fn = _get_hybrid_step_fns(backend)
+        adj_arg = state.adj_packed
+        adj_in_arg = state.adj_in_packed
+    else:
+        step_fn = _get_step_fn(backend)
+        # packed backends stream the stored words; the float32-MXU backends
+        # get the unpacked view, materialized once outside the superstep loop
+        adj_arg = state.adj_packed if backend in PACKED_BACKENDS else state.adj
 
     def cond(c):
-        frontier, visited, parent, dist, expanded, step = c
+        frontier, visited, parent, dist, expanded, step = c[:6]
         hit_dst = (dst_slot >= 0) & visited[jnp.maximum(dst_slot, 0)]
         return jnp.any(frontier) & ~hit_dst & (step < v)
 
     def body(c):
-        frontier, visited, parent, dist, expanded, step = c
+        frontier, visited, parent, dist, expanded, step = c[:6]
         expanded = expanded | frontier
-        new, par = step_fn(frontier, adj_arg, alive, visited)
+        if hybrid:
+            pulling = pick_direction(
+                c[6], jnp.sum(frontier.astype(jnp.int32)),
+                jnp.sum((alive & ~visited).astype(jnp.int32)), v, alpha, beta)
+            new, par = jax.lax.cond(
+                pulling,
+                lambda f, vis: pull_fn(f, adj_in_arg, alive, vis),
+                lambda f, vis: push_fn(f, adj_arg, alive, vis),
+                frontier, visited)
+        else:
+            new, par = step_fn(frontier, adj_arg, alive, visited)
         parent = jnp.where(new, par, parent)
         dist = jnp.where(new, step + 1, dist)
         visited = visited | new
-        return new, visited, parent, dist, expanded, step + 1
+        out = (new, visited, parent, dist, expanded, step + 1)
+        return out + (pulling,) if hybrid else out
 
-    frontier, visited, parent, dist, expanded, steps = jax.lax.while_loop(
-        cond, body, (frontier0, visited0, parent0, dist0, expanded0, jnp.int32(0))
-    )
+    init = (frontier0, visited0, parent0, dist0, expanded0, jnp.int32(0))
+    if hybrid:
+        init = init + (jnp.asarray(False),)
+    final = jax.lax.while_loop(cond, body, init)
+    frontier, visited, parent, dist, expanded, steps = final[:6]
     found = (dst_slot >= 0) & visited[jnp.maximum(dst_slot, 0)] & src_ok
     return BFSResult(found, parent, dist, expanded, steps)
 
@@ -176,8 +314,10 @@ def extract_path(parent: jax.Array, src_slot, dst_slot):
     return n, fwd
 
 
-def reachable_count(state: GraphState, src_slot, backend: str = "jnp") -> jax.Array:
-    """|{w : src ->* w}| — exercised by benchmarks."""
+def reachable_count(state: GraphState, src_slot,
+                    backend: str | None = None) -> jax.Array:
+    """|{w : src ->* w}| — exercised by benchmarks. ``backend=None``
+    resolves via ``default_backend()`` (DESIGN.md §11)."""
     r = bfs(state, src_slot, jnp.int32(-1), backend=backend)
     return jnp.sum((r.dist >= 0).astype(jnp.int32))
 
@@ -230,6 +370,25 @@ def multi_bfs_step_packed_jnp(frontiers, adj_packed, alive, visited):
     return new, parent
 
 
+def multi_bfs_step_pull_jnp(frontiers, adj_in_packed, alive, visited):
+    """Fused bottom-up expansion for Q frontiers (DESIGN.md §11): per query,
+    every unvisited vertex ANDs its maintained in-adjacency row against that
+    query's packed frontier bitset — a [Q, V, W] word volume instead of the
+    push step's [V, Q, V] parent-candidate volume (a 32x cut in the term
+    that dominates each superstep). Bit-identical to
+    ``multi_bfs_step_packed_jnp``."""
+    w = adj_in_packed.shape[1]
+    fw = pack_bits(frontiers & alive[None, :])          # [Q, W]
+    cand = adj_in_packed[None, :, :] & fw[:, None, :]   # [Q, V, W]
+    hit = jnp.any(cand != 0, axis=2)
+    new = hit & alive[None, :] & ~visited
+    widx = (jnp.arange(w, dtype=jnp.int32) * WORD_BITS)[None, None, :]
+    pcand = jnp.where(cand != 0, widx + ctz32(cand), INT32_MAX)
+    parent = jnp.min(pcand, axis=2)
+    parent = jnp.where(new, parent, jnp.int32(-1))
+    return new, parent
+
+
 def _get_multi_step_fn(backend: str):
     if backend == "jnp":
         return multi_bfs_step_jnp
@@ -246,6 +405,19 @@ def _get_multi_step_fn(backend: str):
     raise ValueError(f"unknown multi-bfs backend {backend!r}")
 
 
+def _get_hybrid_multi_step_fns(backend: str):
+    """(push_fn, pull_fn) for the fused direction-optimizing backends
+    (DESIGN.md §11)."""
+    if backend == "hybrid":
+        return multi_bfs_step_packed_jnp, multi_bfs_step_pull_jnp
+    if backend == "hybrid_pallas":
+        from repro.kernels.bfs_multi_step.ops import multi_bfs_step_packed
+        from repro.kernels.bfs_pull_step.ops import multi_bfs_pull_step
+
+        return multi_bfs_step_packed, multi_bfs_pull_step
+    raise ValueError(f"unknown hybrid multi-bfs backend {backend!r}")
+
+
 class MultiBFSResult(NamedTuple):
     found: jax.Array     # bool[Q]    — dst reached (per query)
     parent: jax.Array    # int32[Q,V] — per-query BFS tree (-1 root/unvisited)
@@ -255,9 +427,10 @@ class MultiBFSResult(NamedTuple):
     supersteps: jax.Array  # int32    — shared loop iterations actually run
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "parents"))
 def multi_bfs(state: GraphState, src_slots, dst_slots,
-              backend: str = "jnp", parents: bool = True) -> MultiBFSResult:
+              backend: str | None = None, parents: bool = True,
+              alpha: int = DEFAULT_ALPHA,
+              beta: int = DEFAULT_BETA) -> MultiBFSResult:
     """Fused BFS from Q sources with per-query early exit (DESIGN.md §7).
 
     Per-query results are bit-identical to ``jax.vmap(bfs)`` over the same
@@ -281,7 +454,26 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
     superstep earns its keep on parent extraction; the matmul alone XLA
     already tiles well), the traversable WORDS for the packed backends
     (DESIGN.md §10) — the latter stream 32x less adjacency per superstep.
+
+    The hybrid backends (DESIGN.md §11) pick push or pull per superstep
+    from the popcounts of the ACTIVE queries' pooled frontier and unvisited
+    sets (one shared decision — a per-query split would compute both
+    directions); ``alpha``/``beta`` are the static Beamer knobs. Closure
+    mode stays in jnp for both hybrid flavors (parent extraction is the
+    term the kernels exist to shrink, and closure mode has none).
+    ``backend=None`` resolves via ``default_backend()`` here, outside the
+    jit boundary, so the resolved name is the static cache key.
     """
+    return _multi_bfs_jit(state, src_slots, dst_slots,
+                          backend=_resolve_backend(backend),
+                          parents=parents, alpha=alpha, beta=beta)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "parents", "alpha", "beta"))
+def _multi_bfs_jit(state: GraphState, src_slots, dst_slots, backend: str,
+                   parents: bool, alpha: int,
+                   beta: int) -> MultiBFSResult:
     src_slots = jnp.asarray(src_slots, jnp.int32)
     dst_slots = jnp.asarray(dst_slots, jnp.int32)
     q = src_slots.shape[0]
@@ -296,9 +488,15 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
     dist0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
     expanded0 = jnp.zeros((q, v), jnp.bool_)
     steps0 = jnp.zeros((q,), jnp.int32)
-    step_fn = _get_multi_step_fn(backend)
-    is_packed = backend in PACKED_BACKENDS
-    adj_arg = state.adj_packed if is_packed else state.adj
+    hybrid = backend in HYBRID_BACKENDS
+    is_packed = backend in PACKED_BACKENDS or hybrid
+    if hybrid:
+        push_fn, pull_fn = _get_hybrid_multi_step_fns(backend)
+        adj_arg = state.adj_packed
+        adj_in_arg = state.adj_in_packed
+    else:
+        step_fn = _get_multi_step_fn(backend)
+        adj_arg = state.adj_packed if is_packed else state.adj
     if not parents:
         # closure-only expansion operand, hoisted out of the superstep loop:
         # traversable words for the packed path, the float32 traversable
@@ -314,21 +512,48 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
         return jnp.any(frontiers, axis=1) & ~hit_dst & (step < v)
 
     def cond(c):
-        frontiers, visited, parent, dist, expanded, steps, step = c
+        frontiers, visited, parent, dist, expanded, steps, step = c[:7]
         return jnp.any(_active(frontiers, visited, step))
 
     def body(c):
-        frontiers, visited, parent, dist, expanded, steps, step = c
+        frontiers, visited, parent, dist, expanded, steps, step = c[:7]
         act = _active(frontiers, visited, step)
         # early-exit masking: finished queries expose an all-empty frontier,
         # so their tiles are skipped by the kernel's @pl.when fast path and
         # their parent/dist/expanded stay frozen exactly as if their own
         # single-query loop had terminated.
         f = frontiers & act[:, None]
+        if hybrid:
+            # pooled direction decision over the active queries: finished
+            # queries contribute empty frontiers and nothing to nu
+            nf = jnp.sum(f.astype(jnp.int32))
+            nu = jnp.sum(((alive[None, :] & ~visited)
+                          & act[:, None]).astype(jnp.int32))
+            pulling = pick_direction(c[7], nf, nu, q * v, alpha, beta)
         expanded = expanded | f
         if parents:
-            new, par = step_fn(f, adj_arg, alive, visited)
+            if hybrid:
+                new, par = jax.lax.cond(
+                    pulling,
+                    lambda ff, vis: pull_fn(ff, adj_in_arg, alive, vis),
+                    lambda ff, vis: push_fn(ff, adj_arg, alive, vis),
+                    f, visited)
+            else:
+                new, par = step_fn(f, adj_arg, alive, visited)
             parent = jnp.where(new, par, parent)
+        elif hybrid:
+            def _push_closure(ff, vis):
+                sel = jnp.where(ff[:, :, None], closure_op[None, :, :],
+                                jnp.uint32(0))
+                return unpack_bits(or_reduce(sel, 1), v) & ~vis
+
+            def _pull_closure(ff, vis):
+                fw = pack_bits(ff & alive[None, :])
+                cand = adj_in_arg[None, :, :] & fw[:, None, :]
+                return jnp.any(cand != 0, axis=2) & alive[None, :] & ~vis
+
+            new = jax.lax.cond(pulling, _pull_closure, _push_closure,
+                               f, visited)
         elif is_packed:
             sel = jnp.where(f[:, :, None], closure_op[None, :, :],
                             jnp.uint32(0))
@@ -338,11 +563,14 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
         dist = jnp.where(new, step + 1, dist)
         visited = visited | new
         steps = steps + act.astype(jnp.int32)
-        return new, visited, parent, dist, expanded, steps, step + 1
+        out = (new, visited, parent, dist, expanded, steps, step + 1)
+        return out + (pulling,) if hybrid else out
 
-    frontiers, visited, parent, dist, expanded, steps, supersteps = jax.lax.while_loop(
-        cond, body,
-        (frontier0, visited0, parent0, dist0, expanded0, steps0, jnp.int32(0)),
-    )
+    init = (frontier0, visited0, parent0, dist0, expanded0, steps0,
+            jnp.int32(0))
+    if hybrid:
+        init = init + (jnp.asarray(False),)
+    final = jax.lax.while_loop(cond, body, init)
+    frontiers, visited, parent, dist, expanded, steps, supersteps = final[:7]
     found = (dst_slots >= 0) & visited[jnp.arange(q), jnp.maximum(dst_slots, 0)] & src_ok
     return MultiBFSResult(found, parent, dist, expanded, steps, supersteps)

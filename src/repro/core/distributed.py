@@ -61,6 +61,7 @@ from repro.core.graph import (
     GraphState,
     OpBatch,
     pack_bits,
+    pack_transpose,
     traversable,
     unpack_bits,
 )
@@ -86,6 +87,7 @@ def shard_graph(mesh: Mesh, state: GraphState) -> GraphState:
         vver=jax.device_put(state.vver, row),
         ecnt=jax.device_put(state.ecnt, row),
         adj_packed=jax.device_put(state.adj_packed, mat),
+        adj_in_packed=jax.device_put(state.adj_in_packed, mat),
     )
 
 
@@ -312,7 +314,12 @@ def dapply_ops(mesh: Mesh, state: GraphState, ops: OpBatch):
         state.vkey, state.valive, state.vver, state.ecnt, state.adj_packed,
         ops.opcode, ops.key1, ops.key2, ops.expect,
     )
-    return GraphState(vkey, valive, vver, ecnt, adj), res
+    # Legacy engine: the lane loop mutates only the dense out-rows; the
+    # maintained in-adjacency is restored by one packed transpose at the
+    # boundary (the production partition.py engine mirrors every RMW
+    # in place instead, DESIGN.md §11).
+    adj_in = pack_transpose(adj, state.capacity)
+    return GraphState(vkey, valive, vver, ecnt, adj, adj_in), res
 
 
 # ----------------------------------------------------------------------------

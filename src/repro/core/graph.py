@@ -28,6 +28,18 @@ dense, tiled device arrays:
               is a cleared bit. Engines that want the float32 MXU path
               unpack on the fly (``GraphState.adj``); the packed engines
               stream the words directly (~32x less adjacency HBM traffic).
+  adj_in_packed[V, ceil(V/32)] : the word-packed IN-adjacency (DESIGN.md
+              §11): bit ``w % 32`` of word ``adj_in_packed[v, w // 32]`` is
+              1 iff edge slot_w -> slot_v — row v is v's incoming-edge
+              list. Maintained FIRST-CLASS by every mutation path (the same
+              masked single-bit RMWs as ``adj_packed``, mirrored), never
+              derived by a transpose: ``adj_in_packed == pack_transpose(
+              adj_packed)`` is the transpose invariant
+              (``transpose_invariant`` checks it; the hybrid BFS pull step
+              and the index's backward closures depend on it). This is the
+              TPU analogue of the incoming-edge structure Chatterjee et
+              al.'s dynamic-graph follow-up keeps per vertex so reverse
+              traversals never re-walk the whole structure.
 
 "Unbounded" growth is functional capacity doubling (``grow``), amortized like
 a vector; the paper's unboundedness is heap allocation, ours is reallocation.
@@ -83,6 +95,15 @@ def unpack_bits(words: jax.Array, v: int) -> jax.Array:
     bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
     flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
     return flat[..., :v].astype(jnp.bool_)
+
+
+def pack_transpose(words: jax.Array, v: int) -> jax.Array:
+    """Packed transpose: uint32[V, W] -> uint32[V, W] with bit (r, c) moved
+    to (c, r). Unpack -> T -> repack — O(V^2) transient, which is exactly
+    why the in-adjacency is MAINTAINED rather than derived (DESIGN.md §11);
+    this helper exists for the transpose-invariant checker, oracles and the
+    legacy boundary in core/distributed.py."""
+    return pack_bits(unpack_bits(words, v).T)
 
 
 def bit_word(col):
@@ -206,11 +227,12 @@ class GraphState(NamedTuple):
     words remain the only persistent O(V^2/32) representation).
     """
 
-    vkey: jax.Array        # int32[V]
-    valive: jax.Array      # bool[V]
-    vver: jax.Array        # int32[V]
-    ecnt: jax.Array        # int32[V]
-    adj_packed: jax.Array  # uint32[V, ceil(V/32)]
+    vkey: jax.Array           # int32[V]
+    valive: jax.Array         # bool[V]
+    vver: jax.Array           # int32[V]
+    ecnt: jax.Array           # int32[V]
+    adj_packed: jax.Array     # uint32[V, ceil(V/32)]  (out-edges, row-major)
+    adj_in_packed: jax.Array  # uint32[V, ceil(V/32)]  (in-edges, DESIGN.md §11)
 
     @property
     def capacity(self) -> int:
@@ -225,6 +247,11 @@ class GraphState(NamedTuple):
     def adj(self) -> jax.Array:
         """Dense uint8[V, V] adjacency view (unpacked on demand)."""
         return unpack_bits(self.adj_packed, self.capacity).astype(jnp.uint8)
+
+    @property
+    def adj_in(self) -> jax.Array:
+        """Dense uint8[V, V] in-adjacency view: adj_in[v, w] = adj[w, v]."""
+        return unpack_bits(self.adj_in_packed, self.capacity).astype(jnp.uint8)
 
     @property
     def alive_words(self) -> jax.Array:
@@ -261,6 +288,7 @@ def make_graph(capacity: int = 256) -> GraphState:
         vver=jnp.zeros((v,), dtype=jnp.int32),
         ecnt=jnp.zeros((v,), dtype=jnp.int32),
         adj_packed=jnp.zeros((v, packed_width(v)), dtype=jnp.uint32),
+        adj_in_packed=jnp.zeros((v, packed_width(v)), dtype=jnp.uint32),
     )
 
 
@@ -284,6 +312,7 @@ def grow(state: GraphState, new_capacity: int) -> GraphState:
         vver=jnp.concatenate([state.vver, jnp.zeros((pad,), jnp.int32)]),
         ecnt=jnp.concatenate([state.ecnt, jnp.zeros((pad,), jnp.int32)]),
         adj_packed=jnp.pad(state.adj_packed, ((0, pad), (0, wpad))),
+        adj_in_packed=jnp.pad(state.adj_in_packed, ((0, pad), (0, wpad))),
     )
 
 
@@ -378,6 +407,24 @@ def to_networkx_like(state: GraphState) -> tuple[list[int], list[tuple[int, int]
             if valive[j]:
                 edges.append((int(vkey[i]), int(vkey[j])))
     return verts, edges
+
+
+def transpose_invariant(state) -> jax.Array:
+    """The in-adjacency maintenance invariant (DESIGN.md §11): after ANY op
+    stream, ``adj_in_packed == pack_transpose(adj_packed)`` — bit (r, c) of
+    the out-adjacency is bit (c, r) of the in-adjacency, padding included
+    (``pack_transpose`` reproduces the padding invariant, so the comparison
+    also pins pad bits to zero on both sides).
+
+    Accepts anything with ``adj_packed``/``adj_in_packed``/``capacity``
+    (dense ``GraphState`` or a mesh-sharded state's gathered view). Returns
+    a scalar bool; tests/test_hybrid.py drives it over arbitrary
+    interleaved mutation/grow/compact streams, dense AND sharded.
+    """
+    want = pack_transpose(state.adj_packed, state.capacity)
+    return jnp.all(state.adj_in_packed == want) & jnp.all(
+        pack_transpose(state.adj_in_packed, state.capacity)
+        == state.adj_packed)
 
 
 @functools.partial(jax.jit, static_argnums=())

@@ -93,7 +93,11 @@ from repro.core.graph import (
 # ----------------------------------------------------------------------------
 def _clear_row_col(adj_packed, slot, do):
     """Clear adjacency row ``slot`` and column bit ``slot`` in every row
-    (the stale-adjacency scrub a slot reuse needs), when ``do``."""
+    (the stale-adjacency scrub a slot reuse needs), when ``do``.
+
+    The scrubbed bit set {(slot, *)} ∪ {(*, slot)} is its own transpose, so
+    the SAME helper scrubs the in-adjacency (DESIGN.md §11) — every caller
+    applies it to both packed matrices."""
     w, m = bit_word(slot), bit_mask(slot)
     cleared = adj_packed.at[slot, :].set(jnp.uint32(0))
     cleared = cleared.at[:, w].set(cleared[:, w] & ~m)
@@ -128,11 +132,14 @@ def _add_vertex(state: GraphState, k: jax.Array):
     vkey = state.vkey.at[tgt].set(jnp.where(do, k, state.vkey[tgt]))
     valive = state.valive.at[tgt].set(jnp.where(do, True, state.valive[tgt]))
     vver = state.vver.at[tgt].add(jnp.where(do, 1, 0))
-    # A reused slot may carry stale adjacency from a dead predecessor: clear.
+    # A reused slot may carry stale adjacency from a dead predecessor: clear
+    # (the scrub set is transpose-symmetric, so the in-adjacency takes the
+    # identical clear — DESIGN.md §11).
     adj = _clear_row_col(state.adj_packed, tgt, do)
+    adj_in = _clear_row_col(state.adj_in_packed, tgt, do)
     ecnt = state.ecnt.at[tgt].set(jnp.where(do, 0, state.ecnt[tgt]))
     res = jnp.where(exists, R_FALSE, jnp.where(full, R_TABLE_FULL, R_TRUE))
-    return GraphState(vkey, valive, vver, ecnt, adj), res.astype(jnp.int32)
+    return GraphState(vkey, valive, vver, ecnt, adj, adj_in), res.astype(jnp.int32)
 
 
 def _remove_vertex(state: GraphState, k: jax.Array):
@@ -146,13 +153,14 @@ def _remove_vertex(state: GraphState, k: jax.Array):
     # Incoming edges must invalidate their sources' collects: removing v
     # changes reachability through every u with (u -> v), and the paper's
     # adversary argument needs those rows' versions to move. Bump ecnt of all
-    # sources of live in-edges (vectorized FAA over the column's bit lane).
-    in_src = ((state.adj_packed[:, bit_word(tgt)] & bit_mask(tgt)) > 0) \
+    # sources of live in-edges — ONE maintained in-adjacency row instead of
+    # a strided column gather (DESIGN.md §11).
+    in_src = unpack_bits(state.adj_in_packed[tgt], state.capacity) \
         & state.valive & do
     ecnt = ecnt + in_src.astype(jnp.int32)
     res = jnp.where(do, R_TRUE, R_FALSE)
-    return GraphState(state.vkey, valive, vver, ecnt,
-                      state.adj_packed), res.astype(jnp.int32)
+    return GraphState(state.vkey, valive, vver, ecnt, state.adj_packed,
+                      state.adj_in_packed), res.astype(jnp.int32)
 
 
 def _edge_op(state: GraphState, k, l, expect, *, add: bool):
@@ -169,13 +177,16 @@ def _edge_op(state: GraphState, k, l, expect, *, add: bool):
         do = both & cas_ok & present
         ok_res = jnp.where(present, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT)
     adj = _set_edge_bit(state.adj_packed, rk, rl, jnp.asarray(add), do)
+    # mirrored single-bit RMW on the in-adjacency (DESIGN.md §11)
+    adj_in = _set_edge_bit(state.adj_in_packed, rl, rk, jnp.asarray(add), do)
     ecnt = state.ecnt.at[rk].add(jnp.where(do, 1, 0))  # the paper's FAA
     res = jnp.where(
         both,
         jnp.where(cas_ok, ok_res, R_CAS_FAIL),
         R_VERTEX_NOT_PRESENT,
     )
-    return GraphState(state.vkey, state.valive, state.vver, ecnt, adj), res.astype(jnp.int32)
+    return GraphState(state.vkey, state.valive, state.vver, ecnt, adj,
+                      adj_in), res.astype(jnp.int32)
 
 
 def _contains_edge_op(state: GraphState, k, l):
@@ -381,10 +392,15 @@ def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array,
     vver = state.vver.at[alloc].add(1, mode="drop")
     ecnt = state.ecnt.at[alloc].set(0, mode="drop")
     # stale-adjacency scrub on reused slots: rows by scatter, columns by ONE
-    # packed AND-NOT mask (several lanes may land in the same word)
+    # packed AND-NOT mask (several lanes may land in the same word). The
+    # scrub set is transpose-symmetric, so the in-adjacency takes the
+    # identical row scatter + column mask (DESIGN.md §11).
     adj = state.adj_packed.at[alloc, :].set(jnp.uint32(0), mode="drop")
+    adj_in = state.adj_in_packed.at[alloc, :].set(jnp.uint32(0), mode="drop")
     clear_cols = jnp.zeros((cap,), jnp.bool_).at[alloc].set(True, mode="drop")
-    adj = adj & ~pack_bits(clear_cols)[None, :]
+    clear_mask = ~pack_bits(clear_cols)[None, :]
+    adj = adj & clear_mask
+    adj_in = adj_in & clear_mask
     res = jnp.where(is_addv, jnp.where(wants, R_TRUE, R_FALSE), res)
 
     # --- ContainsVertex -------------------------------------------------------
@@ -407,6 +423,14 @@ def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array,
     curw = adj[jnp.minimum(tgt_r, cap - 1), wcol]
     neww = jnp.where(do_add, curw | mbit, curw & ~mbit)
     adj = adj.at[tgt_r, wcol].set(neww, mode="drop")
+    # mirrored in-adjacency RMW: firing clean lanes own pairwise-distinct
+    # DESTINATION rows too (disjoint key sets), so the in-row word
+    # read-modify-writes are just as conflict-free (DESIGN.md §11)
+    tgt_ri = jnp.where(fire, r2, cap)
+    wcol_i, mbit_i = bit_word(r1), bit_mask(r1)
+    curw_i = adj_in[jnp.minimum(tgt_ri, cap - 1), wcol_i]
+    neww_i = jnp.where(do_add, curw_i | mbit_i, curw_i & ~mbit_i)
+    adj_in = adj_in.at[tgt_ri, wcol_i].set(neww_i, mode="drop")
     ecnt = ecnt.at[tgt_r].add(1, mode="drop")
 
     res = jnp.where(
@@ -424,7 +448,7 @@ def _apply_clean_vectorized(state: GraphState, ops: OpBatch, active: jax.Array,
         jnp.where(both, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_NOT_PRESENT), R_VERTEX_NOT_PRESENT),
         res,
     )
-    return GraphState(vkey, valive, vver, ecnt, adj), res
+    return GraphState(vkey, valive, vver, ecnt, adj, adj_in), res
 
 
 def _find_slots_masked(state: GraphState, keys: jax.Array) -> jax.Array:
@@ -485,6 +509,10 @@ def _edge_op_undirected(state: GraphState, k, l, expect, *, add: bool):
         ok_res = jnp.where(present, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT)
     adj = _set_edge_bit(state.adj_packed, rk, rl, jnp.asarray(add), do)
     adj = _set_edge_bit(adj, rl, rk, jnp.asarray(add), do)
+    # an undirected edge is its own transpose: the in-adjacency takes the
+    # same symmetric pair of bit writes (DESIGN.md §11)
+    adj_in = _set_edge_bit(state.adj_in_packed, rl, rk, jnp.asarray(add), do)
+    adj_in = _set_edge_bit(adj_in, rk, rl, jnp.asarray(add), do)
     ecnt = state.ecnt.at[rk].add(jnp.where(do, 1, 0))
     ecnt = ecnt.at[rl].add(jnp.where(do & (rk != rl), 1, 0))
     res = jnp.where(
@@ -492,7 +520,8 @@ def _edge_op_undirected(state: GraphState, k, l, expect, *, add: bool):
         jnp.where(cas_ok, ok_res, R_CAS_FAIL),
         R_VERTEX_NOT_PRESENT,
     )
-    return GraphState(state.vkey, state.valive, state.vver, ecnt, adj), res.astype(jnp.int32)
+    return GraphState(state.vkey, state.valive, state.vver, ecnt, adj,
+                      adj_in), res.astype(jnp.int32)
 
 
 @jax.jit
@@ -529,15 +558,17 @@ def neighbors(state: GraphState, k):
 
 @jax.jit
 def degree(state: GraphState, k):
-    """(out_degree, in_degree) of v(k); (-1, -1) if absent. Out-degree is one
-    popcount over the slot's traversable row words (DESIGN.md §10)."""
+    """(out_degree, in_degree) of v(k); (-1, -1) if absent. BOTH degrees are
+    one popcount over the slot's traversable row words — out over
+    ``adj_packed``, in over the maintained ``adj_in_packed`` row
+    (DESIGN.md §10, §11) — no strided column gather."""
     slot = find_slot(state, jnp.asarray(k, jnp.int32))
     ok = slot >= 0
     s = jnp.maximum(slot, 0)
-    live = state.valive
     out_d = jnp.sum(popcount(state.adj_packed[s] & state.alive_words))
-    col = (state.adj_packed[:, bit_word(s)] & bit_mask(s)) > 0
-    in_d = jnp.sum((col & live & live[s]).astype(jnp.int32))
+    in_d = jnp.where(
+        state.valive[s],
+        jnp.sum(popcount(state.adj_in_packed[s] & state.alive_words)), 0)
     return (jnp.where(ok, out_d, -1), jnp.where(ok, in_d, -1))
 
 
@@ -554,9 +585,14 @@ def compact(state: GraphState) -> GraphState:
     dead = (~state.valive) & (state.vkey != EMPTY_KEY)
     keep = ~dead
     vkey = jnp.where(dead, EMPTY_KEY, state.vkey)
+    keep_words = pack_bits(keep)[None, :]
+    # the scrub (dead rows zeroed, dead columns masked) is transpose-
+    # symmetric: the in-adjacency takes the identical form (DESIGN.md §11)
     adj = jnp.where(keep[:, None],
-                    state.adj_packed & pack_bits(keep)[None, :], jnp.uint32(0))
-    return GraphState(vkey, state.valive, state.vver, state.ecnt, adj)
+                    state.adj_packed & keep_words, jnp.uint32(0))
+    adj_in = jnp.where(keep[:, None],
+                       state.adj_in_packed & keep_words, jnp.uint32(0))
+    return GraphState(vkey, state.valive, state.vver, state.ecnt, adj, adj_in)
 
 
 # ----------------------------------------------------------------------------

@@ -5,9 +5,12 @@
 split placement over a 1-D device mesh (axis ``"rows"``, shared with
 core/distributed.py):
 
-  * ``adj_packed`` — the only O(V^2/32) array (word-packed adjacency,
-    DESIGN.md §10) — is ROW-SHARDED: every device owns V/S contiguous
-    packed adjacency rows (the edge-lists of its vertices);
+  * ``adj_packed`` and ``adj_in_packed`` — the only O(V^2/32) arrays
+    (word-packed out-/in-adjacency, DESIGN.md §10, §11) — are
+    ROW-SHARDED: every device owns V/S contiguous packed out-edge rows
+    (the edge-lists of its vertices) AND the in-edge rows of the same
+    slot block (= the out-adjacency's columns — the column-sharded
+    in-row layout the hybrid pull phase runs shard-local over);
   * ``vkey``/``valive``/``vver``/``ecnt`` — the O(V) version metadata — are
     REPLICATED, so lookups (LocV/LocC), the double-collect validation
     vector, and the lane-order mutation schedule are shard-local replicated
@@ -59,7 +62,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import graph as ggraph
 from repro.core import ops as gops
-from repro.core.bfs import PACKED_BACKENDS, MultiBFSResult
+from repro.core.bfs import (
+    DEFAULT_ALPHA,
+    DEFAULT_BETA,
+    HYBRID_BACKENDS,
+    PACKED_BACKENDS,
+    MultiBFSResult,
+    _resolve_backend,
+    ctz32,
+    pick_direction,
+)
 from repro.core.distributed import (
     AXIS,
     _SM_NOCHECK,
@@ -102,23 +114,27 @@ INT32_MAX = jnp.int32(2**31 - 1)
 class ShardedGraphState:
     """Row-partitioned graph state (DESIGN.md §8).
 
-    Same five logical fields as ``GraphState`` (duck-type compatible for
+    Same six logical fields as ``GraphState`` (duck-type compatible for
     lookups/version_vector/_materialize), plus the owning ``mesh`` carried
     as static pytree aux data so jitted engines can build shard_maps from
-    the state alone.
+    the state alone. ``adj_in_packed`` shares ``adj_packed``'s row sharding:
+    shard s owns the in-rows of ITS slot block — the column-sharded in-row
+    layout the hybrid pull phase runs shard-local over (DESIGN.md §11).
     """
 
-    def __init__(self, mesh, vkey, valive, vver, ecnt, adj_packed):
+    def __init__(self, mesh, vkey, valive, vver, ecnt, adj_packed,
+                 adj_in_packed):
         self.mesh = mesh
         self.vkey = vkey
         self.valive = valive
         self.vver = vver
         self.ecnt = ecnt
         self.adj_packed = adj_packed
+        self.adj_in_packed = adj_in_packed
 
     def tree_flatten(self):
         return (self.vkey, self.valive, self.vver, self.ecnt,
-                self.adj_packed), self.mesh
+                self.adj_packed, self.adj_in_packed), self.mesh
 
     @classmethod
     def tree_unflatten(cls, mesh, children):
@@ -135,7 +151,7 @@ class ShardedGraphState:
     def as_dense(self) -> GraphState:
         """View as a GraphState pytree (arrays keep their placement)."""
         return GraphState(self.vkey, self.valive, self.vver, self.ecnt,
-                          self.adj_packed)
+                          self.adj_packed, self.adj_in_packed)
 
     @property
     def adj(self) -> jax.Array:
@@ -164,6 +180,7 @@ def shard_state(mesh, dense: GraphState) -> ShardedGraphState:
         jax.device_put(dense.vver, sh["vver"]),
         jax.device_put(dense.ecnt, sh["ecnt"]),
         jax.device_put(dense.adj_packed, sh["adj_packed"]),
+        jax.device_put(dense.adj_in_packed, sh["adj_in_packed"]),
     )
 
 
@@ -213,8 +230,12 @@ def compact(state: ShardedGraphState) -> ShardedGraphState:
         return jnp.where(keep_l[:, None],
                          adjw_l & pack_bits(keep_g)[None, :], jnp.uint32(0))
 
+    # the scrub is transpose-symmetric (dead rows zeroed, dead column bits
+    # masked), so the SAME shard-local pass compacts the column-sharded
+    # in-rows (DESIGN.md §11)
     return ShardedGraphState(mesh, vkey, state.valive, state.vver,
-                             state.ecnt, scrub(state.adj_packed, keep))
+                             state.ecnt, scrub(state.adj_packed, keep),
+                             scrub(state.adj_in_packed, keep))
 
 
 # ----------------------------------------------------------------------------
@@ -254,15 +275,15 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(), P(), P(), P(), P(AXIS, None),
+        in_specs=(P(), P(), P(), P(), P(AXIS, None), P(AXIS, None),
                   P(), P(), P(), P(), P(), P(), P(), P()),
-        out_specs=(P(), P(), P(), P(), P(AXIS, None), P()),
+        out_specs=(P(), P(), P(), P(), P(AXIS, None), P(AXIS, None), P()),
         # Metadata outputs are value-replicated (every shard computes the
         # same result from replicated inputs + deterministic collectives),
         # which 0.4.x's check_rep cannot infer through fori_loop.
         **_SM_NOCHECK,
     )
-    def run(vkey, valive, vver, ecnt, adj_l,
+    def run(vkey, valive, vver, ecnt, adj_l, adjin_l,
             opc, k1, k2, expect, cleanv, serialv, wantsv, slotv):
         _, _, per, row0 = _row_block_info(v, size)
         vkey0, valive0, ecnt0, adj0_l = vkey, valive, ecnt, adj_l
@@ -291,9 +312,14 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
         lr = alloc - row0
         lr = jnp.where((lr >= 0) & (lr < per), lr, per)
         adj_l = adj_l.at[lr, :].set(jnp.uint32(0), mode="drop")
+        # the scrub is transpose-symmetric: the shard's column-sharded
+        # in-rows take the identical row scatter + column mask (§11)
+        adjin_l = adjin_l.at[lr, :].set(jnp.uint32(0), mode="drop")
         # column-bit scrub: one packed AND-NOT mask over the local rows
         clear_cols = jnp.zeros((v,), jnp.bool_).at[alloc].set(True, mode="drop")
-        adj_l = adj_l & ~pack_bits(clear_cols)[None, :]
+        clear_mask = ~pack_bits(clear_cols)[None, :]
+        adj_l = adj_l & clear_mask
+        adjin_l = adjin_l & clear_mask
         res = jnp.where(is_addv, jnp.where(wantsv, R_TRUE, R_FALSE), res)
 
         # ContainsVertex
@@ -319,6 +345,16 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
         curw = adj_l[jnp.clip(el, 0, per - 1), wc]
         neww = jnp.where(do_add, curw | mb, curw & ~mb)
         adj_l = adj_l.at[el, wc].set(neww, mode="drop")
+        # mirrored in-row RMW on the DESTINATION owner's shard (§11):
+        # clean lanes' key sets are disjoint, so destination rows are
+        # pairwise-distinct too and the scatter stays conflict-free
+        l2 = r2 - row0
+        mine2 = (l2 >= 0) & (l2 < per)
+        el2 = jnp.where((do_add | do_rem) & mine2, l2, per)
+        wc2, mb2 = bit_word(r1), bit_mask(r1)
+        curw2 = adjin_l[jnp.clip(el2, 0, per - 1), wc2]
+        neww2 = jnp.where(do_add, curw2 | mb2, curw2 & ~mb2)
+        adjin_l = adjin_l.at[el2, wc2].set(neww2, mode="drop")
         ecnt = ecnt.at[jnp.where(do_add | do_rem, r1, v)].add(1, mode="drop")
 
         res = jnp.where(
@@ -343,7 +379,7 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
         # shards); non-serial lanes are masked out of all writes.
         # ------------------------------------------------------------------
         def body(i, carry):
-            vkey, valive, vver, ecnt, adj_l, res = carry
+            vkey, valive, vver, ecnt, adj_l, adjin_l, res = carry
             m = serialv[i]
             op, a, bk, exp = opc[i], k1[i], k2[i], expect[i]
             sa = _find_one(vkey, valive, a)
@@ -363,11 +399,16 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
             ltgt = tgt - row0
             ltgt = jnp.where((ltgt >= 0) & (ltgt < per), ltgt, per)
             adj_l = adj_l.at[ltgt, :].set(jnp.uint32(0), mode="drop")
-            # column-bit scrub, guarded by the scalar do_av
+            adjin_l = adjin_l.at[ltgt, :].set(jnp.uint32(0), mode="drop")
+            # column-bit scrub, guarded by the scalar do_av (transpose-
+            # symmetric, so the in-rows take the identical mask, §11)
             tsafe = jnp.minimum(tgt, v - 1)
             colw = adj_l[:, bit_word(tsafe)]
             adj_l = adj_l.at[:, bit_word(tsafe)].set(
                 jnp.where(do_av, colw & ~bit_mask(tsafe), colw))
+            colw_in = adjin_l[:, bit_word(tsafe)]
+            adjin_l = adjin_l.at[:, bit_word(tsafe)].set(
+                jnp.where(do_av, colw_in & ~bit_mask(tsafe), colw_in))
             r_addv = jnp.where(exists, R_FALSE, jnp.where(have, R_TRUE, R_TABLE_FULL))
 
             # RemoveVertex (in-edge-source bumps read the pre-lane liveness)
@@ -405,6 +446,14 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
             ecurw = adj_l[jnp.clip(ela, 0, per - 1), bit_word(rb)]
             enew = jnp.where(do_ea, ecurw | bit_mask(rb), ecurw & ~bit_mask(rb))
             adj_l = adj_l.at[ela, bit_word(rb)].set(enew, mode="drop")
+            # mirrored in-row RMW on the destination owner's shard (§11)
+            lb = rb - row0
+            bmine = (lb >= 0) & (lb < per)
+            elb = jnp.where((do_ea | do_er) & bmine, lb, per)
+            ecurw_in = adjin_l[jnp.clip(elb, 0, per - 1), bit_word(ra)]
+            enew_in = jnp.where(do_ea, ecurw_in | bit_mask(ra),
+                                ecurw_in & ~bit_mask(ra))
+            adjin_l = adjin_l.at[elb, bit_word(ra)].set(enew_in, mode="drop")
             ecnt = ecnt.at[jnp.where(do_ea | do_er, ra, v)].add(1, mode="drop")
             r_adde = jnp.where(eboth, jnp.where(ecas, jnp.where(cur, R_EDGE_PRESENT, R_EDGE_ADDED), R_CAS_FAIL), R_VERTEX_NOT_PRESENT)
             r_reme = jnp.where(eboth, jnp.where(ecas, jnp.where(cur, R_EDGE_REMOVED, R_EDGE_NOT_PRESENT), R_CAS_FAIL), R_VERTEX_NOT_PRESENT)
@@ -421,26 +470,28 @@ def apply_ops_fast(state: ShardedGraphState, ops: OpBatch):
                  lambda: r_cone.astype(jnp.int32)],
             )
             res = res.at[i].set(jnp.where(m, r, res[i]))
-            return vkey, valive, vver, ecnt, adj_l, res
+            return vkey, valive, vver, ecnt, adj_l, adjin_l, res
 
-        vkey, valive, vver, ecnt, adj_l, res = jax.lax.fori_loop(
-            0, b, body, (vkey, valive, vver, ecnt, adj_l, res))
-        return vkey, valive, vver, ecnt, adj_l, res
+        vkey, valive, vver, ecnt, adj_l, adjin_l, res = jax.lax.fori_loop(
+            0, b, body, (vkey, valive, vver, ecnt, adj_l, adjin_l, res))
+        return vkey, valive, vver, ecnt, adj_l, adjin_l, res
 
-    vkey, valive, vver, ecnt, adj, res = run(
+    vkey, valive, vver, ecnt, adj, adj_in, res = run(
         state.vkey, state.valive, state.vver, state.ecnt, state.adj_packed,
+        state.adj_in_packed,
         ops.opcode, ops.key1, ops.key2, ops.expect,
         clean, serial, wants, slot,
     )
-    return ShardedGraphState(mesh, vkey, valive, vver, ecnt, adj), res
+    return ShardedGraphState(mesh, vkey, valive, vver, ecnt, adj,
+                             adj_in), res
 
 
 # ----------------------------------------------------------------------------
 # Distributed fused multi-source BFS
 # ----------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("backend",))
 def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
-              backend: str = "jnp") -> MultiBFSResult:
+              backend: str | None = None, alpha: int = DEFAULT_ALPHA,
+              beta: int = DEFAULT_BETA) -> MultiBFSResult:
     """Fused BFS from Q sources over the row-sharded adjacency.
 
     Each superstep: every shard expands the slice of all Q frontiers it owns
@@ -451,7 +502,30 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
     Per-query early exit is the dense engine's: finished queries expose an
     all-empty frontier on every shard. Results are bit-identical to
     ``core.bfs.multi_bfs`` on the gathered state.
+
+    The hybrid backends (DESIGN.md §11) add the direction-optimizing
+    superstep: the push phase is the packed local expansion above; the pull
+    phase runs SHARD-LOCAL over the column-sharded in-rows — each shard
+    scans only the in-adjacency rows of the V/S destinations it owns
+    against the replicated packed frontier bitsets, producing a disjoint
+    [Q, V/S] partial. Either phase feeds the SAME packed uint32 frontier
+    exchange (all_gather + OR-fold) and pmin parent combine, so the
+    direction switch (replicated popcounts → identical on every shard,
+    chosen inside the superstep with no collective in either branch) never
+    changes the communication pattern. ``backend=None`` resolves via
+    ``core.bfs.default_backend()`` HERE, outside the jit boundary, so the
+    resolved name (not None) is the static cache key and a changed
+    ``REPRO_BFS_BACKEND`` takes effect on the next call.
     """
+    return _multi_bfs_jit(state, src_slots, dst_slots,
+                          backend=_resolve_backend(backend), alpha=alpha,
+                          beta=beta)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "alpha", "beta"))
+def _multi_bfs_jit(state: ShardedGraphState, src_slots, dst_slots,
+                   backend: str, alpha: int,
+                   beta: int) -> MultiBFSResult:
     mesh = state.mesh
     v = state.capacity
     size = int(mesh.shape[AXIS])
@@ -462,22 +536,23 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(), P(AXIS, None), P(), P()),
+        in_specs=(P(), P(AXIS, None), P(AXIS, None), P(), P()),
         out_specs=(P(), P(), P(), P(), P(), P()),
         # Outputs are value-replicated (combined via psum/pmin every
         # superstep), which the 0.4.x checker cannot infer past while_loop.
         **_SM_NOCHECK,
     )
-    def run(alive, adjw_l, srcs, dsts):
+    def run(alive, adjw_l, adjw_in_l, srcs, dsts):
         _, _, per, row0 = _row_block_info(v, size)
-        packed = backend in PACKED_BACKENDS
+        hybrid = backend in HYBRID_BACKENDS
+        packed = backend in PACKED_BACKENDS or hybrid
         alive_l = jax.lax.dynamic_slice(alive, (row0,), (per,))
         # the jnp-level edge views derive from the ONE traversable
         # predicate (row-slice form, DESIGN.md §10) — the Pallas branches
         # stream raw tiles and apply the same mask in their epilogue, per
         # the kernel contract. Loop-invariant, so hoisted out of the body.
         t_l = tw_l = None
-        if backend == "packed":
+        if backend in ("packed", "hybrid"):
             tw_l = ggraph.traversable_packed(adjw_l, alive_l,
                                              pack_bits(alive))
             # parent candidates still need per-bit rows, unpacked ONCE
@@ -502,43 +577,83 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
             return jnp.any(frontiers, axis=1) & ~hit & (step < v)
 
         def cond(c):
-            frontiers, visited, parent, dist, expanded, steps, step = c
+            frontiers, visited = c[:2]
+            step = c[6]
             return jnp.any(_active(frontiers, visited, step))
 
-        def body(c):
-            frontiers, visited, parent, dist, expanded, steps, step = c
-            act = _active(frontiers, visited, step)
-            f = frontiers & act[:, None]
-            expanded = expanded | f
-            f_l = jax.lax.dynamic_slice(f, (0, row0), (q, per))
+        def _push_local(f, f_l, visited):
+            """Local top-down partial: (reach_part [Q, V], cand [Q, V])."""
             if backend == "pallas":
                 from repro.kernels.bfs_multi_step.ops import multi_bfs_step
 
                 new_p, par_p = multi_bfs_step(f_l, adj_l, alive, visited)
-                reach_part = new_p  # already masked by alive & ~visited
-                cand = jnp.where(par_p >= 0, par_p + row0, INT32_MAX)
-            elif backend == "packed_pallas":
+                return new_p, jnp.where(par_p >= 0, par_p + row0, INT32_MAX)
+            if backend in ("packed_pallas", "hybrid_pallas"):
                 from repro.kernels.bfs_multi_step.ops import multi_bfs_step_packed
 
                 new_p, par_p = multi_bfs_step_packed(f_l, adjw_l, alive,
                                                      visited)
-                reach_part = new_p  # already masked by alive & ~visited
-                cand = jnp.where(par_p >= 0, par_p + row0, INT32_MAX)
-            elif backend == "packed":
+                return new_p, jnp.where(par_p >= 0, par_p + row0, INT32_MAX)
+            if backend in ("packed", "hybrid"):
                 sel = jnp.where(f_l[:, :, None], tw_l[None, :, :],
                                 jnp.uint32(0))
                 reach_part = unpack_bits(or_reduce(sel, 1), v)
-                idx = (jnp.arange(per, dtype=jnp.int32) + row0)[:, None, None]
-                cand3 = jnp.where(f_l.T[:, :, None] & t_l[:, None, :],
-                                  idx, INT32_MAX)
-                cand = jnp.min(cand3, axis=0)
             else:
-                fa = f_l.astype(jnp.float32)
-                reach_part = (fa @ t_l.astype(jnp.float32)) > 0
-                idx = (jnp.arange(per, dtype=jnp.int32) + row0)[:, None, None]
-                cand3 = jnp.where(f_l.T[:, :, None] & t_l[:, None, :],
-                                  idx, INT32_MAX)
-                cand = jnp.min(cand3, axis=0)
+                reach_part = (f_l.astype(jnp.float32)
+                              @ t_l.astype(jnp.float32)) > 0
+            idx = (jnp.arange(per, dtype=jnp.int32) + row0)[:, None, None]
+            cand3 = jnp.where(f_l.T[:, :, None] & t_l[:, None, :],
+                              idx, INT32_MAX)
+            return reach_part, jnp.min(cand3, axis=0)
+
+        def _pull_local(f, visited):
+            """Local bottom-up partial over the shard's in-rows (§11):
+            disjoint [Q, V/S] destination slices embedded into [Q, V]."""
+            visited_l = jax.lax.dynamic_slice(visited, (0, row0), (q, per))
+            fw = pack_bits(f & alive[None, :])
+            if backend == "hybrid_pallas":
+                from repro.kernels.bfs_pull_step.ops import (
+                    multi_bfs_pull_step_rows,
+                )
+
+                new_l, par_l = multi_bfs_pull_step_rows(
+                    fw, adjw_in_l, alive_l, visited_l)
+                pmin_l = jnp.where(new_l, par_l, INT32_MAX)
+            else:
+                cand_w = adjw_in_l[None, :, :] & fw[:, None, :]  # [Q,per,W]
+                hit_l = jnp.any(cand_w != 0, axis=2)
+                new_l = hit_l & alive_l[None, :] & ~visited_l
+                widx = (jnp.arange(adjw_in_l.shape[1], dtype=jnp.int32)
+                        * ggraph.WORD_BITS)[None, None, :]
+                pc = jnp.where(cand_w != 0, widx + ctz32(cand_w), INT32_MAX)
+                pmin_l = jnp.where(new_l, jnp.min(pc, axis=2), INT32_MAX)
+            reach_part = jax.lax.dynamic_update_slice(
+                jnp.zeros((q, v), jnp.bool_), new_l, (0, row0))
+            cand = jax.lax.dynamic_update_slice(
+                jnp.full((q, v), INT32_MAX, jnp.int32), pmin_l, (0, row0))
+            return reach_part, cand
+
+        def body(c):
+            frontiers, visited, parent, dist, expanded, steps, step = c[:7]
+            act = _active(frontiers, visited, step)
+            f = frontiers & act[:, None]
+            expanded = expanded | f
+            f_l = jax.lax.dynamic_slice(f, (0, row0), (q, per))
+            if hybrid:
+                # replicated popcounts → identical decision on every shard;
+                # both cond branches are collective-free, the exchange
+                # below is shared (§11)
+                nf = jnp.sum(f.astype(jnp.int32))
+                nu = jnp.sum(((alive[None, :] & ~visited)
+                              & act[:, None]).astype(jnp.int32))
+                pulling = pick_direction(c[7], nf, nu, q * v, alpha, beta)
+                reach_part, cand = jax.lax.cond(
+                    pulling,
+                    lambda ff, ff_l, vis: _pull_local(ff, vis),
+                    _push_local,
+                    f, f_l, visited)
+            else:
+                reach_part, cand = _push_local(f, f_l, visited)
             if packed:
                 # the DESIGN.md §10 frontier exchange: the partial next
                 # frontiers cross the wire as packed uint32 bitsets
@@ -554,19 +669,23 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
             dist = jnp.where(new, step + 1, dist)
             visited = visited | new
             steps = steps + act.astype(jnp.int32)
-            return new, visited, parent, dist, expanded, steps, step + 1
+            out = (new, visited, parent, dist, expanded, steps, step + 1)
+            return out + (pulling,) if hybrid else out
 
-        frontiers, visited, parent, dist, expanded, steps, supersteps = (
-            jax.lax.while_loop(
-                cond, body,
-                (frontier0, visited0, parent0, dist0, expanded0, steps0,
-                 jnp.int32(0))))
+        init = (frontier0, visited0, parent0, dist0, expanded0, steps0,
+                jnp.int32(0))
+        if hybrid:
+            init = init + (_pvary(jnp.asarray(False)),)
+        final = jax.lax.while_loop(cond, body, init)
+        frontiers, visited, parent, dist, expanded, steps, supersteps = \
+            final[:7]
         found = ((dsts >= 0)
                  & visited[jnp.arange(q), jnp.maximum(dsts, 0)] & src_ok)
         return found, parent, dist, expanded, steps, supersteps
 
     found, parent, dist, expanded, steps, supersteps = run(
-        state.valive, state.adj_packed, src_slots, dst_slots)
+        state.valive, state.adj_packed, state.adj_in_packed,
+        src_slots, dst_slots)
     return MultiBFSResult(found, parent, dist, expanded, steps, supersteps)
 
 

@@ -52,9 +52,19 @@ class Collect(NamedTuple):
     present: jax.Array   # bool — both endpoints alive at collect start
 
 
+def collect(state: GraphState, k, l,
+            backend: str | None = None) -> Collect:
+    """One TreeCollect: locate endpoints (ConCPlus analogue), BFS, snapshot.
+
+    ``backend=None`` resolves via ``core.bfs.default_backend()`` here,
+    outside the jit boundary, so the resolved name is the static key."""
+    from repro.core.bfs import _resolve_backend
+
+    return _collect_jit(state, k, l, backend=_resolve_backend(backend))
+
+
 @functools.partial(jax.jit, static_argnames=("backend",))
-def collect(state: GraphState, k, l, backend: str = "jnp") -> Collect:
-    """One TreeCollect: locate endpoints (ConCPlus analogue), BFS, snapshot."""
+def _collect_jit(state: GraphState, k, l, backend: str) -> Collect:
     k = jnp.asarray(k, jnp.int32)
     l = jnp.asarray(l, jnp.int32)
     sk = find_slot(state, k)
@@ -94,10 +104,17 @@ def _materialize(state: GraphState, c: Collect, rounds) -> PathResult:
     return PathResult(c.found, n, keys.astype(jnp.int32), jnp.asarray(rounds, jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def get_path(state: GraphState, k, l, backend: str = "jnp") -> PathResult:
+def get_path(state: GraphState, k, l,
+             backend: str | None = None) -> PathResult:
     """GetPath against a *static* state (pure function — no concurrency, so a
     single collect is trivially a valid double collect)."""
+    from repro.core.bfs import _resolve_backend
+
+    return _get_path_jit(state, k, l, backend=_resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _get_path_jit(state: GraphState, k, l, backend: str) -> PathResult:
     c = collect(state, k, l, backend=backend)
     return _materialize(state, c, 1)
 
@@ -105,8 +122,7 @@ def get_path(state: GraphState, k, l, backend: str = "jnp") -> PathResult:
 # ----------------------------------------------------------------------------
 # Beyond-paper: batched multi-query GetPath under ONE shared double collect
 # ----------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("backend", "engine"))
-def collect_batch(state, ks, ls, backend: str = "jnp",
+def collect_batch(state, ks, ls, backend: str | None = None,
                   engine: str = "fused"):
     """Vectorized TreeCollect for Q query pairs. Returns a Collect whose
     leading axis is the query index; the dependency set / versions are the
@@ -131,7 +147,19 @@ def collect_batch(state, ks, ls, backend: str = "jnp",
       "vmap"  — Q independent single-query collects under jax.vmap. Kept as
                 the cross-check reference: per-query results are identical
                 by construction of multi_bfs (tests assert it).
+
+    ``backend=None`` resolves via ``core.bfs.default_backend()`` here,
+    outside the jit boundary, so the resolved name is the static key.
     """
+    from repro.core.bfs import _resolve_backend
+
+    return _collect_batch_jit(state, ks, ls,
+                              backend=_resolve_backend(backend),
+                              engine=engine)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "engine"))
+def _collect_batch_jit(state, ks, ls, backend: str, engine: str):
     from repro.core.partition import ShardedGraphState
     from repro.core import partition
 
@@ -167,7 +195,7 @@ def compare_collect_batches(a, b) -> jax.Array:
 
 
 def get_paths_session(fetch_state, pairs, *, max_rounds: int | None = None,
-                      backend: str = "jnp", engine: str = "fused"):
+                      backend: str | None = None, engine: str = "fused"):
     """Multi-query obstruction-free GetPath: the double-collect loop runs
     ONCE for the whole batch. Returns a list of (found, keys) per pair.
 
@@ -205,7 +233,7 @@ def get_path_session(
     k: int,
     l: int,
     max_rounds: int | None = None,
-    backend: str = "jnp",
+    backend: str | None = None,
 ) -> PathResult:
     """The paper's GetPath/Scan against a live state reference.
 
@@ -240,14 +268,31 @@ def get_path_session(
 # ----------------------------------------------------------------------------
 # In-program interleaving (one jitted device program)
 # ----------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("backend", "engine"))
 def interleaved_getpath(
     state: GraphState,
     batches: OpBatch,          # leading axis T: one mutation batch per round
     k,
     l,
-    backend: str = "jnp",
+    backend: str | None = None,
     engine: str = "fast",
+):
+    """Resolve ``backend=None`` outside the jit (static-key correctness)
+    and run the jitted interleaving below."""
+    from repro.core.bfs import _resolve_backend
+
+    return _interleaved_getpath_jit(state, batches, k, l,
+                                    backend=_resolve_backend(backend),
+                                    engine=engine)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "engine"))
+def _interleaved_getpath_jit(
+    state: GraphState,
+    batches: OpBatch,
+    k,
+    l,
+    backend: str,
+    engine: str,
 ):
     """Run T rounds: (apply mutation batch t) then (advance the query).
 

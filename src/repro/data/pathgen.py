@@ -31,7 +31,8 @@ class PathTaskGenerator:
     """Deterministic, restart-safe stream of (tokens, loss_mask) examples."""
 
     def __init__(self, *, n_vertices: int = 24, capacity: int = 64,
-                 mutate_lanes: int = 16, seed: int = 0, backend: str = "jnp"):
+                 mutate_lanes: int = 16, seed: int = 0,
+                 backend: str | None = None):
         self.nv = n_vertices
         self.capacity = capacity
         self.lanes = mutate_lanes

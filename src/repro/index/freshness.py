@@ -70,7 +70,8 @@ def index_fresh(index: ReachIndex | None, state) -> bool:
     return bool(jnp.all(version_vector(state) == index.versions))
 
 
-def affected_landmarks(index: ReachIndex, state, *, backend: str = "jnp"):
+def affected_landmarks(index: ReachIndex, state, *,
+                       backend: str | None = None):
     """(aff_fwd bool[L], aff_bwd bool[L], dirty bool[V]) — the provably
     sufficient sets of landmark closures to re-traverse (module docstring
     has the soundness argument for each term)."""
@@ -97,7 +98,7 @@ def affected_landmarks(index: ReachIndex, state, *, backend: str = "jnp"):
     return aff_fwd, aff_bwd, dirty
 
 
-def refresh(index: ReachIndex, state, *, backend: str = "jnp",
+def refresh(index: ReachIndex, state, *, backend: str | None = None,
             full_threshold: float = 0.5):
     """Bring a stale index up to the state's epoch. Returns
     (index, info) with info = {"mode": "noop"|"incremental"|"full",
@@ -157,7 +158,7 @@ class ReachSessionResult:
 
 
 def reach_session(fetch_state, index: ReachIndex | None, pairs, *,
-                  engine: str = "fused", backend: str = "jnp",
+                  engine: str = "fused", backend: str | None = None,
                   join_backend: str = "jnp", max_rounds: int = 64
                   ) -> ReachSessionResult:
     """Answer Q (k, l) key-pair reachability queries against a live state
@@ -205,7 +206,7 @@ def reach_session(fetch_state, index: ReachIndex | None, pairs, *,
 
 
 def reach_counts_session(fetch_state, index: ReachIndex | None, keys, *,
-                         backend: str = "jnp"):
+                         backend: str | None = None):
     """Batched ``core.bfs.reachable_count``: (counts int64 np[Q],
     served_from_index bool). Index-served when fresh and every count is
     decided (complete cover); otherwise one fused multi-BFS in

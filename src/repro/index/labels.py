@@ -9,7 +9,8 @@ vertices (picked by degree — hubs first):
 
 Both closures come from the EXISTING fused multi-source BFS: one
 ``core.bfs.multi_bfs`` with Q = L sources on the graph for ``fwd`` and one
-on the transposed adjacency for ``bwd`` — the index build is just two
+on the MAINTAINED in-adjacency (an O(1) ``_reversed`` field swap, no
+transpose — DESIGN.md §11) for ``bwd`` — the index build is just two
 batched traversals, so every engine property (alive-masked edges, Pallas
 superstep, mesh-sharded form) is inherited rather than re-implemented.
 
@@ -117,14 +118,19 @@ def _as_dense(state) -> GraphState:
     return state
 
 
-def _transposed(state: GraphState) -> GraphState:
-    """The reverse graph: same slots/versions, adjacency transposed.
-    BFS on it from landmark i yields {v : v reaches i} = bwd[i]. A packed
-    transpose is unpack -> T -> repack — a build-time cost the two closure
-    traversals dwarf (DESIGN.md §10)."""
-    return GraphState(state.vkey, state.valive, state.vver, state.ecnt,
-                      pack_bits(unpack_bits(state.adj_packed,
-                                            state.capacity).T))
+def _reversed(state: GraphState) -> GraphState:
+    """The reverse graph: same slots/versions, out- and in-adjacency
+    SWAPPED. BFS on it from landmark i yields {v : v reaches i} = bwd[i].
+
+    A pure O(1) field swap (DESIGN.md §11): the maintained in-adjacency IS
+    the transposed adjacency (the transpose invariant core/ops.py upholds),
+    so backward closures drive ``multi_bfs`` directly on the stored words —
+    build and ``refresh()`` perform NO unpack -> T -> repack anywhere.
+    tests/test_hybrid.py pins both the aliasing (the reverse graph's rows
+    ARE ``adj_in_packed``) and bit-identity of the rebuilt index against
+    the old explicit-transpose oracle path."""
+    return state._replace(adj_packed=state.adj_in_packed,
+                          adj_in_packed=state.adj_packed)
 
 
 def pad8(idx: np.ndarray) -> np.ndarray:
@@ -182,18 +188,21 @@ def _prune(fwd, bwd, landmarks):
     return (bwd & ~cover_out).T, (fwd & ~cover_in).T
 
 
-def _closures(dense: GraphState, lm: jax.Array, backend: str):
+def _closures(dense: GraphState, lm: jax.Array, backend: str | None):
     """Forward and backward closures of the landmark set: two fused
-    multi-BFS calls (Q = L, full-reachable-set mode dst = -1)."""
+    multi-BFS calls (Q = L, full-reachable-set mode dst = -1); the backward
+    one runs on the maintained in-adjacency via the ``_reversed`` field
+    swap — transpose-free (DESIGN.md §11)."""
     dsts = jnp.full((lm.shape[0],), -1, jnp.int32)
     f = multi_bfs(dense, lm, dsts, backend=backend, parents=False)
-    b = multi_bfs(_transposed(dense), lm, dsts, backend=backend,
+    b = multi_bfs(_reversed(dense), lm, dsts, backend=backend,
                   parents=False)
     return f.dist >= 0, b.dist >= 0
 
 
 def build_index(state, num_landmarks: int | None = None, *,
-                landmark_slots=None, backend: str = "jnp") -> ReachIndex:
+                landmark_slots=None,
+                backend: str | None = None) -> ReachIndex:
     """Construct a ``ReachIndex`` from a state snapshot (DESIGN.md §9).
 
     ``state`` is a functional snapshot (dense ``GraphState`` or sharded
@@ -244,7 +253,8 @@ def _scatter_rows(mat, rows_idx, rows):
 
 
 def rebuild_rows(index: ReachIndex, state, aff_fwd: np.ndarray,
-                 aff_bwd: np.ndarray, backend: str = "jnp") -> ReachIndex:
+                 aff_bwd: np.ndarray,
+                 backend: str | None = None) -> ReachIndex:
     """Recompute only the given landmark rows against ``state`` and
     re-prune — the array half of ``freshness.refresh`` (which supplies the
     provably-sufficient affected sets). Landmark list, and therefore the
@@ -264,7 +274,7 @@ def rebuild_rows(index: ReachIndex, state, aff_fwd: np.ndarray,
         return _scatter_rows(mat, jnp.asarray(idx), res.dist >= 0)
 
     fwd = recompute(aff_fwd, index.fwd, dense)
-    bwd = recompute(aff_bwd, index.bwd, _transposed(dense))
+    bwd = recompute(aff_bwd, index.bwd, _reversed(dense))
     out_bits, in_bits = _prune(fwd, bwd, index.landmarks)
     alive = dense.valive
     complete = coverage_complete(lm, alive, index.capacity)

@@ -1,0 +1,6 @@
+from repro.kernels.bfs_pull_step.ops import (  # noqa: F401
+    bfs_pull_step,
+    multi_bfs_pull_step,
+    multi_bfs_pull_step_rows,
+)
+from repro.kernels.bfs_pull_step.ref import bfs_pull_step_ref  # noqa: F401

@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: one bottom-up ("pull") BFS superstep (DESIGN.md §11).
+
+The direction-optimizing counterpart of kernels/bfs_step &
+kernels/bfs_multi_step: when the frontier covers a large fraction of the
+graph, top-down push streams almost every adjacency row only to rediscover
+vertices it already visited. Pull inverts the scan — every NOT-yet-visited
+vertex ANDs its own maintained packed in-adjacency row against the packed
+frontier bitset(s):
+
+    hit[q, r]    = any_w ( adj_in[r, w] & frontier_words[q, w] )
+    parent[q, r] = lowest set bit index of adj_in[r, :] & frontier_words[q, :]
+
+Because the in-adjacency is maintained first-class (core/ops.py mirrors
+every edge RMW; the transpose invariant pins it), the kernel streams
+uint32[TR, W] word tiles straight from the stored representation — no
+transpose, no unpack on the HBM path.
+
+Grid = (row_tiles,): each program owns TR destination rows and the FULL
+word axis, so the kernel is embarrassingly parallel — there is NO
+cross-tile reduction (the push kernels revisit each output tile across an
+"arbitrary" row-tile axis; pull's reduction runs over the word axis,
+entirely in-tile). Row tiles where every row is already visited or dead —
+most tiles in late supersteps — skip the word scan with @pl.when, the pull
+analogue of the push kernels' empty-frontier-tile skip.
+
+Parent extraction: the first frontier parent of row r is the lowest set
+bit of the AND-ed words. Any nonzero word at index w dominates every later
+word in the masked min (32*w + ctz < 32*(w+1)), so the vectorized min over
+words IS the per-word early exit — the scan effectively stops at the first
+word containing a parent. ctz comes from the two's-complement low-bit
+trick (x & -x, then popcount(x-1)); both verified native on uint32.
+
+VMEM footprint per program instance (TQ=8, TR=256, W=32 ⇒ V=1024):
+    adj_in tile    256*32 u32      =  32 KiB
+    frontier slab  8*32 u32        =   1 KiB
+    candidate cube 8*256*32 u32    = 256 KiB        << 16 MiB VMEM
+Larger (TQ * TR * W) volumes fall back to a fori_loop over query rows
+holding one [TR, W] slice at a time — the same static budget switch as
+kernels/bfs_multi_step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.graph import WORD_BITS
+
+INT32_MAX = 2**31 - 1  # python int: pallas kernels must not capture tracers
+
+# static switch: largest [TQ, TR, W] pull-candidate volume (bytes) we are
+# willing to materialize in VMEM before falling back to the per-query loop
+_PULL_BCAST_BUDGET = 4 * 1024 * 1024
+
+
+def _ctz32(words):
+    """Count-trailing-zeros per uint32 word (32 for zero words; callers
+    mask those out)."""
+    low = words & (jnp.uint32(0) - words)
+    return jax.lax.population_count(low - jnp.uint32(1)).astype(jnp.int32)
+
+
+def _bfs_pull_step_kernel(fw_ref, adjin_ref, alive_ref, visited_ref,
+                          new_ref, parent_ref, *, tq: int, tr: int, w: int,
+                          bcast_budget: int):
+    new_ref[...] = jnp.zeros_like(new_ref)
+    parent_ref[...] = jnp.full_like(parent_ref, -1)
+
+    fw = fw_ref[...]                                   # uint32 [TQ, W]
+    todo = (alive_ref[...][None, :] > 0) & (visited_ref[...] == 0)  # [TQ, TR]
+
+    @pl.when(jnp.any(todo) & jnp.any(fw != 0))
+    def _scan():
+        a = adjin_ref[...]                             # uint32 [TR, W]
+        widx = jax.lax.iota(jnp.int32, w) * WORD_BITS  # global bit bases
+        if tq * tr * w * 4 <= bcast_budget:
+            cand = a[None, :, :] & fw[:, None, :]      # [TQ, TR, W]
+            nz = cand != jnp.uint32(0)
+            pc = jnp.where(nz, widx[None, None, :] + _ctz32(cand), INT32_MAX)
+            pmin = jnp.min(pc, axis=2)                 # [TQ, TR]
+            hit = jnp.any(nz, axis=2)
+        else:
+            def qrow(qi, acc):
+                pm, ht = acc
+                fq = jax.lax.dynamic_slice_in_dim(fw, qi, 1, axis=0)[0]
+                c = a & fq[None, :]                    # [TR, W]
+                nzq = c != jnp.uint32(0)
+                pcq = jnp.where(nzq, widx[None, :] + _ctz32(c), INT32_MAX)
+                pm = jax.lax.dynamic_update_slice_in_dim(
+                    pm, jnp.min(pcq, axis=1)[None, :], qi, axis=0)
+                ht = jax.lax.dynamic_update_slice_in_dim(
+                    ht, jnp.any(nzq, axis=1)[None, :], qi, axis=0)
+                return pm, ht
+
+            pmin, hit = jax.lax.fori_loop(
+                0, tq, qrow,
+                (jnp.full((tq, tr), INT32_MAX, jnp.int32),
+                 jnp.zeros((tq, tr), jnp.bool_)))
+        new = hit & todo
+        new_ref[...] = new.astype(jnp.int32)
+        parent_ref[...] = jnp.where(new, pmin, jnp.int32(-1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tr", "interpret", "pull_bcast_budget")
+)
+def bfs_pull_step_pallas(frontier_words, adj_in_rows, alive, visited, *,
+                         tr: int = 256, interpret: bool = True,
+                         pull_bcast_budget: int = _PULL_BCAST_BUDGET):
+    """One pull expansion of Q frontiers over R destination rows. R % tr == 0.
+
+    frontier_words: uint32[Q, W] — packed (frontier & alive) bitsets
+    adj_in_rows:    uint32[R, W] — maintained packed in-adjacency rows
+    alive:          int32[R] (0/1) — liveness of the destination rows
+    visited:        int32[Q, R] (0/1)
+    Returns (new int32[Q, R], parent int32[Q, R]).
+
+    ``adj_in_rows`` may be a contiguous ROW SLICE of the in-adjacency — the
+    sharded engine's column-sharded in-rows (DESIGN.md §8, §11): outputs
+    then cover exactly those destination rows, while parent ids are GLOBAL
+    frontier bit indices read off the word axis, so the caller needs no
+    row-offset fixup (unlike the push kernels' slice-relative parents).
+
+    Q is the full (already padded) query-slab height; callers align it to
+    the sublane multiple (kernels/bfs_pull_step/ops.py pads).
+    ``pull_bcast_budget`` is static (part of the jit key), pinning the
+    candidate-volume strategy per compilation; pass 0 to force the
+    per-query fori_loop path.
+    """
+    q, w = frontier_words.shape
+    r = adj_in_rows.shape[0]
+    assert adj_in_rows.shape[1] == w, (frontier_words.shape, adj_in_rows.shape)
+    assert alive.shape == (r,) and visited.shape == (q, r), \
+        (alive.shape, visited.shape, (q, r))
+    assert r % tr == 0, (r, tr)
+    grid = (r // tr,)
+    return pl.pallas_call(
+        functools.partial(_bfs_pull_step_kernel, tq=q, tr=tr, w=w,
+                          bcast_budget=pull_bcast_budget),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, w), lambda i: (0, 0)),
+            pl.BlockSpec((tr, w), lambda i: (i, 0)),
+            pl.BlockSpec((tr,), lambda i: (i,)),
+            pl.BlockSpec((q, tr), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q, tr), lambda i: (0, i)),
+            pl.BlockSpec((q, tr), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, r), jnp.int32),
+            jax.ShapeDtypeStruct((q, r), jnp.int32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel",))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(frontier_words, adj_in_rows, alive, visited)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the bfs_pull_step kernel (same words-level contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bfs import ctz32
+from repro.core.graph import WORD_BITS
+
+# python int, not jnp.int32: this module is imported lazily, possibly inside
+# a jit trace, and a module-level device constant would leak a tracer
+INT32_MAX = 2**31 - 1
+
+
+def bfs_pull_step_ref(frontier_words, adj_in_rows, alive, visited):
+    """Same contract as kernel.bfs_pull_step_pallas.
+
+    frontier_words uint32[Q, W], adj_in_rows uint32[R, W], alive int32[R]
+    (0/1), visited int32[Q, R] (0/1) -> (new int32[Q, R], parent
+    int32[Q, R]).
+    """
+    w = adj_in_rows.shape[1]
+    cand = adj_in_rows[None, :, :] & frontier_words[:, None, :]  # [Q, R, W]
+    nz = cand != jnp.uint32(0)
+    widx = (jnp.arange(w, dtype=jnp.int32) * WORD_BITS)[None, None, :]
+    pc = jnp.where(nz, widx + ctz32(cand), INT32_MAX)
+    pmin = jnp.min(pc, axis=2)
+    hit = jnp.any(nz, axis=2)
+    new = hit & (alive[None, :] > 0) & (visited == 0)
+    return new.astype(jnp.int32), jnp.where(new, pmin, jnp.int32(-1))

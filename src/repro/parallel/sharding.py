@@ -214,9 +214,13 @@ GRAPH_ROW_AXIS = "rows"
 def graph_state_specs(axis: str = GRAPH_ROW_AXIS) -> dict:
     """PartitionSpecs for the partitioned graph state (DESIGN.md §8).
 
-    The word-packed adjacency — the only O(V^2/32) array (DESIGN.md §10) —
-    is row-sharded over the 1-D ``rows`` mesh axis; the O(V) version
-    metadata (vkey/valive/vver/ecnt) is replicated so lookups, the
+    The word-packed adjacencies — the only O(V^2/32) arrays (DESIGN.md
+    §10, §11) — are row-sharded over the 1-D ``rows`` mesh axis: shard s
+    owns the OUT-edge rows of its slot block in ``adj_packed`` and the
+    IN-edge rows of the SAME block in ``adj_in_packed`` (the in-adjacency's
+    rows are the out-adjacency's columns, so this is the column-sharded
+    in-row layout the hybrid pull phase runs shard-local over). The O(V)
+    version metadata (vkey/valive/vver/ecnt) is replicated so lookups, the
     double-collect validation vector, and the lane-order mutation schedule
     stay shard-local replicated compute.
     """
@@ -227,6 +231,7 @@ def graph_state_specs(axis: str = GRAPH_ROW_AXIS) -> dict:
         "vver": rep,
         "ecnt": rep,
         "adj_packed": P(axis, None),
+        "adj_in_packed": P(axis, None),
     }
 
 

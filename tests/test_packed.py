@@ -32,7 +32,7 @@ from repro.core import (
     multi_bfs, num_edges, version_vector,
 )
 from repro.core import partition
-from repro.core.bfs import PACKED_BACKENDS, bfs
+from repro.core.bfs import HYBRID_BACKENDS, PACKED_BACKENDS, bfs
 from repro.core.distributed import make_graph_mesh
 from repro.core.graph import (
     WORD_BITS,
@@ -49,7 +49,7 @@ from repro.core.ops import degree, neighbors
 
 RNG = np.random.default_rng(11)
 CAP = 32
-ALL_BACKENDS = ("jnp", "pallas") + PACKED_BACKENDS
+ALL_BACKENDS = ("jnp", "pallas") + PACKED_BACKENDS + HYBRID_BACKENDS
 
 
 # ----------------------------------------------------------------------------
