@@ -1,0 +1,152 @@
+"""Serving-admission figure: coalesced multi-tenant ingest vs serial baseline.
+
+The tentpole claim of DESIGN.md §12 quantified: N clients submitting
+entity-disjoint mutation batches through the ingest pool coalesce into ONE
+fused ``apply_ops_fast`` per admission round (N batches, one device
+dispatch), while the serial one-batch-at-a-time baseline pays one dispatch
+per client batch. Both engines are the SAME ``IngestPool`` code path — the
+baseline simply runs with ``max_inflight=1``, so the measured gap is the
+admission layer's coalescing, not a different apply engine — and both
+replay the identical pre-drawn client programs in the identical submission
+order (the linearization the property harness checks is bit-identical to
+the serial replay, so the two runs end in the same state).
+
+Sweep: clients ∈ {3, 6} (3 rounds each in quick mode). Each row records
+the admission observability the regression suite pins (queue_depth_max,
+wait_max_s, coalesce_max, fused_calls) next to the throughput, so the
+longitudinal BENCH record keeps the *why* of a regression, not just the
+slowdown. Rows use the shared long-format JSON schema (``q`` = clients).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import make_graph
+from repro.runtime.ingest import IngestPool
+
+CLIENTS = (3, 6)
+LANES = 4          # lanes per client batch (2 AddV + 2 AddE)
+CAP = 256
+
+
+def client_programs(clients: int, batches: int):
+    """Entity-disjoint per-client programs: client c works a private key
+    block, each batch adding a fresh 2-vertex edge pair chained to the
+    previous one — disjoint footprints, so every round coalesces fully."""
+    from repro.core import OP_ADD_E, OP_ADD_V
+
+    progs = {}
+    for c in range(clients):
+        base = 1000 * (c + 1)
+        prog = []
+        for j in range(batches):
+            a, b = base + 2 * j, base + 2 * j + 1
+            ops = [(OP_ADD_V, a), (OP_ADD_V, b), (OP_ADD_E, a, b)]
+            ops.append((OP_ADD_E, a - 2, a) if j else (OP_ADD_E, b, a))
+            prog.append(ops)
+        progs[f"c{c}"] = prog
+    return progs
+
+
+def _serve(progs, batches: int, max_inflight: int):
+    """Replay the programs round-robin: one pump per submission round —
+    coalesced admission fuses the round into one apply; the max_inflight=1
+    baseline is forced to take one round (one fused call) per batch."""
+    pool = IngestPool(make_graph(CAP), max_inflight=max_inflight)
+    for j in range(batches):
+        for cid, prog in progs.items():
+            pool.submit(cid, prog[j])
+        pool.pump()
+    pool.flush()
+    jax.block_until_ready(pool.snapshot().adj_packed)
+    assert pool.stats.applied == len(progs) * batches
+    assert pool.stats.retries == 0          # disjoint: nothing ever conflicts
+    return pool.stats
+
+
+def _time(fn, reps):
+    fn()  # warmup: jit the fused shapes this workload produces
+    t0 = time.perf_counter()
+    last = None
+    for _ in range(reps):
+        last = fn()
+    return (time.perf_counter() - t0) / reps, last
+
+
+def run_sweep(*, reps=3, quick=False):
+    batches = 4 if quick else 12
+    rows = []
+    for clients in CLIENTS[:1] if quick else CLIENTS:
+        progs = client_programs(clients, batches)
+        t_coal, s_coal = _time(lambda: _serve(progs, batches, 8), reps)
+        t_serial, s_serial = _time(lambda: _serve(progs, batches, 1), reps)
+        steps = clients * batches           # client batches admitted
+        rows.append({
+            "clients": clients,
+            "batches": batches,
+            "coalesced_s": t_coal,
+            "serial_s": t_serial,
+            "steps": steps,
+            "coalesced_steps_per_s": steps / t_coal,
+            "serial_steps_per_s": steps / t_serial,
+            "speedup": t_serial / t_coal,
+            "coalesced_stats": s_coal,
+            "serial_stats": s_serial,
+        })
+    return rows
+
+
+def json_rows(rows, figure="serving"):
+    """Long-format records in the shared schema (``q`` = client count),
+    plus the admission observability columns the stats suite pins."""
+    out = []
+    for r in rows:
+        for eng in ("coalesced", "serial"):
+            s = r[f"{eng}_stats"]
+            out.append({
+                "figure": figure,
+                "q": r["clients"],
+                "engine": eng,
+                "seconds": r[f"{eng}_s"],
+                "steps": r["steps"],
+                "steps_per_s": r[f"{eng}_steps_per_s"],
+                "speedup_vs_baseline": r["serial_s"] / r[f"{eng}_s"],
+                "fused_calls": s.fused_calls,
+                "coalesce_max": s.coalesce_max,
+                "queue_depth_max": s.queue_depth_max,
+                "wait_max_s": s.wait_max_s,
+            })
+    return out
+
+
+def main(quick=False, rows_out=None):
+    out = []
+    print(f'{"clients":>7s} {"engine":>10s} {"ms/run":>10s} '
+          f'{"batches/s":>11s} {"speedup":>8s} {"fused":>6s} {"qmax":>5s} '
+          f'{"waitmax_ms":>11s}')
+    rows = run_sweep(quick=quick)
+    if rows_out is not None:
+        rows_out.extend(json_rows(rows))
+    for r in rows:
+        for eng in ("coalesced", "serial"):
+            s = r[f"{eng}_stats"]
+            sp = f'{r["speedup"]:7.2f}x' if eng == "coalesced" else f'{"":>8s}'
+            print(f'{r["clients"]:7d} {eng:>10s} {r[f"{eng}_s"]*1e3:10.2f} '
+                  f'{r[f"{eng}_steps_per_s"]:11.0f} {sp} '
+                  f'{s.fused_calls:6d} {s.queue_depth_max:5d} '
+                  f'{s.wait_max_s*1e3:11.2f}')
+            out.append(f'serving/{eng}/c{r["clients"]},'
+                       f'{r[f"{eng}_s"]*1e6:.1f},'
+                       f'batches_per_s={r[f"{eng}_steps_per_s"]:.0f};'
+                       f'fused_calls={s.fused_calls};'
+                       f'queue_depth_max={s.queue_depth_max};'
+                       f'wait_max_ms={s.wait_max_s*1e3:.2f}'
+                       + (f';speedup_vs_serial={r["speedup"]:.2f}'
+                          if eng == "coalesced" else ""))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,9 @@ FIGURES = (
      "Sharded analogue — mesh-partitioned engines vs dense (DESIGN.md §8)"),
     ("index", "fig_index",
      "Reachability index — 2-hop label fast path vs fused BFS (DESIGN.md §9)"),
+    ("serving", "fig_serving",
+     "Serving admission — coalesced multi-tenant ingest vs serial baseline "
+     "(DESIGN.md §12)"),
 )
 
 REQUIRED_KEYS = {

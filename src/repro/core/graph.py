@@ -192,6 +192,16 @@ OP_ADD_E = 4
 OP_REM_E = 5
 OP_CON_E = 6
 
+OPCODE_NAMES = {
+    OP_NOP: "NOP",
+    OP_ADD_V: "AddV",
+    OP_REM_V: "RemV",
+    OP_CON_V: "HasV",
+    OP_ADD_E: "AddE",
+    OP_REM_E: "RemE",
+    OP_CON_E: "HasE",
+}
+
 # Result codes — the paper's indicative strings, as integers.
 R_PENDING = -1
 R_FALSE = 0                 # vertex ops: false

@@ -1,1 +1,1 @@
-from repro.runtime import fault, serve_loop, train_loop  # noqa: F401
+from repro.runtime import fault, ingest, serve_loop, train_loop  # noqa: F401

@@ -12,6 +12,11 @@ real ones; the transport is in-memory):
     here we log and expose the decision.
   * FailurePolicy: exponential-backoff restart budget, the controller-side
     guard against crash loops.
+  * FaultInjector: a deterministic kill-plan for the multi-tenant ingest
+    pool (runtime/ingest.py) — a client batch can be made to die at a named
+    admission stage; the pool must release its entity locks and keep the
+    published state reachable by the completed batches alone
+    (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -50,6 +55,35 @@ class StragglerDetector:
         else:  # stragglers don't poison the baseline
             self.ewma_s = (1 - self.alpha) * self.ewma_s + self.alpha * step_s
         return is_straggler
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic crash plan for ingest admission (DESIGN.md §12).
+
+    ``plan`` is a list of (client_id, stage) pairs; each entry kills that
+    client's NEXT batch reaching that stage, once. Stages the ingest pool
+    probes:
+
+      * ``"admit"`` — after the batch's sorted entity locks are acquired,
+        before its lanes enter the fused batch;
+      * ``"apply"`` — after the fused ``apply_ops_fast`` result (which
+        includes the batch's lanes) is computed, before it is published —
+        the torn-write window the pool must recompute its way out of.
+
+    ``fired`` records consumed entries for assertions.
+    """
+
+    plan: list = field(default_factory=list)
+    fired: list = field(default_factory=list)
+
+    def should_die(self, client_id: str, stage: str) -> bool:
+        key = (client_id, stage)
+        if key in self.plan:
+            self.plan.remove(key)
+            self.fired.append(key)
+            return True
+        return False
 
 
 @dataclass

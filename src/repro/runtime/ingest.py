@@ -1,0 +1,438 @@
+"""Multi-tenant bounded-concurrency ingestion for the graph server.
+
+The serving story so far admitted ONE mutation batch at a time
+(``GraphCoServer.submit``). A real deployment has many clients submitting
+overlapping batches plus a heavy read stream. This layer (DESIGN.md §12)
+adds the admission machinery between the client surface and the fused
+``apply_ops_fast`` engines:
+
+  * **Conflict detection + sorted entity-ID locks.** Every client batch
+    declares its entity footprint (the vertex keys its ops name). Admission
+    try-acquires one lock per entity in ASCENDING entity-ID order —
+    deadlock-free by construction (all acquirers order locks identically,
+    so no wait cycle can form) — and releases in descending order. Batches
+    whose footprints collide with an already-admitted batch simply stay
+    queued for the next round (a retry, counted), never blocking the round.
+  * **Coalescing.** All batches admitted in one round are pairwise
+    entity-disjoint, so they commute; their lanes are concatenated (in
+    submission order) into ONE fused ``apply_ops_fast`` call — the batch-
+    granularity restatement of the engine's own disjoint-access argument
+    (DESIGN.md §3). Lane padding to power-of-two buckets bounds the number
+    of distinct jit shapes the coalescer can produce.
+  * **Epoch double-buffering.** The writer side mutates a private head;
+    each fused apply lands as a write into the non-current snapshot slot
+    followed by one atomic slot flip. Readers (``get_paths``/``get_reach``)
+    always see the last PUBLISHED epoch and never wait on admission —
+    non-blocking co-serving at serving scale (DESIGN.md §5(ii), §12).
+  * **Linearization log.** The pool records the serial order it claims
+    (admission order within a round, round order across rounds, per-client
+    program order preserved). The schedule-exploring property harness
+    (repro.testing.schedules) replays that order through the sequential
+    oracle and the reference engine: the admitted parallel execution must
+    be bit-identical to it — the paper's linearizability claim restated at
+    serving scale.
+
+Batches containing RemoveVertex (or naming negative keys) take an
+EXCLUSIVE footprint: RemoveVertex bumps the ``ecnt`` of every in-edge
+source — a cross-key effect no per-entity footprint can cover — so such a
+batch is admitted alone, mirroring ``ops.py`` routing RemoveVertex lanes
+to the serial pass (DESIGN.md §3, §12).
+
+Fault tolerance: an optional ``FaultInjector`` (runtime/fault.py) can kill
+a client batch mid-admission. A batch that dies after acquiring locks but
+before its round publishes is aborted: its locks are released, the fused
+result that included its lanes is DISCARDED and recomputed from the same
+pre-round state without it — the published epoch is always a state some
+serial order of the *completed* batches alone produces (no torn fused
+apply). The auto-grow replay (R_TABLE_FULL) likewise re-applies the whole
+fused batch on the grown pre-round state, exactly like the single-tenant
+server path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import (
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_CON_E,
+    OP_CON_V,
+    OP_REM_E,
+    OP_REM_V,
+    R_TABLE_FULL,
+    apply_ops_fast,
+    grow,
+    make_op_batch,
+)
+from repro.core import partition
+
+_VERTEX_OPS = (OP_ADD_V, OP_REM_V, OP_CON_V)
+_EDGE_OPS = (OP_ADD_E, OP_REM_E, OP_CON_E)
+
+
+def batch_footprint(ops) -> tuple[frozenset, bool]:
+    """(entity footprint, exclusive) of a client batch.
+
+    The footprint is the set of vertex keys the ops name — the entities the
+    batch's locks cover. ``exclusive`` marks batches whose effects a
+    per-entity footprint can NOT cover (RemoveVertex's cross-key in-edge
+    ecnt bumps; negative keys aliasing slot-table sentinels): they are
+    admitted alone (DESIGN.md §12).
+    """
+    keys: set[int] = set()
+    exclusive = False
+    for op in ops:
+        opc = op[0]
+        k1 = op[1] if len(op) > 1 else -1
+        k2 = op[2] if len(op) > 2 else -1
+        if opc in _VERTEX_OPS:
+            keys.add(int(k1))
+            if opc == OP_REM_V or k1 < 0:
+                exclusive = True
+        elif opc in _EDGE_OPS:
+            keys.add(int(k1))
+            keys.add(int(k2))
+            if k1 < 0 or k2 < 0:
+                exclusive = True
+    return frozenset(keys), exclusive
+
+
+class EntityLockTable:
+    """Per-entity try-locks acquired in sorted entity-ID order.
+
+    All acquirers sort their footprint ascending and release descending, so
+    the waits-for graph is acyclic and admission is deadlock-free by
+    construction (DESIGN.md §12). ``try_acquire_sorted`` is all-or-nothing:
+    on the first busy entity it backs out everything it took.
+    """
+
+    def __init__(self):
+        self._locks: dict[int, threading.Lock] = {}
+        self._guard = threading.Lock()
+
+    def _lock_for(self, entity: int) -> threading.Lock:
+        with self._guard:
+            lk = self._locks.get(entity)
+            if lk is None:
+                lk = self._locks[entity] = threading.Lock()
+            return lk
+
+    def try_acquire_sorted(self, footprint) -> bool:
+        taken = []
+        for entity in sorted(footprint):
+            lk = self._lock_for(entity)
+            if lk.acquire(blocking=False):
+                taken.append(lk)
+            else:
+                for held in reversed(taken):
+                    held.release()
+                return False
+        return True
+
+    def release_sorted(self, footprint) -> None:
+        for entity in sorted(footprint, reverse=True):
+            self._locks[entity].release()
+
+    def held(self, entity: int) -> bool:
+        with self._guard:
+            lk = self._locks.get(entity)
+        return lk is not None and lk.locked()
+
+
+@dataclass
+class Ticket:
+    """One client batch's journey through admission (returned by submit)."""
+
+    batch_id: int
+    client_id: str
+    ops: list
+    footprint: frozenset
+    exclusive: bool
+    enqueue_t: float
+    status: str = "queued"            # queued -> applied | aborted
+    results: np.ndarray | None = None
+    epoch: int = 0                    # publish epoch the batch landed in
+    wait_s: float = 0.0               # enqueue -> admission
+    retries: int = 0                  # rounds it lost conflict detection
+
+    @property
+    def lanes(self) -> int:
+        return len(self.ops)
+
+
+@dataclass
+class IngestStats:
+    """Admission observability (surfaced through ServeStats, DESIGN.md §12)."""
+
+    submitted: int = 0
+    applied: int = 0
+    aborted: int = 0
+    fused_calls: int = 0          # device-side fused apply_ops_fast calls
+    coalesced_batches: int = 0    # client batches carried by those calls
+    coalesce_max: int = 0         # max client batches in one fused call
+    coalesce_lanes_max: int = 0   # max fused lanes (pre-padding)
+    retries: int = 0              # admission round losses across all batches
+    wait_s: float = 0.0           # total enqueue->admission wait
+    wait_max_s: float = 0.0
+    queue_depth_max: int = 0
+    queue_depth: int = 0          # depth at the last pump
+    epochs: int = 0               # snapshot epochs published
+    grow_events: int = 0          # R_TABLE_FULL auto-grow replays
+
+
+def _next_pow2(n: int, floor: int = 8) -> int:
+    p = floor
+    while p < n:
+        p <<= 1
+    return p
+
+
+class IngestPool:
+    """Bounded-concurrency multi-tenant admission onto one graph state.
+
+    Cooperative driver: ``submit`` enqueues and returns a ``Ticket``;
+    ``pump`` runs one admission round (conflict detection, sorted-lock
+    acquisition, coalesced fused apply, epoch publish); ``flush`` pumps
+    until the queue drains. The serving loop calls ``pump`` between decode
+    steps; the schedule harness calls it wherever the schedule under test
+    says (DESIGN.md §12).
+
+    Thread-safe: ``submit`` may be called from many client threads; rounds
+    are serialized by an admission mutex while the entity locks keep any
+    overlapping acquirers deadlock-free.
+    """
+
+    def __init__(self, state, *, mesh=None, auto_grow: bool = True,
+                 max_inflight: int = 8, max_coalesce_lanes: int = 256,
+                 pad_lanes: bool = True, fault=None, on_grow=None,
+                 clock=time.monotonic):
+        self.mesh = mesh if mesh is not None else getattr(state, "mesh", None)
+        self.auto_grow = auto_grow
+        self.max_inflight = int(max_inflight)
+        self.max_coalesce_lanes = int(max_coalesce_lanes)
+        self.pad_lanes = pad_lanes
+        self.fault = fault
+        self.on_grow = on_grow
+        self.clock = clock
+        self.locks = EntityLockTable()
+        self.stats = IngestStats()
+        self.linearization: list[int] = []   # batch_ids in claimed serial order
+        self.tickets: dict[int, Ticket] = {}
+        self.epoch_log: dict[int, int] = {0: 0}  # epoch -> linearization prefix
+        self._head = state                   # writer-private latest state
+        # double-buffered (epoch, state) snapshot slots; _cur flips atomically
+        self._slots = [(0, state), (0, state)]
+        self._cur = 0
+        self._queue: list[Ticket] = []
+        self._mutex = threading.Lock()       # queue + stats guard
+        self._admission = threading.Lock()   # one admission round at a time
+        self._next_id = 0
+
+    # -- read side (never blocks behind writers) ----------------------------
+    def snapshot(self):
+        """Latest PUBLISHED state — one read of the current slot, no lock."""
+        return self._slots[self._cur][1]
+
+    def snapshot_epoch(self):
+        """(epoch, state) of the current published slot."""
+        return self._slots[self._cur]
+
+    @property
+    def epoch(self) -> int:
+        return self._slots[self._cur][0]
+
+    def _publish(self, state) -> int:
+        nxt = 1 - self._cur
+        epoch = self._slots[self._cur][0] + 1
+        self._slots[nxt] = (epoch, state)
+        self._cur = nxt                      # the one atomic flip readers see
+        self._head = state
+        self.stats.epochs = epoch
+        self.epoch_log[epoch] = len(self.linearization)
+        return epoch
+
+    # -- write side ---------------------------------------------------------
+    def submit(self, client_id: str, ops) -> Ticket:
+        """Enqueue one client batch; returns its Ticket (resolved by pump)."""
+        if not ops:
+            raise ValueError("empty client batch")
+        footprint, exclusive = batch_footprint(ops)
+        with self._mutex:
+            t = Ticket(self._next_id, str(client_id), list(ops), footprint,
+                       exclusive, self.clock())
+            self._next_id += 1
+            self.tickets[t.batch_id] = t
+            self._queue.append(t)
+            self.stats.submitted += 1
+            self.stats.queue_depth = len(self._queue)
+            self.stats.queue_depth_max = max(self.stats.queue_depth_max,
+                                             len(self._queue))
+        return t
+
+    def queue_depth(self) -> int:
+        with self._mutex:
+            return len(self._queue)
+
+    def _fault_fires(self, ticket: Ticket, stage: str) -> bool:
+        return self.fault is not None and self.fault.should_die(
+            ticket.client_id, stage)
+
+    def _admit(self) -> list[Ticket]:
+        """Conflict-detection scan: admit a pairwise-disjoint queue subset.
+
+        FIFO scan; per-client program order is preserved by blocking a
+        client's later batches the moment one of its batches is skipped.
+        Entity locks are HELD by the returned tickets (released by the
+        round, success or abort).
+        """
+        admitted: list[Ticket] = []
+        lanes = 0
+        blocked_clients: set[str] = set()
+        with self._mutex:
+            queue = list(self._queue)
+            self.stats.queue_depth = len(queue)
+            self.stats.queue_depth_max = max(self.stats.queue_depth_max,
+                                             len(queue))
+        for t in queue:
+            if len(admitted) >= self.max_inflight:
+                break
+            if t.client_id in blocked_clients:
+                continue
+
+            def skip(t=t):
+                t.retries += 1
+                with self._mutex:
+                    self.stats.retries += 1
+                blocked_clients.add(t.client_id)
+
+            if admitted and (t.exclusive or any(a.exclusive for a in admitted)):
+                skip()                       # exclusive batches run alone
+                continue
+            if lanes + t.lanes > self.max_coalesce_lanes and admitted:
+                skip()                       # coalesce budget exhausted
+                continue
+            if not self.locks.try_acquire_sorted(t.footprint):
+                skip()                       # entity conflict -> next round
+                continue
+            if self._fault_fires(t, "admit"):
+                # died holding its locks: release and abort before it ever
+                # reaches the fused batch
+                self.locks.release_sorted(t.footprint)
+                self._abort(t)
+                blocked_clients.add(t.client_id)
+                continue
+            admitted.append(t)
+            lanes += t.lanes
+            if t.exclusive:
+                break
+        return admitted
+
+    def _abort(self, t: Ticket) -> None:
+        t.status = "aborted"
+        with self._mutex:
+            self.stats.aborted += 1
+            if t in self._queue:
+                self._queue.remove(t)
+
+    def _apply_with_grow(self, base, batch):
+        if self.mesh is not None:
+            state, res = partition.apply_ops_fast(base, batch)
+        else:
+            state, res = apply_ops_fast(base, batch)
+        res = np.asarray(res)
+        while self.auto_grow and (res == R_TABLE_FULL).any():
+            # grow the PRE-round state and replay the WHOLE fused batch: the
+            # visible history stays one clean linearization on the grown
+            # table — identical to the single-tenant auto-grow contract.
+            if self.mesh is not None:
+                base = partition.grow(base, 2 * base.capacity)
+                state, res = partition.apply_ops_fast(base, batch)
+            else:
+                base = grow(base, 2 * base.capacity)
+                state, res = apply_ops_fast(base, batch)
+            res = np.asarray(res)
+            with self._mutex:
+                self.stats.grow_events += 1
+            if self.on_grow is not None:
+                self.on_grow()
+        return state, res
+
+    def pump(self) -> int:
+        """One admission round; returns the number of batches applied."""
+        with self._admission:
+            admitted = self._admit()
+            if not admitted:
+                return 0
+            try:
+                return self._run_round(admitted)
+            finally:
+                for t in admitted:
+                    if t.status != "aborted":  # aborted already released
+                        self.locks.release_sorted(t.footprint)
+
+    def _run_round(self, admitted: list[Ticket]) -> int:
+        base = self._head
+        while True:
+            live = [t for t in admitted if t.status != "aborted"]
+            if not live:
+                return 0
+            fused = [op for t in live for op in t.ops]
+            lanes = len(fused)
+            pad = _next_pow2(lanes) if self.pad_lanes else lanes
+            batch = make_op_batch(fused, lanes=pad)
+            state, res = self._apply_with_grow(base, batch)
+            # post-apply fault window: a batch dying here has its lanes in
+            # the fused result — that result must be thrown away, never
+            # published (no torn apply_ops_fast; DESIGN.md §12)
+            died = [t for t in live if self._fault_fires(t, "apply")]
+            if died:
+                for t in died:
+                    self.locks.release_sorted(t.footprint)
+                    self._abort(t)
+                continue                     # recompute from the same base
+            now = self.clock()
+            off = 0
+            with self._mutex:
+                for t in live:
+                    t.results = res[off: off + t.lanes].copy()
+                    off += t.lanes
+                    t.status = "applied"
+                    t.wait_s = max(0.0, now - t.enqueue_t)
+                    self.stats.wait_s += t.wait_s
+                    self.stats.wait_max_s = max(self.stats.wait_max_s, t.wait_s)
+                    self.stats.applied += 1
+                    self.linearization.append(t.batch_id)
+                    self._queue.remove(t)
+                self.stats.fused_calls += 1
+                self.stats.coalesced_batches += len(live)
+                self.stats.coalesce_max = max(self.stats.coalesce_max, len(live))
+                self.stats.coalesce_lanes_max = max(
+                    self.stats.coalesce_lanes_max, lanes)
+                epoch = self._publish(state)
+                self.stats.queue_depth = len(self._queue)
+            for t in live:
+                t.epoch = epoch
+            return len(live)
+
+    def flush(self) -> int:
+        """Pump until the queue drains; returns total batches applied.
+
+        Progress guarantee: the first queued ticket always admits (every
+        entity lock is free at round start), so each round with a non-empty
+        queue applies or aborts at least one batch.
+        """
+        total = 0
+        while True:
+            before = self.queue_depth()
+            if before == 0:
+                return total
+            total += self.pump()
+            # progress = the queue shrank (applied OR aborted batches both
+            # leave it); a round that moves nothing would loop forever
+            if self.queue_depth() >= before:  # pragma: no cover
+                raise RuntimeError("ingest pool wedged: non-empty queue, "
+                                   "zero admissions")

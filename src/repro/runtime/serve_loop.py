@@ -51,6 +51,15 @@ class ServeStats:
     index_hits: int = 0       # queries answered on the index fast path
     index_misses: int = 0     # queries that fell back to the fused BFS
     index_refreshes: int = 0  # index builds/refreshes performed
+    # -- multi-tenant admission observability (DESIGN.md §12) ---------------
+    ingest_batches: int = 0         # client batches admitted and applied
+    ingest_fused_calls: int = 0     # coalesced device-side apply calls
+    ingest_coalesce_max: int = 0    # max client batches in one fused call
+    ingest_retries: int = 0         # admission rounds lost to conflicts
+    ingest_wait_s: float = 0.0      # total enqueue->admission wait
+    ingest_wait_max_s: float = 0.0
+    ingest_queue_depth_max: int = 0
+    ingest_epochs: int = 0          # snapshot epochs published
     wall_s: float = 0.0
 
 
@@ -70,6 +79,13 @@ class GraphCoServer:
     cascaded VERTEX-NOT-PRESENT failures — and the returned results are
     one clean lane-order linearization.
 
+    ``ingest=True`` attaches the multi-tenant admission pool
+    (runtime/ingest.py, DESIGN.md §12): ``submit_client`` enqueues per-
+    client batches, ``pump``/``flush`` run conflict-detected admission
+    rounds that coalesce non-conflicting batches into fused applies, and
+    ``state`` becomes the pool's double-buffered published snapshot epoch —
+    readers never block behind admission.
+
     ``index=True`` maintains a versioned 2-hop reachability index
     (DESIGN.md §9): ``get_reach``/``get_reach_counts`` answer from the
     index whenever its epoch stamp matches the live version metadata (the
@@ -84,7 +100,9 @@ class GraphCoServer:
 
     def __init__(self, capacity: int = 256, query_engine: str = "fused",
                  mesh=None, auto_grow: bool = True, index: bool = False,
-                 index_landmarks: int | None = None):
+                 index_landmarks: int | None = None, ingest: bool = False,
+                 max_inflight: int = 8, max_coalesce_lanes: int = 256,
+                 fault=None):
         self.mesh = mesh
         self.auto_grow = auto_grow
         self.query_engine = query_engine
@@ -96,7 +114,34 @@ class GraphCoServer:
         self.index_misses = 0
         self.index_refreshes = 0
         dense = make_graph(capacity)
-        self.state = partition.shard_state(mesh, dense) if mesh is not None else dense
+        self._state = partition.shard_state(mesh, dense) if mesh is not None else dense
+        self.pool = None
+        if ingest:
+            from repro.runtime.ingest import IngestPool
+
+            def bump_grow():
+                self.grow_events += 1
+
+            self.pool = IngestPool(
+                self._state, mesh=mesh, auto_grow=auto_grow,
+                max_inflight=max_inflight,
+                max_coalesce_lanes=max_coalesce_lanes, fault=fault,
+                on_grow=bump_grow)
+
+    @property
+    def state(self):
+        """Latest published state. With the ingest pool enabled this is the
+        double-buffered snapshot epoch — readers never observe (or wait on)
+        a round mid-admission (DESIGN.md §12)."""
+        return self.pool.snapshot() if self.pool is not None else self._state
+
+    @state.setter
+    def state(self, value):
+        if self.pool is not None:
+            raise AttributeError(
+                "state is pool-owned under multi-tenant ingestion; "
+                "mutate through submit()/submit_client() (DESIGN.md §12)")
+        self._state = value
 
     def _apply(self, state, batch: OpBatch):
         if self.mesh is not None:
@@ -109,6 +154,13 @@ class GraphCoServer:
         return grow(state, new_capacity)
 
     def submit(self, ops: list) -> np.ndarray:
+        if self.pool is not None:
+            # single-tenant surface on the multi-tenant pool: enqueue as one
+            # anonymous client and drain — same results, one linearization
+            # log shared with every concurrent client (DESIGN.md §12)
+            ticket = self.pool.submit("_direct", ops)
+            self.pool.flush()
+            return np.asarray(ticket.results)
         batch = make_op_batch(ops)
         base = self.state                    # pre-batch snapshot (functional)
         state, res = self._apply(base, batch)
@@ -125,6 +177,26 @@ class GraphCoServer:
             res = np.asarray(res)
         self.state = state
         return res
+
+    # -- multi-tenant admission surface (DESIGN.md §12) ---------------------
+    def submit_client(self, client_id: str, ops: list):
+        """Enqueue one client's mutation batch; returns its ``Ticket``.
+
+        Requires ``ingest=True``. The batch is admitted by a later
+        ``pump()`` once its entity footprint stops colliding with in-flight
+        batches; results land on the ticket (DESIGN.md §12)."""
+        if self.pool is None:
+            raise RuntimeError("GraphCoServer(ingest=True) required for "
+                               "multi-tenant submission")
+        return self.pool.submit(client_id, ops)
+
+    def pump(self) -> int:
+        """One admission round of the ingest pool (DESIGN.md §12)."""
+        return self.pool.pump() if self.pool is not None else 0
+
+    def flush(self) -> int:
+        """Drain the ingest queue (DESIGN.md §12)."""
+        return self.pool.flush() if self.pool is not None else 0
 
     def get_path(self, k: int, l: int, max_rounds: int = 64):
         if self.mesh is None:
@@ -194,10 +266,18 @@ class GraphCoServer:
 
 def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
           cache_len: int, graph: GraphCoServer | None = None,
-          mutator=None, query_stream=None, temperature: float = 0.0):
+          mutator=None, query_stream=None, clients=None,
+          temperature: float = 0.0):
     """Greedy batched decoding with interleaved graph traffic.
 
     prompts: int32 [B, P]. Returns (generated [B, max_new_tokens], stats).
+
+    ``clients`` (requires ``GraphCoServer(ingest=True)``) is the multi-
+    tenant mutation stream: a callable ``step -> [(client_id, ops), ...]``.
+    Each step's batches are enqueued and one admission round runs —
+    non-conflicting batches coalesce into one fused apply while the read
+    stream keeps hitting the last published snapshot epoch (DESIGN.md §12);
+    the queue is drained after the last decode step.
     """
     t0 = time.time()
     stats = ServeStats()
@@ -205,6 +285,12 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
     # reports per-serve deltas like every other field
     idx0 = ((graph.index_hits, graph.index_misses, graph.index_refreshes)
             if graph is not None else (0, 0, 0))
+    pool = graph.pool if graph is not None else None
+    if clients is not None and pool is None:
+        raise RuntimeError("clients= stream requires GraphCoServer(ingest=True)")
+    ing0 = ((pool.stats.applied, pool.stats.fused_calls, pool.stats.retries,
+             pool.stats.wait_s, pool.stats.epochs)
+            if pool is not None else (0, 0, 0, 0.0, 0))
     b, p = prompts.shape
     last, caches = model.prefill(params, {"tokens": jnp.asarray(prompts)})
     caches = model.cache_from_prefill(caches, cache_len)
@@ -220,6 +306,14 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
             if ops:
                 graph.submit(ops)
                 stats.graph_ops += len(ops)
+        if graph is not None and clients is not None:
+            for client_id, ops in clients(i) or ():
+                if ops:
+                    graph.submit_client(client_id, ops)
+                    stats.graph_ops += len(ops)
+            # one admission round per decode step: coalesced fused apply of
+            # whatever non-conflicting batches are queued (DESIGN.md §12)
+            graph.pump()
         if graph is not None:
             # background index refresh between decode steps: co-serving
             # stays non-blocking — queries racing a stale index fall back
@@ -266,6 +360,17 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         tok = jnp.argmax(tok_logits, axis=-1).astype(jnp.int32)
         stats.decode_steps += 1
         stats.decode_tokens += b
+    if pool is not None:
+        graph.flush()                        # drain whatever is still queued
+        stats.ingest_batches = pool.stats.applied - ing0[0]
+        stats.ingest_fused_calls = pool.stats.fused_calls - ing0[1]
+        stats.ingest_retries = pool.stats.retries - ing0[2]
+        stats.ingest_wait_s = pool.stats.wait_s - ing0[3]
+        stats.ingest_epochs = pool.stats.epochs - ing0[4]
+        # high-water marks are lifetime values (a max has no meaningful delta)
+        stats.ingest_coalesce_max = pool.stats.coalesce_max
+        stats.ingest_wait_max_s = pool.stats.wait_max_s
+        stats.ingest_queue_depth_max = pool.stats.queue_depth_max
     if graph is not None:
         stats.grow_events = graph.grow_events
         stats.index_hits = graph.index_hits - idx0[0]

@@ -1,0 +1,493 @@
+"""Schedule-exploring linearizability harness for multi-tenant ingestion.
+
+One driver for every concurrency suite (DESIGN.md §12): it generates
+N-client schedules (interleaved batch submissions, admission rounds, and
+snapshot reads) with a controllable conflict rate, executes them against
+the ingest pool (``repro.runtime.ingest``) on dense or sharded state, and
+checks the paper's linearizability claim restated at serving scale:
+
+  the final state of any admitted parallel execution is BIT-identical to
+  *some* serial order of the client batches — concretely, to the pool's
+  claimed linearization replayed through the sequential reference engine
+  (``apply_ops``) and the sequential oracle (``core.oracle.GraphOracle``)
+  — and every read observed a state some linearization prefix produces.
+
+Three layers:
+
+  * generation — ``gen_client_programs`` (randomized, conflict-rate
+    controlled), ``random_schedule`` (seeded interleavings),
+    ``enumerate_interleavings`` (exact enumeration for small programs),
+    plus ``op_strategy``/``batch_lists_strategy`` hypothesis-style
+    factories shared with tests/test_linearizability_prop.py;
+  * execution — ``run_schedule`` drives a schedule through an IngestPool
+    and returns a ``Trace`` (tickets, reads with their snapshot epochs,
+    the claimed linearization);
+  * checking + shrinking — ``check_trace_linearizable`` (program order,
+    oracle results, bit-identity, read consistency, within-round
+    commutativity), and ``shrink_schedule``: a deterministic greedy
+    minimizer that deletes steps and lanes while a failure predicate keeps
+    holding, so a falsified property lands as a readable counterexample.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import (
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_CON_E,
+    OP_CON_V,
+    OP_REM_E,
+    OP_REM_V,
+    R_TABLE_FULL,
+    GraphOracle,
+    apply_ops,
+    get_paths_session,
+    grow,
+    make_graph,
+    make_op_batch,
+)
+from repro.core import partition
+from repro.core.graph import OPCODE_NAMES
+from repro.runtime.ingest import IngestPool
+
+# ---------------------------------------------------------------------------
+# Schedule representation
+# ---------------------------------------------------------------------------
+# Steps (plain tuples so schedules print/shrink trivially):
+#   ("submit", client_id, [op, ...])   enqueue one client batch
+#   ("pump",)                          one admission round
+#   ("read", [(k, l), ...])            reachability read on the published epoch
+#   ("flush",)                         drain the queue
+
+
+@dataclass
+class Schedule:
+    steps: list = field(default_factory=list)
+
+    def submits(self):
+        return [s for s in self.steps if s[0] == "submit"]
+
+    def pretty(self) -> str:
+        """Readable transcript — what a shrunk counterexample prints as."""
+        lines = []
+        for i, s in enumerate(self.steps):
+            if s[0] == "submit":
+                ops = ", ".join(_op_str(op) for op in s[2])
+                lines.append(f"{i:3d}  submit {s[1]:<8} [{ops}]")
+            elif s[0] == "read":
+                pairs = ", ".join(f"{k}->{l}" for k, l in s[1])
+                lines.append(f"{i:3d}  read   {pairs}")
+            else:
+                lines.append(f"{i:3d}  {s[0]}")
+        return "\n".join(lines)
+
+
+def _op_str(op) -> str:
+    name = OPCODE_NAMES.get(op[0], f"op{op[0]}")
+    body = "/".join(str(x) for x in op[1:3][: 2 if op[0] in _EDGE_OPS else 1])
+    cas = f" cas={op[3]}" if len(op) > 3 and op[3] >= 0 else ""
+    return f"{name} {body}{cas}"
+
+
+_EDGE_OPS = (OP_ADD_E, OP_REM_E, OP_CON_E)
+_ALL_OPS = (OP_ADD_V, OP_REM_V, OP_CON_V, OP_ADD_E, OP_REM_E, OP_CON_E)
+
+
+# ---------------------------------------------------------------------------
+# Generation
+# ---------------------------------------------------------------------------
+def _norm(op) -> tuple:
+    """Normalize to a (opcode, k1, k2, expect) 4-tuple."""
+    k1 = op[1] if len(op) > 1 else -1
+    k2 = op[2] if len(op) > 2 else -1
+    ex = op[3] if len(op) > 3 else -1
+    return (int(op[0]), int(k1), int(k2), int(ex))
+
+
+def gen_op(rng: random.Random, keys, *, remv_rate=0.15, cas_rate=0.15):
+    """One random op over the given key pool."""
+    r = rng.random()
+    if r < remv_rate:
+        opc = OP_REM_V
+    else:
+        opc = rng.choice([OP_ADD_V, OP_ADD_V, OP_CON_V, OP_ADD_E, OP_ADD_E,
+                          OP_REM_E, OP_CON_E])
+    k1, k2 = rng.choice(keys), rng.choice(keys)
+    ex = rng.choice([0, 1, 2]) \
+        if opc in (OP_ADD_E, OP_REM_E) and rng.random() < cas_rate else -1
+    return (opc, k1, k2, ex)
+
+
+def gen_client_programs(rng: random.Random, *, clients=3, batches_per_client=2,
+                        max_lanes=5, hot_keys=4, private_keys=3,
+                        conflict_rate=0.5, remv_rate=0.1, cas_rate=0.15):
+    """Per-client batch programs with a controllable conflict rate.
+
+    Each client owns a private key range; with probability ``conflict_rate``
+    an op draws its keys from the SHARED hot set instead — ``conflict_rate=0``
+    makes every batch pairwise entity-disjoint (maximal parallel admission),
+    ``1.0`` funnels everything through the hot set (maximal contention,
+    the colliding-entity workloads the linearizability suite needs).
+    """
+    hot = list(range(hot_keys))
+    programs: dict[str, list[list]] = {}
+    for c in range(clients):
+        cid = f"c{c}"
+        private = list(range(100 * (c + 1), 100 * (c + 1) + private_keys))
+        batches = []
+        for _ in range(batches_per_client):
+            lanes = rng.randint(1, max_lanes)
+            ops = []
+            for _ in range(lanes):
+                pool = hot if rng.random() < conflict_rate else private
+                ops.append(_norm(gen_op(rng, pool, remv_rate=remv_rate,
+                                        cas_rate=cas_rate)))
+            batches.append(ops)
+        programs[cid] = batches
+    return programs
+
+
+def _read_keys(programs) -> list[int]:
+    keys = sorted({k for batches in programs.values() for ops in batches
+                   for op in ops for k in op[1:3] if k >= 0})
+    return keys or [0]
+
+
+def random_schedule(rng: random.Random, programs, *, read_rate=0.3,
+                    pump_rate=0.5, reads_pairs=2) -> Schedule:
+    """Seeded random interleaving of the client programs.
+
+    Per-client submission order is preserved (program order); pump and
+    read steps are sprinkled between submissions; a trailing flush + read
+    makes every schedule end fully drained and observed.
+    """
+    pending = {c: list(batches) for c, batches in programs.items()}
+    keys = _read_keys(programs)
+    steps: list = []
+    while any(pending.values()):
+        c = rng.choice([c for c, b in pending.items() if b])
+        steps.append(("submit", c, pending[c].pop(0)))
+        if rng.random() < pump_rate:
+            steps.append(("pump",))
+        if rng.random() < read_rate:
+            pairs = [(rng.choice(keys), rng.choice(keys))
+                     for _ in range(reads_pairs)]
+            steps.append(("read", pairs))
+    steps.append(("flush",))
+    steps.append(("read", [(keys[0], keys[-1]), (keys[-1], keys[0])]))
+    return Schedule(steps)
+
+
+def enumerate_interleavings(programs, *, pump_after_each=True, limit=64):
+    """EVERY merge order of the per-client batch sequences (small programs).
+
+    Yields at most ``limit`` schedules; the enumeration is exact when the
+    multinomial count fits. Each submission is followed by an admission
+    round when ``pump_after_each`` (the tightest schedule: every batch is
+    exposed to conflict detection alone), and every schedule ends drained.
+    """
+    clients = sorted(programs)
+    tokens = [c for c in clients for _ in programs[c]]
+    seen = set()
+    count = 0
+    for perm in itertools.permutations(tokens):
+        if perm in seen:
+            continue
+        seen.add(perm)
+        idx = {c: 0 for c in clients}
+        steps: list = []
+        for c in perm:
+            steps.append(("submit", c, programs[c][idx[c]]))
+            idx[c] += 1
+            if pump_after_each:
+                steps.append(("pump",))
+        steps.append(("flush",))
+        yield Schedule(steps)
+        count += 1
+        if count >= limit:
+            return
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-style strategy factories (shared with the engine prop suite)
+# ---------------------------------------------------------------------------
+def op_strategy(st, *, max_key=5, cas_choices=(-1, -1, -1, 0, 1, 2)):
+    """(opcode, k1, k2, expect) strategy over a small colliding key space.
+
+    ``st`` is either the real ``hypothesis.strategies`` or the
+    ``repro.testing.proptest`` fallback — both expose the same factories.
+    """
+    keys = st.integers(min_value=0, max_value=max_key)
+    opc = st.sampled_from(list(_ALL_OPS))
+    return st.tuples(opc, keys, keys, st.sampled_from(list(cas_choices)))
+
+
+def batch_strategy(st, *, min_size=1, max_size=10, **op_kw):
+    return st.lists(op_strategy(st, **op_kw), min_size=min_size,
+                    max_size=max_size)
+
+
+def batch_lists_strategy(st, *, min_batches=1, max_batches=4, **batch_kw):
+    """Lists of op batches — the engine property suites' input shape."""
+    return st.lists(batch_strategy(st, **batch_kw), min_size=min_batches,
+                    max_size=max_batches)
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+@dataclass
+class ReadObs:
+    epoch: int
+    pairs: list
+    results: list          # [(found, keys)] per pair
+
+
+@dataclass
+class Trace:
+    schedule: Schedule
+    pool: IngestPool
+    capacity: int          # initial capacity the pool started from
+    mesh: object
+    reads: list = field(default_factory=list)
+
+    @property
+    def linearization(self):
+        return self.pool.linearization
+
+
+def run_schedule(schedule: Schedule, *, capacity=32, mesh=None, fault=None,
+                 auto_grow=True, max_inflight=8, max_coalesce_lanes=256,
+                 pad_lanes=True) -> Trace:
+    """Execute a schedule against a fresh IngestPool; returns its Trace.
+
+    Reads are taken against the pool's PUBLISHED snapshot epoch — a frozen
+    functional state — so each observation is tagged with the exact
+    linearization prefix it must be explained by (DESIGN.md §12).
+    """
+    dense = make_graph(capacity)
+    state = partition.shard_state(mesh, dense) if mesh is not None else dense
+    pool = IngestPool(state, mesh=mesh, auto_grow=auto_grow,
+                      max_inflight=max_inflight,
+                      max_coalesce_lanes=max_coalesce_lanes,
+                      pad_lanes=pad_lanes, fault=fault)
+    trace = Trace(schedule, pool, capacity, mesh)
+    for step in schedule.steps:
+        if step[0] == "submit":
+            pool.submit(step[1], step[2])
+        elif step[0] == "pump":
+            pool.pump()
+        elif step[0] == "flush":
+            pool.flush()
+        elif step[0] == "read":
+            epoch, snap = pool.snapshot_epoch()
+            out, _ = get_paths_session(lambda: snap, step[1])
+            trace.reads.append(ReadObs(epoch, list(step[1]), out))
+        else:  # pragma: no cover - schedule author error
+            raise ValueError(f"unknown step {step!r}")
+    pool.flush()           # every trace ends drained (checkable end state)
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# Checking
+# ---------------------------------------------------------------------------
+def _dense_head(trace: Trace):
+    head = trace.pool._head
+    return partition.unshard(head) if trace.mesh is not None else head
+
+
+def _serial_replay_bits(trace: Trace):
+    """Replay the claimed linearization through the sequential reference
+    engine (``apply_ops``), batch by batch, with the same grow-on-overflow
+    discipline — the serial execution the parallel one must equal, bit for
+    bit."""
+    state = make_graph(trace.capacity)
+    results = {}
+    for bid in trace.linearization:
+        t = trace.pool.tickets[bid]
+        batch = make_op_batch(t.ops)
+        state2, res = apply_ops(state, batch)
+        res = np.asarray(res)
+        while trace.pool.auto_grow and (res == R_TABLE_FULL).any():
+            state = grow(state, 2 * state.capacity)
+            state2, res = apply_ops(state, batch)
+            res = np.asarray(res)
+        state = state2
+        results[bid] = res
+    return state, results
+
+
+def check_trace_linearizable(trace: Trace, *, permute_limit=24) -> None:
+    """Assert the trace is linearizable (DESIGN.md §12). Five obligations:
+
+    1. the claimed linearization is exactly the applied batches, once each,
+       respecting every client's program (submission) order;
+    2. oracle equivalence: replaying it through the sequential oracle
+       reproduces every delivered result code;
+    3. bit-identity: replaying it through ``apply_ops`` batch-by-batch
+       reproduces the pool head state bit for bit (dense and sharded);
+    4. read consistency: every read equals BFS over the oracle state at its
+       snapshot epoch's linearization prefix;
+    5. commutativity: batches coalesced into ONE fused call are entity-
+       disjoint, so any within-round permutation must be oracle-equivalent
+       (same results, same abstract state) — ``permute_limit`` caps the
+       permutations tried per round.
+    """
+    pool = trace.pool
+    lin = list(pool.linearization)
+    applied = {bid for bid, t in pool.tickets.items() if t.status == "applied"}
+
+    # (1) claimed order is a permutation of the applied set, program order kept
+    assert sorted(lin) == sorted(applied), \
+        f"linearization {lin} != applied set {sorted(applied)}"
+    by_client: dict[str, list[int]] = {}
+    for bid in lin:
+        by_client.setdefault(pool.tickets[bid].client_id, []).append(bid)
+    for cid, bids in by_client.items():
+        assert bids == sorted(bids), \
+            f"client {cid} program order violated in linearization: {bids}"
+
+    # (2) oracle replay reproduces every delivered result code
+    final_cap = _dense_head(trace).capacity
+    oracle = _oracle_after(trace, lin, capacity=final_cap)
+
+    # (3) bit-identity against the serial reference replay
+    head = _dense_head(trace)
+    serial_state, serial_results = _serial_replay_bits(trace)
+    for name, a, b in zip(head._fields, head, serial_state):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"parallel execution diverges from its serial order "
+                    f"in field {name!r}")
+    for bid in lin:
+        np.testing.assert_array_equal(
+            pool.tickets[bid].results, serial_results[bid],
+            err_msg=f"batch {bid} results diverge from serial replay")
+
+    # (4) reads: explained by the linearization prefix at their epoch
+    for obs in trace.reads:
+        prefix = pool.epoch_log[obs.epoch]
+        ora = _oracle_after(trace, lin[:prefix], capacity=final_cap,
+                            check_results=False)
+        for (k, l), (found, keys) in zip(obs.pairs, obs.results):
+            want = ora.reachable(k, l)
+            assert found == want, \
+                (f"read {k}->{l} at epoch {obs.epoch} saw found={found}, "
+                 f"prefix state says {want}")
+            if found:
+                assert ora.is_valid_path(keys, k, l), \
+                    f"read {k}->{l} returned a non-path {keys}"
+
+    # (5) within-round commutativity: any permutation of a fused round is
+    # an equally valid serial order
+    for group in fused_groups(trace):
+        if len(group) < 2:
+            continue
+        pos = {bid: i for i, bid in enumerate(lin)}
+        for perm in itertools.islice(
+                itertools.permutations(group), permute_limit):
+            order = list(lin)
+            for slot, bid in zip(sorted(pos[b] for b in group), perm):
+                order[slot] = bid
+            alt = _oracle_after(trace, order, capacity=final_cap)
+            assert alt.state_tuple() == oracle.state_tuple(), \
+                (f"round {group} does not commute: permutation {perm} "
+                 f"reaches a different abstract state")
+
+
+def fused_groups(trace: Trace) -> list[list[int]]:
+    """Batch-id groups coalesced into one fused apply, per publish epoch."""
+    log = trace.pool.epoch_log
+    groups = []
+    for epoch in sorted(log):
+        if epoch == 0:
+            continue
+        lo, hi = log[epoch - 1], log[epoch]
+        groups.append(trace.pool.linearization[lo:hi])
+    return groups
+
+
+def _oracle_after(trace: Trace, order, *, capacity, check_results=True
+                  ) -> GraphOracle:
+    """Oracle state after replaying ``order``; optionally asserts each
+    batch's delivered result codes match the oracle's."""
+    oracle = GraphOracle(capacity)
+    for bid in order:
+        t = trace.pool.tickets[bid]
+        want = oracle.apply_batch(t.ops)
+        if check_results:
+            got = [int(x) for x in t.results]
+            assert got == want, \
+                (f"batch {bid} (client {t.client_id}) results {got} diverge "
+                 f"from oracle {want} in order {list(order)}")
+    return oracle
+
+
+def check_aborted_invisible(trace: Trace) -> None:
+    """Fault-injection obligation: aborted batches left NO trace — the head
+    state is produced by the completed batches alone (no torn fused apply),
+    and their entity locks were released (DESIGN.md §12)."""
+    pool = trace.pool
+    aborted = [t for t in pool.tickets.values() if t.status == "aborted"]
+    for t in aborted:
+        assert t.results is None, f"aborted batch {t.batch_id} has results"
+        assert t.batch_id not in pool.linearization
+        for entity in t.footprint:
+            assert not pool.locks.held(entity), \
+                f"aborted batch {t.batch_id} leaked lock on entity {entity}"
+    check_trace_linearizable(trace)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic shrinking
+# ---------------------------------------------------------------------------
+def shrink_schedule(schedule: Schedule, still_fails) -> Schedule:
+    """Greedy deterministic minimizer: repeatedly drop whole steps, then
+    single ops inside submit steps, keeping any deletion under which
+    ``still_fails(schedule)`` stays True. Deterministic (first-to-last
+    scan to fixpoint), so a seeded failure always shrinks to the same
+    readable counterexample."""
+    cur = schedule
+    changed = True
+    while changed:
+        changed = False
+        # pass 1: drop whole steps
+        i = 0
+        while i < len(cur.steps):
+            cand = Schedule(cur.steps[:i] + cur.steps[i + 1:])
+            if cand.steps and still_fails(cand):
+                cur, changed = cand, True
+            else:
+                i += 1
+        # pass 2: drop individual lanes from submit steps
+        i = 0
+        while i < len(cur.steps):
+            step = cur.steps[i]
+            if step[0] == "submit" and len(step[2]) > 1:
+                j = 0
+                while j < len(step[2]):
+                    ops = step[2][:j] + step[2][j + 1:]
+                    cand = Schedule(cur.steps[:i]
+                                    + [("submit", step[1], ops)]
+                                    + cur.steps[i + 1:])
+                    if still_fails(cand):
+                        cur, changed = cand, True
+                        step = cur.steps[i]
+                    else:
+                        j += 1
+            i += 1
+    return cur
+
+
+def run_and_check(schedule: Schedule, **run_kw) -> Trace:
+    """Execute + full linearizability check — the single entry point the
+    property suites call (and ``shrink_schedule`` predicates wrap)."""
+    trace = run_schedule(schedule, **run_kw)
+    check_trace_linearizable(trace)
+    return trace

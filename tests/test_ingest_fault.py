@@ -1,0 +1,160 @@
+"""Fault injection into the multi-tenant admission pool (DESIGN.md §12).
+
+A client batch that dies mid-admission must (a) release its sorted entity
+locks, (b) leave the published state EXACTLY what the completed batches
+alone produce — no torn fused ``apply_ops_fast`` where some of the dead
+batch's lanes landed — and (c) leave the surviving batches' results and
+the linearization log untouched by the abort. Both fault windows are
+covered (``runtime.fault.FaultInjector`` stages):
+
+  * "admit"  — dies holding its locks, before entering the fused batch;
+  * "apply"  — dies AFTER the fused result including its lanes was
+    computed: the pool must discard that result and recompute from the
+    same pre-round state without it (the torn-write window).
+
+Dense and mesh-sharded backends take the identical contract.
+"""
+import numpy as np
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, R_TRUE, GraphOracle,
+)
+from repro.core.distributed import make_graph_mesh
+from repro.runtime.fault import FaultInjector
+from repro.testing import schedules as sch
+
+CAP = 32
+
+
+def _three_client_steps():
+    """Three disjoint-footprint batches -> one fused round when healthy."""
+    return [
+        ("submit", "A", [(OP_ADD_V, 1, -1, -1), (OP_ADD_V, 2, -1, -1),
+                         (OP_ADD_E, 1, 2, -1)]),
+        ("submit", "B", [(OP_ADD_V, 11, -1, -1), (OP_ADD_V, 12, -1, -1),
+                         (OP_ADD_E, 11, 12, -1)]),
+        ("submit", "C", [(OP_ADD_V, 21, -1, -1), (OP_ADD_V, 22, -1, -1),
+                         (OP_ADD_E, 21, 22, -1)]),
+        ("pump",),
+        ("read", [(1, 2), (11, 12), (21, 22)]),
+    ]
+
+
+def _expect_only_survivors(trace, dead_keys, alive_pairs):
+    """Dead batch invisible; survivors fully applied; full lin check."""
+    sch.check_aborted_invisible(trace)
+    oracle = GraphOracle(CAP)
+    for bid in trace.linearization:
+        oracle.apply_batch(trace.pool.tickets[bid].ops)
+    for k in dead_keys:
+        assert k not in oracle.ecnt, f"dead batch's vertex {k} leaked"
+    for (k, l) in alive_pairs:
+        assert oracle.reachable(k, l)
+
+
+def test_batch_dies_at_admit_releases_locks_dense():
+    fault = FaultInjector(plan=[("B", "admit")])
+    trace = sch.run_schedule(sch.Schedule(_three_client_steps()),
+                             capacity=CAP, fault=fault)
+    assert fault.fired == [("B", "admit")]
+    tickets = {t.client_id: t for t in trace.pool.tickets.values()}
+    assert tickets["B"].status == "aborted"
+    assert tickets["A"].status == tickets["C"].status == "applied"
+    assert (np.asarray(tickets["A"].results) == R_TRUE)[:2].all()
+    _expect_only_survivors(trace, dead_keys=(11, 12),
+                           alive_pairs=[(1, 2), (21, 22)])
+    # the read in the schedule saw B's edge as absent
+    assert trace.reads[0].results[1] == (False, [])
+
+
+def test_batch_dies_at_apply_discards_torn_fused_result_dense():
+    """B's lanes were IN the computed fused result; publishing it would be
+    a torn write. The pool must recompute the round from the same pre-round
+    state without B."""
+    fault = FaultInjector(plan=[("B", "apply")])
+    trace = sch.run_schedule(sch.Schedule(_three_client_steps()),
+                             capacity=CAP, fault=fault)
+    assert fault.fired == [("B", "apply")]
+    tickets = {t.client_id: t for t in trace.pool.tickets.values()}
+    assert tickets["B"].status == "aborted" and tickets["B"].results is None
+    assert tickets["A"].status == tickets["C"].status == "applied"
+    # exactly ONE epoch published for the round: the torn one never surfaced
+    assert trace.pool.stats.epochs == 1
+    assert trace.pool.stats.fused_calls == 1
+    _expect_only_survivors(trace, dead_keys=(11, 12),
+                           alive_pairs=[(1, 2), (21, 22)])
+    assert trace.reads[0].results == [(True, [1, 2]), (False, []),
+                                      (True, [21, 22])]
+
+
+def test_batch_dies_at_apply_sharded():
+    mesh = make_graph_mesh()
+    fault = FaultInjector(plan=[("B", "apply")])
+    trace = sch.run_schedule(sch.Schedule(_three_client_steps()),
+                             capacity=CAP, mesh=mesh, fault=fault)
+    assert fault.fired == [("B", "apply")]
+    tickets = {t.client_id: t for t in trace.pool.tickets.values()}
+    assert tickets["B"].status == "aborted"
+    _expect_only_survivors(trace, dead_keys=(11, 12),
+                           alive_pairs=[(1, 2), (21, 22)])
+
+
+def test_batch_dies_at_admit_sharded():
+    mesh = make_graph_mesh()
+    fault = FaultInjector(plan=[("C", "admit")])
+    trace = sch.run_schedule(sch.Schedule(_three_client_steps()),
+                             capacity=CAP, mesh=mesh, fault=fault)
+    assert fault.fired == [("C", "admit")]
+    _expect_only_survivors(trace, dead_keys=(21, 22),
+                           alive_pairs=[(1, 2), (11, 12)])
+
+
+def test_dead_batchs_entities_remain_lockable():
+    """After an abort, another client can immediately claim the dead
+    batch's entities — the locks really were released, not leaked."""
+    fault = FaultInjector(plan=[("B", "apply")])
+    steps = _three_client_steps() + [
+        ("submit", "D", [(OP_ADD_V, 11, -1, -1), (OP_ADD_V, 12, -1, -1),
+                         (OP_ADD_E, 11, 12, -1)]),   # B's exact footprint
+        ("pump",),
+        ("read", [(11, 12)]),
+    ]
+    trace = sch.run_schedule(sch.Schedule(steps), capacity=CAP, fault=fault)
+    tickets = {t.client_id: t for t in trace.pool.tickets.values()}
+    assert tickets["D"].status == "applied"
+    assert trace.reads[-1].results[0] == (True, [11, 12])
+    sch.check_aborted_invisible(trace)
+
+
+def test_whole_round_dies_publishes_nothing():
+    """Every admitted batch dies at the apply stage: the round must publish
+    NO epoch (state unchanged), and the queue must end drained."""
+    fault = FaultInjector(plan=[("A", "apply"), ("B", "apply"),
+                                ("C", "apply")])
+    trace = sch.run_schedule(sch.Schedule(_three_client_steps()),
+                             capacity=CAP, fault=fault)
+    assert len(fault.fired) == 3
+    assert trace.pool.stats.epochs == 0
+    assert trace.pool.stats.applied == 0
+    assert trace.pool.stats.aborted == 3
+    assert trace.linearization == []
+    assert trace.reads[0].results == [(False, []), (False, []), (False, [])]
+    sch.check_aborted_invisible(trace)
+
+
+def test_fault_then_healthy_resubmission_same_client():
+    """The injector kills ONE batch, not the client: the same client's next
+    batch (queued behind the dead one) applies normally in a later round."""
+    fault = FaultInjector(plan=[("A", "admit")])
+    steps = [
+        ("submit", "A", [(OP_ADD_V, 1, -1, -1)]),    # dies
+        ("submit", "A", [(OP_ADD_V, 2, -1, -1)]),    # must still land
+        ("flush",),
+        ("read", [(2, 2)]),
+    ]
+    trace = sch.run_schedule(sch.Schedule(steps), capacity=CAP, fault=fault)
+    a_tickets = sorted((t for t in trace.pool.tickets.values()),
+                       key=lambda t: t.batch_id)
+    assert [t.status for t in a_tickets] == ["aborted", "applied"]
+    assert trace.reads[0].results[0] == (True, [2])
+    sch.check_aborted_invisible(trace)

@@ -15,11 +15,13 @@ workloads. Three properties:
      every result field bit for bit, and the path results delivered through
      the shared-double-collect session agree.
 
-Keys are drawn from a tiny space (0..5) so most batches collide; ``expect``
-values exercise the CAS path; capacity-6 cases force the R_TABLE_FULL
-overflow fallback. Under CI's 8-virtual-device job the mesh really has 8
-shards; in a single-device container it degenerates (the subprocess test in
-tests/test_partition.py covers 8 shards regardless).
+Op/batch generation comes from the shared schedule driver
+(``repro.testing.schedules``): keys are drawn from a tiny space (0..5) so
+most batches collide; ``expect`` values exercise the CAS path; capacity-6
+cases force the R_TABLE_FULL overflow fallback. Under CI's 8-virtual-device
+job the mesh really has 8 shards; in a single-device container it
+degenerates (the subprocess test in tests/test_partition.py covers 8 shards
+regardless).
 """
 import numpy as np
 
@@ -29,16 +31,14 @@ except ImportError:  # container without hypothesis: deterministic fallback
     from repro.testing.proptest import given, settings, strategies as st
 
 from repro.core import (
-    OP_ADD_E, OP_ADD_V, OP_CON_E, OP_CON_V, OP_REM_E, OP_REM_V,
+    OP_ADD_E, OP_ADD_V, OP_REM_V,
     apply_ops, apply_ops_fast, make_graph, make_op_batch, multi_bfs,
 )
 from repro.core import partition
 from repro.core.distributed import make_graph_mesh
+from repro.testing.schedules import batch_lists_strategy, batch_strategy
 
-KEYS = st.integers(min_value=0, max_value=5)   # tiny space => many collisions
-OPC = st.sampled_from([OP_ADD_V, OP_REM_V, OP_CON_V, OP_ADD_E, OP_REM_E, OP_CON_E])
-OP = st.tuples(OPC, KEYS, KEYS, st.sampled_from([-1, -1, -1, 0, 1, 2]))
-BATCHES = st.lists(st.lists(OP, min_size=1, max_size=10), min_size=1, max_size=4)
+BATCHES = batch_lists_strategy(st)   # tiny key space => many collisions
 CAP = 32
 
 
@@ -88,7 +88,7 @@ def test_cas_lane_observes_earlier_remove_vertex_bump():
 
 
 @settings(max_examples=15, deadline=None)
-@given(st.lists(OP, min_size=1, max_size=16))
+@given(batch_strategy(st, max_size=16))
 def test_fast_engine_bitwise_under_table_full(ops):
     """Capacity 6 < distinct keys: the overflow fallback must stay bit-exact
     through R_TABLE_FULL results."""
@@ -117,7 +117,7 @@ def test_sharded_engine_bitwise_equals_dense(op_lists):
 
 
 @settings(max_examples=12, deadline=None)
-@given(st.lists(OP, min_size=1, max_size=20),
+@given(batch_strategy(st, max_size=20),
        st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5)),
                 min_size=1, max_size=4))
 def test_sharded_multi_bfs_bitwise_equals_dense(ops, pairs):
@@ -139,7 +139,7 @@ def test_sharded_multi_bfs_bitwise_equals_dense(ops, pairs):
 
 
 @settings(max_examples=8, deadline=None)
-@given(st.lists(OP, min_size=1, max_size=20),
+@given(batch_strategy(st, max_size=20),
        st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5)),
                 min_size=1, max_size=3))
 def test_sharded_getpaths_session_equals_dense(ops, pairs):

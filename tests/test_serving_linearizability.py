@@ -1,0 +1,209 @@
+"""Serving-scale linearizability: N-client schedules through the ingest pool.
+
+The paper claims every graph operation is linearizable under true
+concurrency; PR 6 exercises that claim at serving scale (DESIGN.md §12):
+client batches with colliding entity IDs are admitted concurrently
+(conflict-detected, sorted-entity-lock, coalesced into fused applies) while
+reads hit published snapshot epochs. Every explored schedule must satisfy
+``repro.testing.schedules.check_trace_linearizable``:
+
+  * the final state is BIT-identical to the pool's claimed serial order of
+    the client batches replayed through the sequential reference engine;
+  * every delivered result code matches the sequential oracle in that order;
+  * every read is explained by the linearization prefix at its epoch;
+  * batches fused into one round commute (any permutation is an equally
+    valid serial order).
+
+Failures minimize deterministically: ``shrink_schedule`` deletes steps and
+lanes while the failure reproduces, so a falsified property surfaces as a
+readable counterexample schedule, not a 40-step transcript.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from repro.testing.proptest import given, settings, strategies as st
+
+from repro.core import OP_ADD_E, OP_ADD_V
+from repro.core.distributed import make_graph_mesh
+from repro.testing import schedules as sch
+
+CAP = 32
+# conflict-rate sweep: disjoint footprints (maximal coalescing) through
+# all-hot-keys (maximal contention, the interesting failure modes)
+RATES = (0.0, 0.3, 0.7, 1.0)
+
+
+def _run_with_shrink(schedule: sch.Schedule, **run_kw):
+    """Check a schedule; on failure, shrink deterministically and raise the
+    minimized counterexample (the suite's readable-failure contract)."""
+    try:
+        return sch.run_and_check(schedule, **run_kw)
+    except AssertionError as err:
+
+        def fails(candidate: sch.Schedule) -> bool:
+            try:
+                sch.run_and_check(candidate, **run_kw)
+                return False
+            except AssertionError:
+                return True
+
+        small = sch.shrink_schedule(schedule, fails)
+        raise AssertionError(
+            "linearizability violated; minimized schedule:\n"
+            f"{small.pretty()}\noriginal failure: {err}") from err
+
+
+def _schedule_for_seed(seed: int, *, clients=3, batches_per_client=2,
+                       max_lanes=5) -> sch.Schedule:
+    rng = random.Random(seed)
+    programs = sch.gen_client_programs(
+        rng, clients=clients, batches_per_client=batches_per_client,
+        max_lanes=max_lanes, conflict_rate=RATES[seed % len(RATES)])
+    return sch.random_schedule(rng, programs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_multiclient_schedules_linearizable_dense(seed):
+    _run_with_shrink(_schedule_for_seed(seed), capacity=CAP)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_multiclient_schedules_linearizable_sharded(seed):
+    mesh = make_graph_mesh()
+    _run_with_shrink(_schedule_for_seed(seed), capacity=CAP, mesh=mesh)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_small_capacity_schedules_exercise_autogrow(seed):
+    """Capacity 6 < the key space: fused rounds hit R_TABLE_FULL and take
+    the grow-and-replay path; the grown execution must STILL be bit-
+    identical to its serial order (which grows at the same points)."""
+    trace = _run_with_shrink(_schedule_for_seed(seed), capacity=6)
+    assert trace.pool._head.capacity >= 6
+
+
+def test_enumerated_interleavings_two_clients():
+    """EXACT exploration: every merge order of two 2-batch client programs
+    (hot shared keys) is executed and checked — the enumerated complement
+    to the randomized sweep."""
+    rng = random.Random(1234)
+    programs = sch.gen_client_programs(
+        rng, clients=2, batches_per_client=2, max_lanes=4, conflict_rate=0.8)
+    n = 0
+    for schedule in sch.enumerate_interleavings(programs, limit=16):
+        _run_with_shrink(schedule, capacity=CAP)
+        n += 1
+    assert n == 6   # 4!/(2!*2!) merge orders, fully enumerated
+
+
+def test_disjoint_clients_coalesce_into_one_fused_call():
+    """conflict_rate=0 ==> pairwise entity-disjoint batches: one pump must
+    admit every client in a single fused apply (and the trace still passes
+    the full linearizability check, including commutation)."""
+    programs = {f"c{i}": [[(OP_ADD_V, 10 * i + 1, -1, -1),
+                           (OP_ADD_V, 10 * i + 2, -1, -1),
+                           (OP_ADD_E, 10 * i + 1, 10 * i + 2, -1)]]
+                for i in range(4)}
+    steps = [("submit", c, programs[c][0]) for c in sorted(programs)]
+    steps += [("pump",), ("read", [(1, 2), (11, 12), (21, 1)])]
+    trace = sch.run_and_check(sch.Schedule(steps), capacity=CAP)
+    assert trace.pool.stats.fused_calls == 1
+    assert trace.pool.stats.coalesce_max == 4
+    assert trace.pool.stats.retries == 0
+    groups = sch.fused_groups(trace)
+    assert [len(g) for g in groups] == [4]
+    # the read observed the fully-applied epoch
+    assert trace.reads[0].results[0] == (True, [1, 2])
+    assert trace.reads[0].results[2] == (False, [])
+
+
+def test_colliding_clients_serialize_with_retries():
+    """All clients hammer the same two entities: admission must serialize
+    them (one batch per round) and count the conflict losses as retries."""
+    programs = {f"c{i}": [[(OP_ADD_V, 0, -1, -1), (OP_ADD_E, 0, 1, -1)]]
+                for i in range(3)}
+    steps = [("submit", c, programs[c][0]) for c in sorted(programs)]
+    steps += [("pump",), ("pump",), ("pump",)]
+    trace = sch.run_and_check(sch.Schedule(steps), capacity=CAP)
+    assert trace.pool.stats.fused_calls == 3       # one round each
+    assert trace.pool.stats.coalesce_max == 1
+    assert trace.pool.stats.retries >= 3           # c1+c2 lost round 1, c2 round 2
+
+
+def test_reads_observe_intermediate_epochs_not_queue():
+    """A read between rounds sees the last PUBLISHED epoch — batches still
+    queued are invisible (the double-buffer contract: readers never wait
+    on, or observe, a round mid-admission)."""
+    steps = [
+        ("submit", "a", [(OP_ADD_V, 1, -1, -1), (OP_ADD_V, 2, -1, -1),
+                         (OP_ADD_E, 1, 2, -1)]),
+        ("pump",),
+        ("read", [(1, 2)]),
+        ("submit", "b", [(OP_ADD_E, 2, 1, -1)]),
+        ("read", [(2, 1)]),              # b is queued, NOT applied
+        ("pump",),
+        ("read", [(2, 1)]),
+    ]
+    trace = sch.run_and_check(sch.Schedule(steps), capacity=CAP)
+    assert trace.reads[0].epoch == 1
+    assert trace.reads[0].results[0] == (True, [1, 2])
+    assert trace.reads[1].epoch == 1                 # still epoch 1
+    assert trace.reads[1].results[0] == (False, [])  # queued write invisible
+    assert trace.reads[2].epoch == 2
+    assert trace.reads[2].results[0] == (True, [2, 1])
+
+
+def test_shrink_minimizes_to_readable_counterexample():
+    """The deterministic shrinker reduces a 20+-step schedule to the single
+    step a (synthetic) failure predicate needs — pinning that real failures
+    arrive minimized, and that shrinking is deterministic for a fixed
+    input."""
+    rng = random.Random(99)
+    programs = sch.gen_client_programs(rng, clients=3, batches_per_client=3,
+                                       conflict_rate=0.5)
+    schedule = sch.random_schedule(rng, programs)
+    assert len(schedule.steps) > 8
+
+    def fails(s: sch.Schedule) -> bool:   # "bug": any AddE lane by client c1
+        return any(step[0] == "submit" and step[1] == "c1"
+                   and any(op[0] == OP_ADD_E for op in step[2])
+                   for step in s.steps)
+
+    assert fails(schedule)
+    small = sch.shrink_schedule(schedule, fails)
+    small2 = sch.shrink_schedule(schedule, fails)
+    assert [s for s in small.steps] == [s for s in small2.steps]  # deterministic
+    assert len(small.steps) == 1
+    step = small.steps[0]
+    assert step[0] == "submit" and step[1] == "c1" and len(step[2]) == 1
+    assert step[2][0][0] == OP_ADD_E
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_large_schedules_linearizable_dense_slow(seed):
+    """5 clients x 4 batches, bigger lanes — the serving-tests CI job's
+    deep exploration (kept out of default tier-1 by the slow marker)."""
+    _run_with_shrink(
+        _schedule_for_seed(seed, clients=5, batches_per_client=4,
+                           max_lanes=8),
+        capacity=CAP)
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_large_schedules_linearizable_sharded_slow(seed):
+    mesh = make_graph_mesh()
+    _run_with_shrink(
+        _schedule_for_seed(seed, clients=4, batches_per_client=3,
+                           max_lanes=6),
+        capacity=CAP, mesh=mesh)

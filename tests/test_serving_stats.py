@@ -1,0 +1,233 @@
+"""Regression pins for the multi-tenant admission observability (DESIGN.md §12).
+
+The new ``ServeStats``/``IngestStats`` fields are CONTRACT, not decoration:
+dashboards and the serving benchmark read them, so their values on a
+scripted workload are pinned exactly — a refactor that silently changes
+what "retries" or "coalesce_max" counts fails here, not in production.
+
+The scripted 3-client workload: A and B are entity-disjoint (coalesce into
+one fused apply); C collides with both (loses round 1, applies alone in
+round 2). A fake deterministic clock makes the wait-time accounting exact.
+Also pinned: the R_TABLE_FULL auto-grow replay path (tests/test_grow.py)
+now RACING a second client fused into the same round, and ``index_tick``
+running between admission rounds (the index is an accelerator, never a
+consistency dependency — queued batches are invisible to it).
+"""
+import itertools
+
+import numpy as np
+
+from repro.core import (
+    OP_ADD_E, OP_ADD_V, R_EDGE_ADDED, R_TRUE,
+)
+from repro.core.distributed import make_graph_mesh
+from repro.runtime.serve_loop import GraphCoServer
+
+A_OPS = [(OP_ADD_V, 1), (OP_ADD_V, 2), (OP_ADD_E, 1, 2)]        # {1, 2}
+B_OPS = [(OP_ADD_V, 11), (OP_ADD_V, 12), (OP_ADD_E, 11, 12)]    # {11, 12}
+C_OPS = [(OP_ADD_V, 5), (OP_ADD_E, 1, 12)]                      # {5, 1, 12}
+
+
+def _fake_clock():
+    """Deterministic monotonic clock: 0.0, 1.0, 2.0, ... per call."""
+    counter = itertools.count()
+    return lambda: float(next(counter))
+
+
+def test_scripted_three_client_stats_pinned():
+    """Every IngestStats field on the scripted A/B-coalesce, C-retry run.
+
+    Clock calls land at: submit A (t=0), submit B (t=1), submit C (t=2),
+    round 1 publish (t=3: A waited 3, B waited 2), round 2 publish (t=4:
+    C waited 2). So wait_s == 7.0 and wait_max_s == 3.0, exactly.
+    """
+    srv = GraphCoServer(capacity=32, ingest=True)
+    srv.pool.clock = _fake_clock()
+    ta = srv.submit_client("A", A_OPS)
+    tb = srv.submit_client("B", B_OPS)
+    tc = srv.submit_client("C", C_OPS)
+
+    assert srv.pump() == 2          # A + B coalesce; C lost conflict detection
+    assert tc.status == "queued" and tc.retries == 1
+    assert srv.pump() == 1          # C alone
+    assert srv.pump() == 0          # queue drained: a pump is a no-op
+
+    s = srv.pool.stats
+    assert s.submitted == 3
+    assert s.applied == 3
+    assert s.aborted == 0
+    assert s.fused_calls == 2
+    assert s.coalesced_batches == 3
+    assert s.coalesce_max == 2
+    assert s.coalesce_lanes_max == 6      # A(3) + B(3) lanes, pre-padding
+    assert s.retries == 1
+    assert s.queue_depth_max == 3
+    assert s.queue_depth == 0
+    assert s.epochs == 2
+    assert s.grow_events == 0
+    assert s.wait_s == 7.0
+    assert s.wait_max_s == 3.0
+
+    assert (ta.status, tb.status, tc.status) == ("applied",) * 3
+    assert (ta.epoch, tb.epoch, tc.epoch) == (1, 1, 2)
+    assert (ta.wait_s, tb.wait_s, tc.wait_s) == (3.0, 2.0, 2.0)
+    assert srv.pool.linearization == [ta.batch_id, tb.batch_id, tc.batch_id]
+
+    # the admitted history really happened: C's edge bridges A into B
+    out, _ = srv.get_paths([(1, 12), (5, 5), (12, 1)])
+    assert out[0] == (True, [1, 12])
+    assert out[1] == (True, [5])
+    assert out[2] == (False, [])
+
+
+def test_serve_stats_surface_three_clients():
+    """The same scripted workload driven through ``serve(clients=...)``:
+    the ServeStats ingest_* fields must carry the pool's pinned values."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.runtime.serve_loop import serve
+
+    cfg = get_config("olmo-1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.zeros((1, 8), np.int32)
+
+    srv = GraphCoServer(capacity=32, ingest=True)
+
+    def clients(step):
+        if step == 0:
+            return [("A", A_OPS), ("B", B_OPS), ("C", C_OPS)]
+        return []
+
+    out, stats = serve(model, params, prompts, max_new_tokens=4,
+                       cache_len=16, graph=srv, clients=clients)
+    assert out.shape == (1, 4)
+    # step 0's pump admits A+B (C conflicts); step 1's pump admits C;
+    # steps 2-3 pump an empty queue; the final flush finds nothing left
+    assert stats.ingest_batches == 3
+    assert stats.ingest_fused_calls == 2
+    assert stats.ingest_coalesce_max == 2
+    assert stats.ingest_retries == 1
+    assert stats.ingest_queue_depth_max == 3
+    assert stats.ingest_epochs == 2
+    assert stats.graph_ops == len(A_OPS) + len(B_OPS) + len(C_OPS)
+    assert 0.0 <= stats.ingest_wait_max_s <= stats.ingest_wait_s
+    assert stats.grow_events == 0
+    out_paths, _ = srv.get_paths([(1, 12)])
+    assert out_paths[0] == (True, [1, 12])
+
+
+def test_serve_rejects_clients_without_ingest_pool():
+    import pytest
+
+    from repro.runtime.serve_loop import serve
+
+    srv = GraphCoServer(capacity=8)          # no pool
+    with pytest.raises(RuntimeError, match="ingest=True"):
+        serve(None, None, np.zeros((1, 4), np.int32), max_new_tokens=1,
+              cache_len=8, graph=srv, clients=lambda i: [])
+
+
+def test_autogrow_replay_races_second_client():
+    """R_TABLE_FULL auto-grow (tests/test_grow.py) under admission: client A
+    fills the capacity-4 table; disjoint client B is fused into the SAME
+    round, so the fused apply starves, grows, and replays BOTH batches on
+    the grown pre-round state. Every lane must come back clean, the growth
+    must be counted once, and exactly one epoch publishes (the starved
+    attempt never surfaces)."""
+    srv = GraphCoServer(capacity=4, ingest=True)
+    ta = srv.submit_client("A", [(OP_ADD_V, k) for k in range(4)])
+    tb = srv.submit_client("B", [(OP_ADD_V, 8), (OP_ADD_V, 9),
+                                 (OP_ADD_E, 8, 9)])
+    assert srv.pump() == 2                    # one fused round, grown inside
+
+    s = srv.pool.stats
+    assert s.grow_events == 1
+    assert srv.grow_events == 1               # surfaced via on_grow
+    assert s.fused_calls == 1                 # the grow replay is NOT a new call
+    assert s.coalesce_max == 2
+    assert s.epochs == 1
+    assert s.retries == 0
+    assert srv.state.capacity == 8
+    assert [int(x) for x in ta.results] == [R_TRUE] * 4
+    assert [int(x) for x in tb.results] == [R_TRUE, R_TRUE, R_EDGE_ADDED]
+    assert (ta.epoch, tb.epoch) == (1, 1)
+    out, _ = srv.get_paths([(8, 9), (0, 8)])
+    assert out[0] == (True, [8, 9])
+    assert out[1] == (False, [])
+
+
+def test_autogrow_replay_races_second_client_sharded():
+    mesh = make_graph_mesh()
+    size = int(mesh.shape["rows"])
+    cap0 = max(4, size)                       # a shard multiple, and full-able
+    srv = GraphCoServer(capacity=cap0, mesh=mesh, ingest=True)
+    ta = srv.submit_client("A", [(OP_ADD_V, k) for k in range(cap0)])
+    tb = srv.submit_client("B", [(OP_ADD_V, cap0 + 4), (OP_ADD_V, cap0 + 5),
+                                 (OP_ADD_E, cap0 + 4, cap0 + 5)])
+    assert srv.pump() == 2
+    assert srv.pool.stats.grow_events >= 1
+    assert srv.state.capacity >= cap0 + 2
+    assert srv.state.capacity % size == 0
+    assert [int(x) for x in ta.results] == [R_TRUE] * cap0
+    assert [int(x) for x in tb.results] == [R_TRUE, R_TRUE, R_EDGE_ADDED]
+    out, _ = srv.get_paths([(cap0 + 4, cap0 + 5)])
+    assert out[0] == (True, [cap0 + 4, cap0 + 5])
+
+
+def test_index_tick_tolerates_concurrent_admission():
+    """index_tick() interleaved with admission rounds: the index covers the
+    last PUBLISHED epoch only — queued batches are invisible to it, a pump
+    makes it stale (queries fall back, still correct), the next tick
+    re-freshens it. The index never blocks or corrupts admission."""
+    srv = GraphCoServer(capacity=32, ingest=True, index=True)
+    srv.submit_client("A", A_OPS)
+    srv.submit_client("B", B_OPS)
+    assert srv.pump() == 2
+    assert srv.index_tick() is True           # first build, on epoch 1
+    res = srv.get_reach([(1, 2), (11, 12), (1, 12)])
+    assert res.found == [True, True, False]
+    assert res.from_index == 3 and res.fellback == 0
+
+    # a QUEUED batch must be invisible to both the index and its freshness
+    srv.submit_client("C", [(OP_ADD_E, 2, 11)])
+    assert srv.index_tick() is False          # published epoch unchanged
+    res = srv.get_reach([(2, 11)])
+    assert res.found == [False] and res.from_index == 1
+
+    assert srv.pump() == 1                    # C lands; index now stale
+    res = srv.get_reach([(2, 11), (1, 12)])
+    assert res.found == [True, True]          # correct via BFS fallback
+    assert res.from_index == 0 and res.fellback == 2
+
+    assert srv.index_tick() is True           # refresh onto epoch 2
+    res = srv.get_reach([(1, 12)])
+    assert res.found == [True] and res.from_index == 1
+    assert srv.index_tick() is False          # fresh and quiescent: no-op
+
+
+def test_pool_owned_state_rejects_direct_assignment():
+    """With the pool attached, ``server.state = ...`` would bypass the
+    linearization log and the epoch buffer — it must refuse."""
+    import pytest
+
+    from repro.core import make_graph
+
+    srv = GraphCoServer(capacity=8, ingest=True)
+    with pytest.raises(AttributeError, match="pool-owned"):
+        srv.state = make_graph(8)
+
+
+def test_direct_submit_surface_routes_through_pool():
+    """``submit()`` (the single-tenant surface) on an ingest server shares
+    the pool's linearization log with concurrent clients."""
+    srv = GraphCoServer(capacity=16, ingest=True)
+    tb = srv.submit_client("B", B_OPS)        # queued ahead of the direct call
+    res = srv.submit(A_OPS)                   # enqueues + flushes everything
+    assert [int(x) for x in res] == [R_TRUE, R_TRUE, R_EDGE_ADDED]
+    assert tb.status == "applied"             # the flush drained B too
+    assert srv.pool.stats.applied == 2
+    out, _ = srv.get_paths([(1, 2), (11, 12)])
+    assert out == [(True, [1, 2]), (True, [11, 12])]
