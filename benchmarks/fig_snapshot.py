@@ -1,0 +1,152 @@
+"""Snapshot figure: wait-free epoch resolution vs the retry loop under a
+100%-mutation adversary (DESIGN.md §13).
+
+The workload is the §3.5 starvation adversary at maximum rate: EVERY state
+fetch the query session performs first commits (and publishes) a mutation
+inside the query's dependency set — an edge toggle on the source row — so
+no two consecutive collects can ever match. Under that load:
+
+  * ``retry``    — the pre-ring bounded loop: burns its whole round budget
+                   and returns NOTHING (answered=0; the unbounded paper
+                   loop would simply never return, which is why the budget
+                   exists). Its per-session latency is the price of giving
+                   up; its round count is pinned in the BENCH record.
+  * ``waitfree`` — ``on_conflict="epoch"``: same budget, then ONE extra
+                   collect against the pinned published epoch answers every
+                   query exactly (answered=q).
+
+Sweep: Q ∈ {1, 4, 16} queries per session. Rows use the shared long-format
+schema (``q`` = queries per session; ``steps`` = queries ANSWERED, so
+steps_per_s is useful-answer throughput — 0 for the starved retry loop by
+construction, which is the figure's point). ``speedup_vs_baseline`` is
+retry_latency / engine_latency per-session (latency ratio, not answer
+throughput, so the retry baseline stays 1.0 and finite).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import OP_ADD_E, OP_ADD_V, OP_REM_E, get_paths_session, make_graph
+from repro.runtime.ingest import IngestPool
+
+QS = (1, 4, 16)
+CHAIN = 12
+CAP = 64
+BUDGET = 8         # double-collect rounds before on_conflict takes over
+
+
+def _make_pool() -> IngestPool:
+    pool = IngestPool(make_graph(CAP), retain_epochs=64)
+    for k in range(CHAIN):
+        pool.submit("seed", [(OP_ADD_V, k)])
+    for k in range(CHAIN - 1):
+        pool.submit("seed", [(OP_ADD_E, k, k + 1)])
+    pool.submit("seed", [(OP_ADD_V, 999)])   # dedicated toggle sink
+    pool.flush()
+    return pool
+
+
+def _hostile_fetch(pool: IngestPool):
+    """Publish an edge toggle on vertex 0's row before every fetch: the
+    source ecnt moves between any two collects, so they can never match.
+    Toggling (instead of adding fresh vertices) keeps capacity fixed —
+    the measurement never crosses a grow/recompile."""
+    flip = [0]
+
+    def fetch():
+        op = OP_ADD_E if flip[0] % 2 == 0 else OP_REM_E
+        flip[0] += 1
+        pool.submit("_adv", [(op, 0, 999)])
+        pool.flush()
+        return pool.snapshot()
+
+    return fetch
+
+
+def _session(pool, pairs, mode):
+    st: dict = {}
+    out, rounds = get_paths_session(
+        _hostile_fetch(pool), pairs, max_rounds=BUDGET, on_conflict=mode,
+        fetch_epoch=pool.snapshot_epoch, stats=st)
+    jax.block_until_ready(pool.snapshot().adj_packed)
+    answered = sum(1 for f, _ in out if f) if mode == "epoch" else 0
+    assert st["starved"], "adversary failed to starve the session"
+    return rounds, answered
+
+
+def _time(fn, reps):
+    fn()  # warmup: jit the collect shapes this workload produces
+    t0 = time.perf_counter()
+    last = None
+    for _ in range(reps):
+        last = fn()
+    return (time.perf_counter() - t0) / reps, last
+
+
+def run_sweep(*, reps=3, quick=False):
+    rows = []
+    for q in QS[:2] if quick else QS:
+        pool = _make_pool()
+        pairs = [(i % (CHAIN - 1), CHAIN - 1) for i in range(q)]
+        t_retry, (r_retry, _) = _time(lambda: _session(pool, pairs, "retry"),
+                                      reps)
+        t_wf, (r_wf, answered) = _time(lambda: _session(pool, pairs, "epoch"),
+                                       reps)
+        assert answered == q            # the pinned epoch answers every pair
+        rows.append({
+            "q": q,
+            "retry_s": t_retry,
+            "waitfree_s": t_wf,
+            "retry_rounds": r_retry,
+            "waitfree_rounds": r_wf,
+            "answered": answered,
+        })
+    return rows
+
+
+def json_rows(rows, figure="snapshot"):
+    out = []
+    for r in rows:
+        for eng, sec, rounds, answered in (
+                ("retry", r["retry_s"], r["retry_rounds"], 0),
+                ("waitfree", r["waitfree_s"], r["waitfree_rounds"],
+                 r["answered"])):
+            out.append({
+                "figure": figure,
+                "q": r["q"],
+                "engine": eng,
+                "seconds": sec,
+                "steps": answered,          # queries usefully answered
+                "steps_per_s": answered / sec,
+                "speedup_vs_baseline": r["retry_s"] / sec,
+                "rounds": rounds,
+                "budget": BUDGET,
+            })
+    return out
+
+
+def main(quick=False, rows_out=None):
+    out = []
+    print(f'{"q":>3s} {"engine":>9s} {"ms/session":>11s} {"rounds":>7s} '
+          f'{"answered":>9s} {"lat_ratio":>10s}')
+    rows = run_sweep(quick=quick)
+    if rows_out is not None:
+        rows_out.extend(json_rows(rows))
+    for r in rows:
+        for eng in ("retry", "waitfree"):
+            sec = r[f"{eng}_s"]
+            rounds = r[f"{eng}_rounds"]
+            answered = r["answered"] if eng == "waitfree" else 0
+            ratio = r["retry_s"] / sec
+            print(f'{r["q"]:3d} {eng:>9s} {sec*1e3:11.2f} {rounds:7d} '
+                  f'{answered:9d} {ratio:9.2f}x')
+            out.append(f'snapshot/{eng}/q{r["q"]},{sec*1e6:.1f},'
+                       f'rounds={rounds};answered={answered};'
+                       f'lat_ratio_vs_retry={ratio:.2f}')
+    return out
+
+
+if __name__ == "__main__":
+    main()

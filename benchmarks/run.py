@@ -41,6 +41,9 @@ FIGURES = (
     ("serving", "fig_serving",
      "Serving admission — coalesced multi-tenant ingest vs serial baseline "
      "(DESIGN.md §12)"),
+    ("snapshot", "fig_snapshot",
+     "Wait-free snapshot — epoch-ring resolution vs retry loop under a "
+     "100%-mutation adversary (DESIGN.md §13)"),
 )
 
 REQUIRED_KEYS = {

@@ -6,6 +6,7 @@ Public surface:
   bfs, multi_bfs, extract_path                            (bfs.py)
   collect, compare_collects, get_path, get_path_session,
   interleaved_getpath                                     (snapshot.py)
+  EpochRing, EpochEvictedError, EpochDiff                 (epochs.py)
   ShardedGraphState, shard_state, sharded engines         (partition.py)
   row-sharded collective engines (dbfs, dapply_ops, ...)  (distributed.py)
   GraphOracle                                             (oracle.py)
@@ -85,6 +86,12 @@ from repro.core.snapshot import (  # noqa: F401
     get_path_session,
     get_paths_session,
     interleaved_getpath,
+)
+from repro.core.epochs import (  # noqa: F401
+    EpochDiff,
+    EpochEvictedError,
+    EpochRecord,
+    EpochRing,
 )
 from repro.core.oracle import GraphOracle  # noqa: F401
 from repro.core.partition import ShardedGraphState, shard_state, unshard  # noqa: F401

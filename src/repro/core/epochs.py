@@ -1,0 +1,271 @@
+"""Wait-free epoch ring: retained snapshot history as packed deltas
+(DESIGN.md §13).
+
+The ingest pool (runtime/ingest.py) publishes one immutable functional
+snapshot per admission round behind an atomic slot flip — epochs 0, 1, 2,
+... in publish order. The successor paper ("Non-blocking Dynamic Unbounded
+Graphs with Wait-Free Snapshot", arXiv 2310.02380) makes the collect side
+wait-free by letting a reader that keeps losing the double-collect race
+resolve against a *retained* consistent epoch instead of retrying forever.
+This module reifies that retention: a bounded ring of
+
+    (epoch, version_vector, packed row deltas)
+
+records, one per published epoch, kept host-side as numpy (the device
+state stays the single O(V^2/32) packed representation; the ring costs
+O(touched_rows * W) per epoch plus one O(V) version vector).
+
+Deltas are XOR patches. For every row whose bytes changed between epoch
+e-1 and e the record stores ``row_index`` plus the XOR of the six field
+rows (vkey/valive/vver/ecnt scalars and the packed out-adjacency row).
+XOR is its own inverse, so the SAME record replays the transition in
+either direction: ``state_at(e)`` starts from the newest published state
+and XORs records backward until it lands on e — bit-identical history
+reconstruction, proven by tests/test_epochs.py against the actually
+published states. The in-adjacency is not stored: it is re-derived as the
+packed transpose at reconstruction time (the DESIGN.md §11 transpose
+invariant makes that lossless).
+
+Three query surfaces ride on the ring (DESIGN.md §13):
+
+  * **wait-free resolution** — ``snapshot.get_paths_session(
+    on_conflict="epoch")`` pins its answer to one retained epoch after a
+    bounded retry budget instead of spinning;
+  * **time-travel reachability** — "was u→w reachable at epoch e?" via
+    ``state_at(e)`` (a frozen state answers with a single collect);
+  * **epoch diff** — "which rows changed between e1 and e2?" via the
+    union of the retained records' row sets.
+
+Capacity growth is a retention barrier: a ``grow`` changes every row's
+shape, so the ring resets at the grown epoch and earlier epochs report
+``EpochEvictedError`` — the same typed signal an epoch past the bounded
+retention window produces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.graph import GraphState, pack_transpose
+
+# The six per-row fields a delta record patches, in GraphState order
+# (adj_in_packed is derived, never stored; see module docstring).
+_ROW_FIELDS = ("vkey", "valive", "vver", "ecnt", "adj_packed")
+
+
+class EpochEvictedError(LookupError):
+    """Typed miss for a time-travel/diff query outside the retained window.
+
+    Carries the requested epoch and the window that was available so
+    servers can surface a structured "epoch evicted" result instead of a
+    bare failure (DESIGN.md §13).
+    """
+
+    def __init__(self, epoch: int, window: tuple[int, int]):
+        self.epoch = int(epoch)
+        self.window = (int(window[0]), int(window[1]))
+        super().__init__(
+            f"epoch {epoch} outside retained window "
+            f"[{window[0]}, {window[1]}]")
+
+
+@dataclass(frozen=True)
+class EpochRecord:
+    """One retained epoch: its version vector + the XOR patch from e-1."""
+
+    epoch: int
+    capacity: int
+    versions: np.ndarray      # int32[V, 2] — (ecnt, vver) AT this epoch
+    rows: np.ndarray          # int32[K] — slots whose bytes changed
+    vkey_xor: np.ndarray      # int32[K]
+    valive_xor: np.ndarray    # bool[K]
+    vver_xor: np.ndarray      # int32[K]
+    ecnt_xor: np.ndarray      # int32[K]
+    adj_xor: np.ndarray       # uint32[K, W] — packed out-adjacency rows
+
+
+@dataclass(frozen=True)
+class EpochDiff:
+    """Epoch-diff answer: the rows touched between two retained epochs."""
+
+    e_from: int
+    e_to: int
+    rows: np.ndarray          # int32[K] — union of touched slots
+    keys_before: np.ndarray   # int32[K] — vkey at e_from (-1 = empty slot)
+    keys_after: np.ndarray    # int32[K] — vkey at e_to
+
+
+def _to_np(state) -> dict[str, np.ndarray]:
+    """Host copies of the patchable fields (gathers a sharded state)."""
+    return {
+        "vkey": np.asarray(state.vkey),
+        "valive": np.asarray(state.valive),
+        "vver": np.asarray(state.vver),
+        "ecnt": np.asarray(state.ecnt),
+        "adj_packed": np.asarray(state.adj_packed),
+    }
+
+
+def _xor(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.bitwise_xor(a, b)
+
+
+class EpochRing:
+    """Bounded retention of published epochs as backward-replayable deltas.
+
+    ``retain`` bounds the number of *addressable* epochs (records kept =
+    retain - 1 plus the newest full state): after publishing epoch N the
+    window is ``[max(reset_epoch, N - retain + 1), N]``. Push/reads are
+    driven by the ingest pool under its admission mutex; the reconstruction
+    surfaces only touch immutable records, so readers never block writers
+    (DESIGN.md §13).
+    """
+
+    def __init__(self, retain: int = 64):
+        if retain < 1:
+            raise ValueError(f"retain must be >= 1, got {retain}")
+        self.retain = int(retain)
+        self.evicted = 0              # cumulative records dropped (stats)
+        self._records: list[EpochRecord] = []
+        self._latest: dict[str, np.ndarray] | None = None
+        self._newest = 0
+
+    # -- maintenance (writer side) ------------------------------------------
+    def reset(self, epoch: int, state) -> None:
+        """Restart retention at ``epoch`` (initial state or a grow barrier:
+        a capacity change invalidates every row-shaped delta)."""
+        self.evicted += len(self._records)
+        self._records = []
+        self._latest = _to_np(state)
+        self._newest = int(epoch)
+
+    def push(self, epoch: int, state) -> None:
+        """Record the transition newest -> ``epoch`` (consecutive publishes)."""
+        f = _to_np(state)
+        if (self._latest is None
+                or f["vkey"].shape[0] != self._latest["vkey"].shape[0]):
+            self.reset(epoch, state)
+            return
+        if epoch != self._newest + 1:
+            raise ValueError(
+                f"non-consecutive publish: {self._newest} -> {epoch}")
+        prev = self._latest
+        scalar_changed = np.zeros(f["vkey"].shape[0], dtype=bool)
+        for name in ("vkey", "valive", "vver", "ecnt"):
+            scalar_changed |= prev[name] != f[name]
+        adj_changed = (prev["adj_packed"] != f["adj_packed"]).any(axis=1)
+        rows = np.nonzero(scalar_changed | adj_changed)[0].astype(np.int32)
+        rec = EpochRecord(
+            epoch=int(epoch),
+            capacity=int(f["vkey"].shape[0]),
+            versions=np.stack([f["ecnt"], f["vver"]], axis=-1),
+            rows=rows,
+            vkey_xor=_xor(prev["vkey"][rows], f["vkey"][rows]),
+            valive_xor=_xor(prev["valive"][rows], f["valive"][rows]),
+            vver_xor=_xor(prev["vver"][rows], f["vver"][rows]),
+            ecnt_xor=_xor(prev["ecnt"][rows], f["ecnt"][rows]),
+            adj_xor=_xor(prev["adj_packed"][rows], f["adj_packed"][rows]),
+        )
+        self._records.append(rec)
+        self._latest = f
+        self._newest = int(epoch)
+        while len(self._records) > self.retain - 1:
+            self._records.pop(0)
+            self.evicted += 1
+
+    # -- read side ----------------------------------------------------------
+    def window(self) -> tuple[int, int]:
+        """(oldest addressable epoch, newest published epoch), inclusive."""
+        return self._newest - len(self._records), self._newest
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def contains(self, epoch: int) -> bool:
+        lo, hi = self.window()
+        return lo <= int(epoch) <= hi
+
+    def _fields_at(self, epoch: int) -> dict[str, np.ndarray]:
+        lo, hi = self.window()
+        if not lo <= int(epoch) <= hi:
+            raise EpochEvictedError(epoch, (lo, hi))
+        cur = {k: v.copy() for k, v in self._latest.items()}
+        for rec in reversed(self._records):
+            if rec.epoch <= epoch:
+                break
+            r = rec.rows
+            cur["vkey"][r] = _xor(cur["vkey"][r], rec.vkey_xor)
+            cur["valive"][r] = _xor(cur["valive"][r], rec.valive_xor)
+            cur["vver"][r] = _xor(cur["vver"][r], rec.vver_xor)
+            cur["ecnt"][r] = _xor(cur["ecnt"][r], rec.ecnt_xor)
+            cur["adj_packed"][r] = _xor(cur["adj_packed"][r], rec.adj_xor)
+        return cur
+
+    def state_at(self, epoch: int) -> GraphState:
+        """Reconstruct the published state of ``epoch`` — bit-identical to
+        what ``IngestPool.snapshot()`` returned when that epoch was current
+        (tests/test_epochs.py pins this against retained real states).
+        Always a dense ``GraphState`` (time-travel queries are read-only;
+        a sharded pool's history reconstructs to the gathered dense form).
+        Raises ``EpochEvictedError`` outside the window."""
+        f = self._fields_at(epoch)
+        adj = jnp.asarray(f["adj_packed"])
+        return GraphState(
+            vkey=jnp.asarray(f["vkey"]),
+            valive=jnp.asarray(f["valive"]),
+            vver=jnp.asarray(f["vver"]),
+            ecnt=jnp.asarray(f["ecnt"]),
+            adj_packed=adj,
+            adj_in_packed=pack_transpose(adj, int(f["vkey"].shape[0])),
+        )
+
+    def versions_at(self, epoch: int) -> np.ndarray:
+        """(ecnt, vver) int32[V, 2] of a retained epoch (cheap: stored for
+        every record; reconstructed only for the window's oldest epoch)."""
+        lo, hi = self.window()
+        if not lo <= int(epoch) <= hi:
+            raise EpochEvictedError(epoch, (lo, hi))
+        for rec in self._records:
+            if rec.epoch == epoch:
+                return rec.versions
+        if epoch == hi:   # no records yet (fresh ring): newest == latest
+            f = self._latest
+        else:             # the window's oldest epoch precedes every record
+            f = self._fields_at(epoch)
+        return np.stack([f["ecnt"], f["vver"]], axis=-1)
+
+    def epoch_of_versions(self, versions, capacity: int) -> int | None:
+        """Newest retained epoch whose version vector equals ``versions``
+        (the index-stamp lookup of DESIGN.md §13), or None. Equal versions
+        imply a byte-identical graph (monotone counters — the §9 freshness
+        argument), so an index stamped with these versions answers queries
+        pinned to that epoch exactly."""
+        if self._latest is None or capacity != self._latest["vkey"].shape[0]:
+            return None
+        want = np.asarray(versions)
+        lo, hi = self.window()
+        for e in range(hi, lo - 1, -1):
+            if np.array_equal(self.versions_at(e), want):
+                return e
+        return None
+
+    def diff(self, e1: int, e2: int) -> EpochDiff:
+        """Rows (and their keys) that changed between two retained epochs.
+        Raises ``EpochEvictedError`` if either endpoint left the window."""
+        lo, hi = sorted((int(e1), int(e2)))
+        w = self.window()
+        for e in (lo, hi):
+            if not w[0] <= e <= w[1]:
+                raise EpochEvictedError(e, w)
+        touched: set[int] = set()
+        for rec in self._records:
+            if lo < rec.epoch <= hi:
+                touched.update(int(r) for r in rec.rows)
+        rows = np.asarray(sorted(touched), dtype=np.int32)
+        vk_lo = self._fields_at(lo)["vkey"]
+        vk_hi = self._fields_at(hi)["vkey"]
+        return EpochDiff(lo, hi, rows, vk_lo[rows], vk_hi[rows])

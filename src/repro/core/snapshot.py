@@ -18,7 +18,9 @@ Four surfaces:
   * ``collect`` / ``compare_collects`` / ``get_path``   — pure building blocks
   * ``get_path_session``      — host-level protocol against a live mutable
     state reference (the true concurrent setting; obstruction-free: completes
-    as soon as one round-trip sees no effective mutation)
+    as soon as one round-trip sees no effective mutation, and WAIT-FREE with
+    ``on_conflict="epoch"``: after a bounded retry budget the answer resolves
+    against one pinned published epoch instead of retrying, DESIGN.md §13)
   * ``collect_batch`` / ``get_paths_session`` — Q queries under ONE shared
     double collect, traversed by the fused multi-source BFS engine
     (DESIGN.md §7; ``engine="vmap"`` keeps the per-query reference path).
@@ -94,14 +96,19 @@ class PathResult(NamedTuple):
     length: jax.Array  # int32 — number of vertices on the path (0 if none)
     keys: jax.Array    # int32[V] — vertex keys along the path, -1 padded
     rounds: jax.Array  # int32 — collects performed (>=2 in concurrent surfaces)
+    starved: jax.Array = jnp.asarray(False)  # bool — double collect never
+    # matched within the retry budget; the answer (if found is meaningful)
+    # was resolved wait-free against one pinned epoch (DESIGN.md §13)
 
 
-def _materialize(state: GraphState, c: Collect, rounds) -> PathResult:
+def _materialize(state: GraphState, c: Collect, rounds,
+                 starved=False) -> PathResult:
     n, slots = extract_path(c.parent, c.src_slot, c.dst_slot)
     keys = jnp.where(slots >= 0, state.vkey[jnp.clip(slots, 0, state.capacity - 1)], -1)
     n = jnp.where(c.found, n, 0)
     keys = jnp.where(c.found, keys, -1)
-    return PathResult(c.found, n, keys.astype(jnp.int32), jnp.asarray(rounds, jnp.int32))
+    return PathResult(c.found, n, keys.astype(jnp.int32),
+                      jnp.asarray(rounds, jnp.int32), jnp.asarray(starved))
 
 
 def get_path(state: GraphState, k, l,
@@ -194,15 +201,54 @@ def compare_collect_batches(a, b) -> jax.Array:
     return jnp.all(per_q)
 
 
-def get_paths_session(fetch_state, pairs, *, max_rounds: int | None = None,
-                      backend: str | None = None, engine: str = "fused"):
-    """Multi-query obstruction-free GetPath: the double-collect loop runs
-    ONCE for the whole batch. Returns a list of (found, keys) per pair.
+def _materialize_batch(state, cur, pairs, rounds):
+    out = []
+    for qi in range(len(pairs)):
+        cq = jax.tree.map(lambda x: x[qi], cur)
+        pr = _materialize(state, cq, rounds)
+        keys = [int(x) for x in pr.keys[: int(pr.length)]] if bool(pr.found) else []
+        out.append((bool(pr.found), keys))
+    return out
+
+
+def _session_stats(stats, *, rounds, starved, resolved, epoch):
+    if stats is not None:
+        stats.update(rounds=rounds, starved=starved, resolved=resolved,
+                     epoch=epoch)
+
+
+def get_paths_session(fetch_state, pairs, *, max_rounds: int | None = 16,
+                      backend: str | None = None, engine: str = "fused",
+                      on_conflict: str = "retry", fetch_epoch=None,
+                      stats: dict | None = None):
+    """Multi-query GetPath: the double-collect loop runs ONCE for the whole
+    batch. Returns a list of (found, keys) per pair plus the round count.
 
     ``engine="fused"`` (default) drives every round through the fused
     multi-source BFS (one adjacency stream per superstep, DESIGN.md §7);
     ``engine="vmap"`` replays the reference per-query path.
+
+    ``max_rounds`` bounds the retry loop (default 16; ``None`` restores the
+    paper's unbounded obstruction-free loop, which a mutator committing
+    every round starves forever — the PR-6 liveness hole). What happens at
+    the budget is ``on_conflict`` (DESIGN.md §13):
+
+      "retry" — give up: every pair reports (False, []) and the caller
+                resubmits (the pre-ring capped-retry deviation);
+      "epoch" — resolve WAIT-FREE: one final fetch pins a single published
+                epoch — an immutable functional snapshot, so a single
+                collect over it is trivially consistent (the static-state
+                argument of ``get_path``) — and every answer linearizes at
+                that epoch's publish point. ``fetch_epoch`` (a callable
+                returning ``(epoch, state)``, e.g. the ingest pool's
+                ``snapshot_epoch``) tags the pin; without it the resolution
+                still terminates but the pinned epoch is unknown (None).
+
+    ``stats`` (optional dict) receives {"rounds", "starved", "resolved",
+    "epoch"} — the observability ServeStats aggregates.
     """
+    if on_conflict not in ("retry", "epoch"):
+        raise ValueError(f"unknown on_conflict mode {on_conflict!r}")
     ks = [p[0] for p in pairs]
     ls = [p[1] for p in pairs]
     state = fetch_state()
@@ -212,16 +258,29 @@ def get_paths_session(fetch_state, pairs, *, max_rounds: int | None = None,
         state = fetch_state()
         cur = collect_batch(state, ks, ls, backend=backend, engine=engine)
         rounds += 1
-        if bool(compare_collect_batches(prev, cur)):
-            out = []
-            for qi in range(len(pairs)):
-                cq = jax.tree.map(lambda x: x[qi], cur)
-                pr = _materialize(state, cq, rounds)
-                keys = [int(x) for x in pr.keys[: int(pr.length)]] if bool(pr.found) else []
-                out.append((bool(pr.found), keys))
-            return out, rounds
+        # a capacity grow between collects changes every row shape — by
+        # definition an effective mutation, never a match (comparing would
+        # be a shape error, not a False)
+        if (prev.versions.shape == cur.versions.shape
+                and bool(compare_collect_batches(prev, cur))):
+            _session_stats(stats, rounds=rounds, starved=False,
+                           resolved="match", epoch=None)
+            return _materialize_batch(state, cur, pairs, rounds), rounds
         prev = cur
         if max_rounds is not None and rounds >= max_rounds:
+            if on_conflict == "epoch":
+                if fetch_epoch is not None:
+                    epoch, state = fetch_epoch()
+                else:
+                    epoch, state = None, fetch_state()
+                cur = collect_batch(state, ks, ls, backend=backend,
+                                    engine=engine)
+                rounds += 1
+                _session_stats(stats, rounds=rounds, starved=True,
+                               resolved="epoch", epoch=epoch)
+                return _materialize_batch(state, cur, pairs, rounds), rounds
+            _session_stats(stats, rounds=rounds, starved=True,
+                           resolved="budget", epoch=None)
             return [(False, []) for _ in pairs], rounds
 
 
@@ -232,8 +291,11 @@ def get_path_session(
     fetch_state: Callable[[], GraphState],
     k: int,
     l: int,
-    max_rounds: int | None = None,
+    max_rounds: int | None = 16,
     backend: str | None = None,
+    *,
+    on_conflict: str = "retry",
+    fetch_epoch=None,
 ) -> PathResult:
     """The paper's GetPath/Scan against a live state reference.
 
@@ -243,10 +305,17 @@ def get_path_session(
     adversary model of §3.5).
 
     Obstruction-free: terminates at the first pair of consecutive collects
-    with no effective mutation in between. ``max_rounds=None`` loops forever
-    (the paper's semantics); a finite bound returns found=False, rounds=bound
-    and the caller resubmits (bounded-retry deviation, DESIGN.md §1).
+    with no effective mutation in between. ``max_rounds=None`` restores the
+    paper's unbounded loop (which a mutator committing every round starves
+    forever); the default bounded budget ends with ``on_conflict``
+    (DESIGN.md §13): "retry" returns found=False with ``starved=True`` (the
+    caller resubmits — bounded-retry deviation, DESIGN.md §1); "epoch"
+    resolves wait-free against one final pinned epoch fetch
+    (``fetch_epoch`` — see ``get_paths_session``) and returns that epoch's
+    answer with ``starved=True``.
     """
+    if on_conflict not in ("retry", "epoch"):
+        raise ValueError(f"unknown on_conflict mode {on_conflict!r}")
     state = fetch_state()
     prev = collect(state, k, l, backend=backend)
     rounds = 1
@@ -254,14 +323,24 @@ def get_path_session(
         state = fetch_state()
         cur = collect(state, k, l, backend=backend)
         rounds += 1
-        if bool(compare_collects(prev, cur)):
+        # capacity grow between collects = effective mutation (see
+        # get_paths_session) — shapes differ, so comparing would crash
+        if (prev.versions.shape == cur.versions.shape
+                and bool(compare_collects(prev, cur))):
             res = _materialize(state, cur, rounds)
             return res
         prev = cur
         if max_rounds is not None and rounds >= max_rounds:
+            if on_conflict == "epoch":
+                state = fetch_epoch()[1] if fetch_epoch is not None \
+                    else fetch_state()
+                cur = collect(state, k, l, backend=backend)
+                return _materialize(state, cur, rounds + 1, starved=True)
             v = state.capacity
             return PathResult(
-                jnp.asarray(False), jnp.int32(0), jnp.full((v,), -1, jnp.int32), jnp.int32(rounds)
+                jnp.asarray(False), jnp.int32(0),
+                jnp.full((v,), -1, jnp.int32), jnp.int32(rounds),
+                jnp.asarray(True),
             )
 
 
@@ -323,5 +402,6 @@ def _interleaved_getpath_jit(
     # If never matched within T rounds, report not-done (caller resubmits).
     ans = jax.tree.map(lambda a, b: jnp.where(done, a, b), ans, last)
     pr = _materialize(state, ans, jnp.where(done, done_round + 1, -1))
-    pr = PathResult(pr.found & done, jnp.where(done, pr.length, 0), pr.keys, pr.rounds)
+    pr = PathResult(pr.found & done, jnp.where(done, pr.length, 0), pr.keys,
+                    pr.rounds, ~done)
     return state, pr, mut_results

@@ -151,58 +151,118 @@ class ReachSessionResult:
     stale: bool       # an epoch mismatch forced the whole batch to BFS
     rounds: int       # collect rounds spent in the BFS session (0 if none)
     _materialize: Callable = field(repr=False, default=lambda: [])
+    pinned_epoch: int | None = None  # retained epoch the answers linearize
+    # at when the ring validated a stale-at-head index (DESIGN.md §13)
+    starved: bool = False            # the BFS session exhausted its retry
+    # budget (wait-free epoch resolution or capped-retry, per on_conflict)
 
     def paths(self):
         """[(found, keys)] per pair — lazy witness paths via fused BFS."""
         return self._materialize()
 
 
+def index_fresh_at(index: ReachIndex | None, ring) -> int | None:
+    """The newest RETAINED epoch whose version vector equals the index's
+    build stamp, or None (DESIGN.md §13). A live-head mismatch no longer
+    condemns the whole batch: if the ring still retains the epoch the index
+    was built from, every decided index answer is exact *at that epoch* —
+    the freshness comparison of DESIGN.md §9 relocated from the live head
+    to the query's admitted epoch."""
+    if index is None or ring is None:
+        return None
+    return ring.epoch_of_versions(np.asarray(index.versions), index.capacity)
+
+
 def reach_session(fetch_state, index: ReachIndex | None, pairs, *,
                   engine: str = "fused", backend: str | None = None,
-                  join_backend: str = "jnp", max_rounds: int = 64
+                  join_backend: str = "jnp", max_rounds: int = 64,
+                  on_conflict: str = "retry", fetch_epoch=None, ring=None
                   ) -> ReachSessionResult:
     """Answer Q (k, l) key-pair reachability queries against a live state
     reference, preferring the index (DESIGN.md §9).
 
     Fresh index: slot lookup + one label_join contraction answers every
     decided query — no traversal; the freshness comparison doubles as the
-    snapshot validation. Undecided queries (partial landmark sets) and the
-    whole batch on a stale epoch run the ordinary obstruction-free
+    snapshot validation. Undecided queries (partial landmark sets) run the
     ``get_paths_session`` fallback.
+
+    Stale-at-head index + ``ring`` + ``on_conflict="epoch"``: if the ring
+    still retains the epoch the index was built from AND that epoch is at
+    or after the query's ADMITTED epoch (the epoch published when the
+    session started, read via ``fetch_epoch``), the batch is PINNED to it
+    (DESIGN.md §13) — decided pairs come off the index, genuinely-
+    undecided pairs take a single collect over the frozen reconstruction,
+    and ``pinned_epoch`` reports where the answers linearize. The admitted-
+    epoch guard is what keeps the pin linearizable: only mutations racing
+    the session may be absorbed by it — an index made stale by a mutation
+    that happened-before the query must not serve, since its epoch
+    predates every point of the query's invocation window. Only when no
+    retained epoch qualifies does the whole batch fall back to the BFS
+    session, which itself follows ``on_conflict`` (wait-free epoch
+    resolution or capped retry) at its budget.
     """
     pairs = list(pairs)
     q = len(pairs)
 
     def materialize():
         out, _ = get_paths_session(fetch_state, pairs, max_rounds=max_rounds,
-                                   backend=backend, engine=engine)
+                                   backend=backend, engine=engine,
+                                   on_conflict=on_conflict,
+                                   fetch_epoch=fetch_epoch)
         return out
 
-    if q == 0:
-        return ReachSessionResult([], 0, 0, False, 0, materialize)
-    state = fetch_state()
-    if index_fresh(index, state):
+    def _index_serve(idx_state, fallback_fetch, pinned_epoch):
         ks = jnp.asarray([p[0] for p in pairs], jnp.int32)
         ls = jnp.asarray([p[1] for p in pairs], jnp.int32)
         reach, decided, _ = query_reach(
-            index, find_slots(state, ks), find_slots(state, ls),
+            index, find_slots(idx_state, ks), find_slots(idx_state, ls),
             backend=join_backend)
         dec = np.asarray(decided)
         found = [bool(x) for x in np.asarray(reach)]
         und = np.nonzero(~dec)[0]
         rounds = 0
+        starved = False
         if und.size:
+            st: dict = {}
             out, rounds = get_paths_session(
-                fetch_state, [pairs[i] for i in und], max_rounds=max_rounds,
-                backend=backend, engine=engine)
+                fallback_fetch, [pairs[i] for i in und],
+                max_rounds=max_rounds, backend=backend, engine=engine,
+                on_conflict=on_conflict, fetch_epoch=fetch_epoch, stats=st)
+            starved = bool(st.get("starved", False))
             for i, (f, _keys) in zip(und, out):
                 found[int(i)] = bool(f)
         return ReachSessionResult(found, q - int(und.size), int(und.size),
-                                  False, rounds, materialize)
+                                  False, rounds, materialize,
+                                  pinned_epoch=pinned_epoch, starved=starved)
+
+    if q == 0:
+        return ReachSessionResult([], 0, 0, False, 0, materialize)
+    # the admitted epoch is read BEFORE the state fetch: it bounds the
+    # query's invocation from below, so any pin >= it is a moment inside
+    # the invocation window (fetch_epoch returns the published
+    # (epoch, state) slot)
+    admitted = fetch_epoch()[0] if fetch_epoch is not None else None
+    state = fetch_state()
+    if index_fresh(index, state):
+        return _index_serve(state, fetch_state, None)
+    if on_conflict == "epoch" and admitted is not None:
+        pin = index_fresh_at(index, ring)
+        if pin is not None and pin >= admitted:
+            # only a RACING mutation separates the index from the head:
+            # decided pairs are exact at the pinned epoch, and undecided
+            # pairs collect over the frozen reconstruction (one consistent
+            # state — two rounds, no race)
+            pinned = ring.state_at(pin)
+            return _index_serve(pinned, lambda: pinned, pin)
+    st: dict = {}
     out, rounds = get_paths_session(fetch_state, pairs, max_rounds=max_rounds,
-                                    backend=backend, engine=engine)
+                                    backend=backend, engine=engine,
+                                    on_conflict=on_conflict,
+                                    fetch_epoch=fetch_epoch, stats=st)
     return ReachSessionResult([bool(f) for f, _ in out], 0, q,
-                              index is not None, rounds, materialize)
+                              index is not None, rounds, materialize,
+                              pinned_epoch=st.get("epoch"),
+                              starved=bool(st.get("starved", False)))
 
 
 def reach_counts_session(fetch_state, index: ReachIndex | None, keys, *,

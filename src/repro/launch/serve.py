@@ -1,6 +1,13 @@
 """Serving launcher: batched LM decode co-hosted with graph queries.
 
   python -m repro.launch.serve --arch qwen2-1.5b --smoke --batch 4 --new 32
+
+``--ingest`` switches the graph side to the multi-tenant admission pool
+(DESIGN.md §12) and exercises the retained epoch ring (DESIGN.md §13):
+several simulated clients stream conflicting mutation batches, query
+sessions resolve wait-free against the published epoch when starved, and
+after the decode loop the launcher issues time-travel reachability and
+epoch-diff queries against retained (and one evicted) epochs.
 """
 from __future__ import annotations
 
@@ -15,6 +22,22 @@ from repro.models.model import build_model
 from repro.runtime.serve_loop import GraphCoServer, serve
 
 
+def _demo_epoch_ring(graph: GraphCoServer, rng) -> None:
+    """Post-serve tour of the epoch-ring endpoints (DESIGN.md §13)."""
+    lo, hi = graph.epoch_window()
+    mid = (lo + hi) // 2
+    u, v = (int(x) for x in rng.integers(0, 16, 2))
+    tt = graph.get_reach_at([(u, v)], mid)
+    print(f"time-travel: reach({u},{v}) at epoch {mid} -> "
+          f"{'evicted' if tt.evicted else bool(tt.found[0])} "
+          f"(window {lo}..{hi})")
+    gone = graph.get_reach_at([(u, v)], lo - 1)
+    print(f"time-travel: epoch {lo - 1} -> "
+          f"{'evicted' if gone.evicted else 'retained?!'} (typed, no raise)")
+    d = graph.epoch_diff(mid, hi)
+    print(f"epoch-diff {mid}->{hi}: {len(d.rows)} rows touched")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -23,6 +46,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--ingest", action="store_true",
+                    help="multi-tenant admission pool + epoch-ring demo "
+                         "(DESIGN.md §12, §13)")
+    ap.add_argument("--clients", type=int, default=3,
+                    help="simulated mutation clients under --ingest")
+    ap.add_argument("--retain-epochs", type=int, default=16,
+                    help="epoch-ring retention window under --ingest")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -34,13 +64,24 @@ def main():
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
 
-    graph = GraphCoServer()
+    graph = GraphCoServer(ingest=args.ingest,
+                          retain_epochs=args.retain_epochs)
     for k in range(16):
         graph.submit([(OP_ADD_V, k)])
 
     def mutator(i):
         u, v = rng.integers(0, 16, 2)
         return [(OP_ADD_E, int(u), int(v))]
+
+    def clients(i):
+        # every decode step each tenant streams one edge batch; overlapping
+        # entity footprints force admission conflicts so coalescing/retry
+        # paths (and the epoch ring behind them) actually get exercised
+        batches = []
+        for c in range(args.clients):
+            u, v = rng.integers(0, 16, 2)
+            batches.append((f"tenant{c}", [(OP_ADD_E, int(u), int(v))]))
+        return batches
 
     def queries(i):
         if i % 4 == 0:
@@ -50,12 +91,24 @@ def main():
 
     out, stats = serve(model, params, prompts, max_new_tokens=args.new,
                        cache_len=args.cache_len, graph=graph,
-                       mutator=mutator, query_stream=queries)
+                       mutator=None if args.ingest else mutator,
+                       clients=clients if args.ingest else None,
+                       query_stream=queries)
     tps = stats.decode_tokens / max(stats.wall_s, 1e-9)
     print(f"decoded {stats.decode_tokens} tokens in {stats.wall_s:.2f}s "
           f"({tps:.1f} tok/s); graph ops {stats.graph_ops}, "
           f"getpath calls {stats.getpath_calls} "
           f"(avg rounds {stats.getpath_rounds / max(stats.getpath_calls, 1):.1f})")
+    if args.ingest:
+        print(f"ingest: {stats.ingest_batches} batches in "
+              f"{stats.ingest_fused_calls} fused applies, "
+              f"{stats.ingest_epochs} epochs published; "
+              f"starved sessions {stats.getpath_starved} "
+              f"(epoch-resolved {stats.epoch_resolved})")
+        _demo_epoch_ring(graph, rng)
+        print(f"ring endpoints: tt_calls {graph.tt_calls} "
+              f"(evicted {graph.tt_evicted}), "
+              f"epoch_diff_calls {graph.epoch_diff_calls}")
 
 
 if __name__ == "__main__":

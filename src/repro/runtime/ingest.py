@@ -24,6 +24,14 @@ adds the admission machinery between the client surface and the fused
     followed by one atomic slot flip. Readers (``get_paths``/``get_reach``)
     always see the last PUBLISHED epoch and never wait on admission —
     non-blocking co-serving at serving scale (DESIGN.md §5(ii), §12).
+  * **Retained epoch ring.** Every publish also lands one
+    ``(epoch, version_vector, packed row delta)`` record in a bounded
+    ``core.epochs.EpochRing`` (DESIGN.md §13): queries starved by a
+    mutator that commits every round resolve wait-free against the pinned
+    published epoch (``snapshot_epoch``), and ``state_at``/``epoch_diff``
+    serve time-travel reachability and audit diffs over the retention
+    window. ``epoch_log`` is pruned to the same window — the unbounded
+    epoch->prefix dict previously leaked one entry per published epoch.
   * **Linearization log.** The pool records the serial order it claims
     (admission order within a round, round order across rounds, per-client
     program order preserved). The schedule-exploring property harness
@@ -69,6 +77,7 @@ from repro.core import (
     make_op_batch,
 )
 from repro.core import partition
+from repro.core.epochs import EpochEvictedError, EpochRing
 
 _VERTEX_OPS = (OP_ADD_V, OP_REM_V, OP_CON_V)
 _EDGE_OPS = (OP_ADD_E, OP_REM_E, OP_CON_E)
@@ -182,6 +191,8 @@ class IngestStats:
     queue_depth: int = 0          # depth at the last pump
     epochs: int = 0               # snapshot epochs published
     grow_events: int = 0          # R_TABLE_FULL auto-grow replays
+    epochs_retained: int = 0      # epochs currently addressable in the ring
+    epochs_evicted: int = 0       # delta records dropped by bounded retention
 
 
 def _next_pow2(n: int, floor: int = 8) -> int:
@@ -209,7 +220,7 @@ class IngestPool:
     def __init__(self, state, *, mesh=None, auto_grow: bool = True,
                  max_inflight: int = 8, max_coalesce_lanes: int = 256,
                  pad_lanes: bool = True, fault=None, on_grow=None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, retain_epochs: int = 64):
         self.mesh = mesh if mesh is not None else getattr(state, "mesh", None)
         self.auto_grow = auto_grow
         self.max_inflight = int(max_inflight)
@@ -223,6 +234,11 @@ class IngestPool:
         self.linearization: list[int] = []   # batch_ids in claimed serial order
         self.tickets: dict[int, Ticket] = {}
         self.epoch_log: dict[int, int] = {0: 0}  # epoch -> linearization prefix
+        # bounded retained epoch history (wait-free snapshots + time travel,
+        # DESIGN.md §13); epoch_log is pruned to its window (the unbounded
+        # dict was a one-entry-per-epoch leak on long-running servers)
+        self.ring = EpochRing(retain_epochs)
+        self.ring.reset(0, state)
         self._head = state                   # writer-private latest state
         # double-buffered (epoch, state) snapshot slots; _cur flips atomically
         self._slots = [(0, state), (0, state)]
@@ -253,7 +269,44 @@ class IngestPool:
         self._head = state
         self.stats.epochs = epoch
         self.epoch_log[epoch] = len(self.linearization)
+        # retained-ring maintenance (DESIGN.md §13): record the delta (a
+        # capacity change resets the ring — every row-shaped delta is void)
+        # and prune epoch_log to the addressable window, fixing the
+        # unbounded per-epoch leak
+        self.ring.push(epoch, state)
+        oldest = self.ring.window()[0]
+        for e in [e for e in self.epoch_log if e < oldest]:
+            del self.epoch_log[e]
+        self.stats.epochs_retained = len(self.ring) + 1
+        self.stats.epochs_evicted = self.ring.evicted
         return epoch
+
+    # -- retained-epoch read surface (DESIGN.md §13) ------------------------
+    def epoch_window(self) -> tuple[int, int]:
+        """(oldest addressable, newest published) epoch, inclusive."""
+        return self.ring.window()
+
+    def state_at(self, epoch: int):
+        """The published state of a retained epoch — the current slot for
+        the newest, a bit-identical ring reconstruction (dense) for older
+        ones. Raises ``EpochEvictedError`` outside the retention window."""
+        cur_epoch, cur_state = self._slots[self._cur]
+        if int(epoch) == cur_epoch:
+            return cur_state
+        return self.ring.state_at(epoch)
+
+    def epoch_diff(self, e1: int, e2: int):
+        """Rows/keys touched between two retained epochs (``EpochDiff``);
+        typed ``EpochEvictedError`` when either endpoint left the window."""
+        return self.ring.diff(e1, e2)
+
+    def linearization_prefix(self, epoch: int) -> int:
+        """Length of the linearization prefix epoch ``epoch`` published.
+        Raises ``EpochEvictedError`` for epochs pruned out of the window."""
+        try:
+            return self.epoch_log[int(epoch)]
+        except KeyError:
+            raise EpochEvictedError(epoch, self.ring.window()) from None
 
     # -- write side ---------------------------------------------------------
     def submit(self, client_id: str, ops) -> Ticket:

@@ -12,7 +12,7 @@ The serving runtime owns two resources:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import (
     R_TABLE_FULL,
+    EpochEvictedError,
     GraphState,
     OpBatch,
     PathResult,
@@ -47,6 +48,11 @@ class ServeStats:
     graph_ops: int = 0
     getpath_calls: int = 0
     getpath_rounds: int = 0
+    getpath_starved: int = 0  # sessions whose double collect never matched
+    epoch_resolved: int = 0   # starved sessions resolved wait-free (§13)
+    tt_calls: int = 0         # time-travel reachability queries served
+    tt_evicted: int = 0       # time-travel queries past the retention window
+    epoch_diff_calls: int = 0  # epoch-diff audit queries served
     grow_events: int = 0
     index_hits: int = 0       # queries answered on the index fast path
     index_misses: int = 0     # queries that fell back to the fused BFS
@@ -61,6 +67,37 @@ class ServeStats:
     ingest_queue_depth_max: int = 0
     ingest_epochs: int = 0          # snapshot epochs published
     wall_s: float = 0.0
+
+
+@dataclass
+class TimeTravelResult:
+    """Typed answer of the time-travel reachability endpoint (DESIGN.md §13).
+
+    ``evicted=True`` means the requested epoch left the bounded retention
+    window (``window`` says what is still addressable) — the typed
+    "epoch evicted" outcome, never an exception at the serving surface.
+    """
+
+    epoch: int
+    evicted: bool
+    window: tuple
+    found: list = field(default_factory=list)    # [bool] per pair
+    paths: list = field(default_factory=list)    # [(found, keys)] per pair
+
+
+@dataclass
+class EpochDiffResult:
+    """Typed answer of the epoch-diff endpoint (DESIGN.md §13): which rows
+    (and the keys occupying them at each end) changed between two retained
+    epochs. ``evicted=True`` when either endpoint left the window."""
+
+    e_from: int
+    e_to: int
+    evicted: bool
+    window: tuple
+    rows: list = field(default_factory=list)
+    keys_before: list = field(default_factory=list)
+    keys_after: list = field(default_factory=list)
 
 
 class GraphCoServer:
@@ -102,7 +139,8 @@ class GraphCoServer:
                  mesh=None, auto_grow: bool = True, index: bool = False,
                  index_landmarks: int | None = None, ingest: bool = False,
                  max_inflight: int = 8, max_coalesce_lanes: int = 256,
-                 fault=None):
+                 fault=None, on_conflict: str | None = None,
+                 retain_epochs: int = 64):
         self.mesh = mesh
         self.auto_grow = auto_grow
         self.query_engine = query_engine
@@ -113,6 +151,13 @@ class GraphCoServer:
         self.index_hits = 0
         self.index_misses = 0
         self.index_refreshes = 0
+        # wait-free snapshot observability (DESIGN.md §13) — lifetime
+        # counters, surfaced as per-serve deltas like the index ones
+        self.getpath_starved = 0
+        self.epoch_resolved = 0
+        self.tt_calls = 0
+        self.tt_evicted = 0
+        self.epoch_diff_calls = 0
         dense = make_graph(capacity)
         self._state = partition.shard_state(mesh, dense) if mesh is not None else dense
         self.pool = None
@@ -126,7 +171,12 @@ class GraphCoServer:
                 self._state, mesh=mesh, auto_grow=auto_grow,
                 max_inflight=max_inflight,
                 max_coalesce_lanes=max_coalesce_lanes, fault=fault,
-                on_grow=bump_grow)
+                on_grow=bump_grow, retain_epochs=retain_epochs)
+        # default conflict policy: a pool-backed server resolves starved
+        # query sessions wait-free against its published epoch ring
+        # (DESIGN.md §13); a bare server keeps the capped-retry deviation
+        self.on_conflict = on_conflict if on_conflict is not None else (
+            "epoch" if self.pool is not None else "retry")
 
     @property
     def state(self):
@@ -198,9 +248,28 @@ class GraphCoServer:
         """Drain the ingest queue (DESIGN.md §12)."""
         return self.pool.flush() if self.pool is not None else 0
 
+    def _fetch_epoch(self):
+        """(epoch, state) pin source for wait-free resolution — the pool's
+        published slot when ingesting, None otherwise (DESIGN.md §13)."""
+        return self.pool.snapshot_epoch if self.pool is not None else None
+
+    def _note_session(self, stats: dict):
+        if stats.get("starved"):
+            self.getpath_starved += 1
+        if stats.get("resolved") == "epoch":
+            self.epoch_resolved += 1
+
     def get_path(self, k: int, l: int, max_rounds: int = 64):
         if self.mesh is None:
-            return get_path_session(lambda: self.state, k, l, max_rounds=max_rounds)
+            pr = get_path_session(lambda: self.state, k, l,
+                                  max_rounds=max_rounds,
+                                  on_conflict=self.on_conflict,
+                                  fetch_epoch=self._fetch_epoch())
+            if bool(pr.starved):
+                self.getpath_starved += 1
+                if self.on_conflict == "epoch":
+                    self.epoch_resolved += 1
+            return pr
         out, rounds = self.get_paths([(k, l)], max_rounds=max_rounds)
         found, keys = out[0]
         pad = np.full((self.state.capacity,), -1, np.int32)
@@ -212,11 +281,66 @@ class GraphCoServer:
         """Batched reachability: Q queries answered under ONE shared double
         collect, traversed by the fused multi-source BFS engine (DESIGN.md
         §7; distributed per-shard form on a mesh, DESIGN.md §8) — the
-        serving-side surface a query front-end batches into.
+        serving-side surface a query front-end batches into. A session that
+        exhausts its retry budget under sustained mutation follows the
+        server's ``on_conflict`` policy — pool-backed servers resolve
+        wait-free against the published epoch ring (DESIGN.md §13).
         Returns ([(found, keys)] per pair, rounds)."""
-        return get_paths_session(lambda: self.state, pairs,
-                                 max_rounds=max_rounds,
-                                 engine=self.query_engine)
+        st: dict = {}
+        out, rounds = get_paths_session(lambda: self.state, pairs,
+                                        max_rounds=max_rounds,
+                                        engine=self.query_engine,
+                                        on_conflict=self.on_conflict,
+                                        fetch_epoch=self._fetch_epoch(),
+                                        stats=st)
+        self._note_session(st)
+        return out, rounds
+
+    # -- retained-epoch endpoints (DESIGN.md §13) --------------------------
+    def epoch_window(self) -> tuple:
+        """(oldest addressable, newest published) epoch of the ring."""
+        if self.pool is None:
+            raise RuntimeError("GraphCoServer(ingest=True) required for "
+                               "epoch-ring endpoints")
+        return self.pool.epoch_window()
+
+    def get_reach_at(self, pairs: list, epoch: int) -> TimeTravelResult:
+        """Time-travel reachability: "was u→w reachable at epoch e?" —
+        answered by a single collect over the ring's bit-identical
+        reconstruction of that published epoch (a frozen functional state,
+        so one collect is trivially consistent). Epochs past the bounded
+        retention window return a typed evicted result (DESIGN.md §13)."""
+        if self.pool is None:
+            raise RuntimeError("GraphCoServer(ingest=True) required for "
+                               "epoch-ring endpoints")
+        self.tt_calls += 1
+        try:
+            state_e = self.pool.state_at(epoch)
+        except EpochEvictedError as err:
+            self.tt_evicted += 1
+            return TimeTravelResult(int(epoch), True, err.window)
+        out, _rounds = get_paths_session(lambda: state_e, pairs,
+                                         engine=self.query_engine)
+        return TimeTravelResult(int(epoch), False, self.pool.epoch_window(),
+                                [f for f, _ in out], out)
+
+    def epoch_diff(self, e1: int, e2: int) -> EpochDiffResult:
+        """Audit/forensics: which rows (and keys) changed between epochs
+        e1 and e2 — read straight off the retained delta records, no
+        traversal (DESIGN.md §13). Typed evicted result past the window."""
+        if self.pool is None:
+            raise RuntimeError("GraphCoServer(ingest=True) required for "
+                               "epoch-ring endpoints")
+        self.epoch_diff_calls += 1
+        try:
+            d = self.pool.epoch_diff(e1, e2)
+        except EpochEvictedError as err:
+            return EpochDiffResult(int(e1), int(e2), True, err.window)
+        return EpochDiffResult(d.e_from, d.e_to, False,
+                               self.pool.epoch_window(),
+                               [int(r) for r in d.rows],
+                               [int(k) for k in d.keys_before],
+                               [int(k) for k in d.keys_after])
 
     # -- reachability index surface (DESIGN.md §9) -------------------------
     def index_tick(self) -> bool:
@@ -243,10 +367,18 @@ class GraphCoServer:
         res = reach_session(lambda: self.state,
                             self.index if self.index_enabled else None,
                             pairs, engine=self.query_engine,
-                            max_rounds=max_rounds)
+                            max_rounds=max_rounds,
+                            on_conflict=self.on_conflict,
+                            fetch_epoch=self._fetch_epoch(),
+                            ring=self.pool.ring if self.pool is not None
+                            else None)
         if self.index_enabled:   # a server without an index has no misses
             self.index_hits += res.from_index
             self.index_misses += res.fellback
+        if res.starved:
+            self.getpath_starved += 1
+            if self.on_conflict == "epoch":
+                self.epoch_resolved += 1
         return res
 
     def get_reach_counts(self, keys: list) -> np.ndarray:
@@ -285,6 +417,9 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
     # reports per-serve deltas like every other field
     idx0 = ((graph.index_hits, graph.index_misses, graph.index_refreshes)
             if graph is not None else (0, 0, 0))
+    ring0 = ((graph.getpath_starved, graph.epoch_resolved, graph.tt_calls,
+              graph.tt_evicted, graph.epoch_diff_calls)
+             if graph is not None else (0, 0, 0, 0, 0))
     pool = graph.pool if graph is not None else None
     if clients is not None and pool is None:
         raise RuntimeError("clients= stream requires GraphCoServer(ingest=True)")
@@ -376,5 +511,10 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         stats.index_hits = graph.index_hits - idx0[0]
         stats.index_misses = graph.index_misses - idx0[1]
         stats.index_refreshes = graph.index_refreshes - idx0[2]
+        stats.getpath_starved = graph.getpath_starved - ring0[0]
+        stats.epoch_resolved = graph.epoch_resolved - ring0[1]
+        stats.tt_calls = graph.tt_calls - ring0[2]
+        stats.tt_evicted = graph.tt_evicted - ring0[3]
+        stats.epoch_diff_calls = graph.epoch_diff_calls - ring0[4]
     stats.wall_s = time.time() - t0
     return out, stats

@@ -62,6 +62,16 @@ from repro.runtime.ingest import IngestPool
 #   ("submit", client_id, [op, ...])   enqueue one client batch
 #   ("pump",)                          one admission round
 #   ("read", [(k, l), ...])            reachability read on the published epoch
+#   ("read_epoch", [(k, l), ...])      HOSTILE wait-free read: every state
+#                                      fetch ships a fresh mutation touching
+#                                      the query's dependency set before
+#                                      returning, so the double collect can
+#                                      never match and the session must
+#                                      resolve against a pinned published
+#                                      epoch (DESIGN.md §13)
+#   ("tt", back, [(k, l), ...])        time-travel read at the epoch ``back``
+#                                      publishes before the newest (clamped
+#                                      to the retention window)
 #   ("flush",)                         drain the queue
 
 
@@ -79,9 +89,12 @@ class Schedule:
             if s[0] == "submit":
                 ops = ", ".join(_op_str(op) for op in s[2])
                 lines.append(f"{i:3d}  submit {s[1]:<8} [{ops}]")
-            elif s[0] == "read":
+            elif s[0] in ("read", "read_epoch"):
                 pairs = ", ".join(f"{k}->{l}" for k, l in s[1])
-                lines.append(f"{i:3d}  read   {pairs}")
+                lines.append(f"{i:3d}  {s[0]:<6} {pairs}")
+            elif s[0] == "tt":
+                pairs = ", ".join(f"{k}->{l}" for k, l in s[2])
+                lines.append(f"{i:3d}  tt -{s[1]:<4} {pairs}")
             else:
                 lines.append(f"{i:3d}  {s[0]}")
         return "\n".join(lines)
@@ -159,12 +172,18 @@ def _read_keys(programs) -> list[int]:
 
 
 def random_schedule(rng: random.Random, programs, *, read_rate=0.3,
-                    pump_rate=0.5, reads_pairs=2) -> Schedule:
+                    pump_rate=0.5, reads_pairs=2, epoch_read_rate=0.0,
+                    tt_read_rate=0.0) -> Schedule:
     """Seeded random interleaving of the client programs.
 
     Per-client submission order is preserved (program order); pump and
     read steps are sprinkled between submissions; a trailing flush + read
     makes every schedule end fully drained and observed.
+
+    ``epoch_read_rate``/``tt_read_rate`` sprinkle hostile epoch-resolved
+    reads and time-travel reads (DESIGN.md §13). Both default to 0 and the
+    zero case draws NOTHING from ``rng``, so pre-existing seeded schedules
+    stay byte-identical.
     """
     pending = {c: list(batches) for c, batches in programs.items()}
     keys = _read_keys(programs)
@@ -178,6 +197,14 @@ def random_schedule(rng: random.Random, programs, *, read_rate=0.3,
             pairs = [(rng.choice(keys), rng.choice(keys))
                      for _ in range(reads_pairs)]
             steps.append(("read", pairs))
+        if epoch_read_rate > 0 and rng.random() < epoch_read_rate:
+            pairs = [(rng.choice(keys), rng.choice(keys))
+                     for _ in range(reads_pairs)]
+            steps.append(("read_epoch", pairs))
+        if tt_read_rate > 0 and rng.random() < tt_read_rate:
+            pairs = [(rng.choice(keys), rng.choice(keys))
+                     for _ in range(reads_pairs)]
+            steps.append(("tt", rng.randint(0, 4), pairs))
     steps.append(("flush",))
     steps.append(("read", [(keys[0], keys[-1]), (keys[-1], keys[0])]))
     return Schedule(steps)
@@ -243,9 +270,11 @@ def batch_lists_strategy(st, *, min_batches=1, max_batches=4, **batch_kw):
 # ---------------------------------------------------------------------------
 @dataclass
 class ReadObs:
-    epoch: int
+    epoch: int             # the epoch the observation linearizes at
     pairs: list
     results: list          # [(found, keys)] per pair
+    mode: str = "head"     # "head" | "epoch" (wait-free resolved) | "tt"
+    starved: bool = False  # session exhausted its budget (mode "epoch")
 
 
 @dataclass
@@ -261,21 +290,54 @@ class Trace:
         return self.pool.linearization
 
 
+def _hostile_epoch_read(pool: IngestPool, pairs, *, max_rounds=3) -> ReadObs:
+    """One wait-free read under the WORST §3.5 adversary: every state fetch
+    first commits a mutation that bumps the ``ecnt`` of every query source
+    (a fresh sink vertex plus one out-edge per source), so consecutive
+    collects can never match over the dependency set and the session must
+    resolve against a pinned published epoch (DESIGN.md §13). The
+    observation is tagged with that epoch, so ``check_trace_linearizable``
+    obligation (4) proves the wait-free answer equals a serial prefix."""
+    srcs = sorted({int(k) for k, _ in pairs})
+    last_epoch = [pool.epoch]
+
+    def hostile_fetch():
+        fresh = 9000 + pool.stats.submitted   # outside every client key range
+        pool.submit("_hostile", [_norm((OP_ADD_V, fresh))]
+                    + [_norm((OP_ADD_E, k, fresh)) for k in srcs])
+        pool.pump()
+        epoch, snap = pool.snapshot_epoch()
+        last_epoch[0] = epoch
+        return snap
+
+    st: dict = {}
+    out, _ = get_paths_session(hostile_fetch, pairs, max_rounds=max_rounds,
+                               on_conflict="epoch",
+                               fetch_epoch=pool.snapshot_epoch, stats=st)
+    epoch = st["epoch"] if st["epoch"] is not None else last_epoch[0]
+    return ReadObs(int(epoch), list(pairs), out, mode="epoch",
+                   starved=bool(st["starved"]))
+
+
 def run_schedule(schedule: Schedule, *, capacity=32, mesh=None, fault=None,
                  auto_grow=True, max_inflight=8, max_coalesce_lanes=256,
-                 pad_lanes=True) -> Trace:
+                 pad_lanes=True, retain_epochs=64) -> Trace:
     """Execute a schedule against a fresh IngestPool; returns its Trace.
 
     Reads are taken against the pool's PUBLISHED snapshot epoch — a frozen
     functional state — so each observation is tagged with the exact
     linearization prefix it must be explained by (DESIGN.md §12).
+    ``read_epoch``/``tt`` steps additionally exercise the retained epoch
+    ring: their observations carry the pinned/addressed epoch and flow
+    through the same prefix check (DESIGN.md §13).
     """
     dense = make_graph(capacity)
     state = partition.shard_state(mesh, dense) if mesh is not None else dense
     pool = IngestPool(state, mesh=mesh, auto_grow=auto_grow,
                       max_inflight=max_inflight,
                       max_coalesce_lanes=max_coalesce_lanes,
-                      pad_lanes=pad_lanes, fault=fault)
+                      pad_lanes=pad_lanes, fault=fault,
+                      retain_epochs=retain_epochs)
     trace = Trace(schedule, pool, capacity, mesh)
     for step in schedule.steps:
         if step[0] == "submit":
@@ -288,6 +350,14 @@ def run_schedule(schedule: Schedule, *, capacity=32, mesh=None, fault=None,
             epoch, snap = pool.snapshot_epoch()
             out, _ = get_paths_session(lambda: snap, step[1])
             trace.reads.append(ReadObs(epoch, list(step[1]), out))
+        elif step[0] == "read_epoch":
+            trace.reads.append(_hostile_epoch_read(pool, step[1]))
+        elif step[0] == "tt":
+            lo, hi = pool.epoch_window()
+            epoch = max(lo, hi - int(step[1]))
+            snap = pool.state_at(epoch)
+            out, _ = get_paths_session(lambda: snap, step[2])
+            trace.reads.append(ReadObs(epoch, list(step[2]), out, mode="tt"))
         else:  # pragma: no cover - schedule author error
             raise ValueError(f"unknown step {step!r}")
     pool.flush()           # every trace ends drained (checkable end state)
@@ -370,9 +440,17 @@ def check_trace_linearizable(trace: Trace, *, permute_limit=24) -> None:
             pool.tickets[bid].results, serial_results[bid],
             err_msg=f"batch {bid} results diverge from serial replay")
 
-    # (4) reads: explained by the linearization prefix at their epoch
+    # (4) reads: explained by the linearization prefix at their epoch.
+    # This covers plain head reads AND the §13 surfaces: a wait-free
+    # epoch-resolved read and a time-travel read both linearize at the
+    # epoch they carry, so the same prefix obligation applies.
     for obs in trace.reads:
-        prefix = pool.epoch_log[obs.epoch]
+        prefix = pool.epoch_log.get(obs.epoch)
+        if prefix is None:
+            # the epoch left the bounded retention window between the read
+            # and the check (tiny retain_epochs in eviction suites) — no
+            # prefix left to validate against
+            continue
         ora = _oracle_after(trace, lin[:prefix], capacity=final_cap,
                             check_results=False)
         for (k, l), (found, keys) in zip(obs.pairs, obs.results):
@@ -406,7 +484,9 @@ def fused_groups(trace: Trace) -> list[list[int]]:
     log = trace.pool.epoch_log
     groups = []
     for epoch in sorted(log):
-        if epoch == 0:
+        if epoch == 0 or epoch - 1 not in log:
+            # the predecessor was pruned out of the bounded retention
+            # window (DESIGN.md §13) — the group boundary is unrecoverable
             continue
         lo, hi = log[epoch - 1], log[epoch]
         groups.append(trace.pool.linearization[lo:hi])

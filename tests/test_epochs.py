@@ -1,0 +1,214 @@
+"""Retained epoch ring: bit-identical history, bounded eviction, diffs.
+
+The wait-free snapshot story (DESIGN.md §13) stands on one claim: for any
+epoch still inside the retention window, ``EpochRing.state_at(e)`` is BYTE
+identical to the state the pool published at epoch e. This suite pins that
+claim against the actually-published states (captured as the schedule
+runs), plus the boundary behavior that makes the ring safe to lean on:
+eviction at exactly ``retain`` epochs, the grow barrier (a capacity change
+resets retention), ``epoch_of_versions`` (the index-stamp lookup),
+``epoch_diff``, and the ``epoch_log`` prune that fixes the unbounded
+per-epoch dict leak.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_REM_E,
+    OP_REM_V,
+    EpochEvictedError,
+    EpochRing,
+    make_graph,
+    version_vector,
+)
+from repro.core.distributed import make_graph_mesh
+from repro.runtime.ingest import IngestPool
+
+FIELDS = ("vkey", "valive", "vver", "ecnt", "adj_packed", "adj_in_packed")
+
+
+def _assert_states_equal(a, b, msg=""):
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg} field {f!r}")
+
+
+def _mutation_stream(n):
+    """n single-op batches with adds, removes and edge churn."""
+    ops = []
+    for i in range(n):
+        k = i % 8
+        if i % 7 == 6:
+            ops.append([(OP_REM_E, k, (k + 1) % 8)])
+        elif i % 5 == 4:
+            ops.append([(OP_REM_V, k)])
+        elif i % 2 == 0:
+            ops.append([(OP_ADD_V, k)])
+        else:
+            ops.append([(OP_ADD_E, k, (k + 1) % 8)])
+    return ops
+
+
+def _pump_stream(pool, ops):
+    """Apply each batch as its own publish; return {epoch: published state}."""
+    published = {pool.epoch: pool.snapshot()}
+    for batch in ops:
+        pool.submit("c", batch)
+        pool.flush()
+        published[pool.epoch] = pool.snapshot()
+    return published
+
+
+def test_reconstruction_bit_identical_to_published_states():
+    pool = IngestPool(make_graph(32), retain_epochs=64)
+    published = _pump_stream(pool, _mutation_stream(20))
+    lo, hi = pool.epoch_window()
+    assert (lo, hi) == (0, 20)
+    for e in range(lo, hi + 1):
+        _assert_states_equal(pool.state_at(e), published[e],
+                             f"epoch {e} reconstruction diverges:")
+
+
+def test_state_at_newest_is_the_published_slot_itself():
+    pool = IngestPool(make_graph(16), retain_epochs=8)
+    _pump_stream(pool, _mutation_stream(3))
+    assert pool.state_at(pool.epoch) is pool.snapshot()
+
+
+def test_eviction_window_boundaries_retain_4():
+    pool = IngestPool(make_graph(32), retain_epochs=4)
+    published = _pump_stream(pool, _mutation_stream(10))
+    lo, hi = pool.epoch_window()
+    assert (lo, hi) == (7, 10)          # exactly retain=4 addressable epochs
+    # inside the window: exact; first epoch past it: typed eviction
+    for e in range(lo, hi + 1):
+        _assert_states_equal(pool.state_at(e), published[e])
+    with pytest.raises(EpochEvictedError) as exc:
+        pool.state_at(lo - 1)
+    assert exc.value.epoch == lo - 1
+    assert exc.value.window == (lo, hi)
+    assert pool.stats.epochs_retained == 4
+    assert pool.stats.epochs_evicted == 7  # epochs 0..6 aged out
+
+
+def test_retain_one_keeps_only_the_newest_epoch():
+    pool = IngestPool(make_graph(16), retain_epochs=1)
+    _pump_stream(pool, _mutation_stream(5))
+    assert pool.epoch_window() == (5, 5)
+    with pytest.raises(EpochEvictedError):
+        pool.state_at(4)
+    _assert_states_equal(pool.state_at(5), pool.snapshot())
+
+
+def test_grow_is_a_retention_barrier():
+    """A capacity change voids every row-shaped delta: the ring resets at
+    the grown epoch and pre-grow epochs report eviction even though they
+    were inside the nominal retain count."""
+    pool = IngestPool(make_graph(4), retain_epochs=64, auto_grow=True)
+    # capacity 4 and 6 distinct keys forces at least one R_TABLE_FULL grow
+    for k in range(6):
+        pool.submit("c", [(OP_ADD_V, 10 * k)])
+        pool.flush()
+    assert pool.stats.grow_events >= 1
+    lo, hi = pool.epoch_window()
+    assert lo > 0                        # pre-grow epochs were dropped
+    _assert_states_equal(pool.state_at(hi), pool.snapshot())
+    with pytest.raises(EpochEvictedError):
+        pool.state_at(lo - 1)
+
+
+def test_epoch_log_pruned_to_ring_window():
+    """Satellite bugfix: epoch_log leaked one entry per published epoch;
+    it must now track exactly the addressable window."""
+    pool = IngestPool(make_graph(32), retain_epochs=4)
+    _pump_stream(pool, _mutation_stream(12))
+    lo, hi = pool.epoch_window()
+    assert sorted(pool.epoch_log) == list(range(lo, hi + 1))
+    # retained epochs answer; evicted epochs raise the typed error
+    assert pool.linearization_prefix(hi) == len(pool.linearization)
+    with pytest.raises(EpochEvictedError) as exc:
+        pool.linearization_prefix(lo - 1)
+    assert exc.value.window == (lo, hi)
+
+
+def test_epoch_diff_reports_touched_rows_and_keys():
+    pool = IngestPool(make_graph(32), retain_epochs=64)
+    pool.submit("c", [(OP_ADD_V, 1), (OP_ADD_V, 2)])
+    pool.flush()                          # epoch 1
+    pool.submit("c", [(OP_ADD_E, 1, 2)])
+    pool.flush()                          # epoch 2
+    pool.submit("c", [(OP_ADD_V, 3)])
+    pool.flush()                          # epoch 3
+    d = pool.epoch_diff(1, 3)
+    # rows touched after epoch 1: vertex 1's row (new out-edge bumps its
+    # ecnt/adjacency), vertex 2's row (in-edge bookkeeping), vertex 3's slot
+    state = pool.snapshot()
+    vkey = np.asarray(state.vkey)
+    keys_after = {int(vkey[r]) for r in d.rows}
+    assert {1, 3} <= keys_after
+    assert d.e_from == 1 and d.e_to == 3
+    # endpoints are order-normalized
+    d2 = pool.epoch_diff(3, 1)
+    np.testing.assert_array_equal(d.rows, d2.rows)
+    # identical endpoints: empty diff
+    assert pool.epoch_diff(2, 2).rows.size == 0
+    # evicted endpoint: typed error
+    small = IngestPool(make_graph(32), retain_epochs=2)
+    _pump_stream(small, _mutation_stream(6))
+    with pytest.raises(EpochEvictedError):
+        small.epoch_diff(0, small.epoch)
+
+
+def test_epoch_of_versions_finds_the_stamped_epoch():
+    pool = IngestPool(make_graph(32), retain_epochs=64)
+    published = _pump_stream(pool, _mutation_stream(8))
+    for e, state in published.items():
+        vv = np.asarray(version_vector(state))
+        got = pool.ring.epoch_of_versions(vv, state.capacity)
+        # the NEWEST matching epoch is returned (a failed/no-op publish can
+        # leave versions unchanged, so got may exceed e) — what matters is
+        # that equal versions imply a byte-identical graph, so pinning to
+        # the returned epoch answers exactly as the stamped one would
+        assert got is not None and got >= e
+        _assert_states_equal(pool.state_at(got), state,
+                             f"versions matched epoch {got} but states differ:")
+    # an alien version vector (or capacity) matches nothing
+    alien = np.full_like(np.asarray(version_vector(pool.snapshot())), 7)
+    assert pool.ring.epoch_of_versions(alien, pool.snapshot().capacity) is None
+    assert pool.ring.epoch_of_versions(
+        np.asarray(version_vector(pool.snapshot())), 999) is None
+
+
+def test_ring_push_rejects_epoch_gaps():
+    ring = EpochRing(retain=4)
+    state = make_graph(8)
+    ring.reset(0, state)
+    with pytest.raises(ValueError):
+        ring.push(2, state)               # 0 -> 2 skips epoch 1
+
+
+def test_ring_retain_validation():
+    with pytest.raises(ValueError):
+        EpochRing(retain=0)
+
+
+def test_sharded_pool_ring_reconstructs_dense_bit_identical():
+    """A sharded pool's ring records host gathers; reconstruction is the
+    dense form of every published epoch (time-travel is read-only, so the
+    gathered dense answer is the contract)."""
+    from repro.core import partition
+
+    mesh = make_graph_mesh()
+    state = partition.shard_state(mesh, make_graph(32))
+    pool = IngestPool(state, mesh=mesh, retain_epochs=64)
+    published = _pump_stream(pool, _mutation_stream(8))
+    lo, hi = pool.epoch_window()
+    assert (lo, hi) == (0, 8)
+    # np.asarray gathers sharded fields, so one comparison covers both the
+    # dense reconstructions (older epochs) and the sharded newest slot
+    for e in range(lo, hi + 1):
+        _assert_states_equal(pool.state_at(e), published[e],
+                             f"epoch {e} (sharded pool):")

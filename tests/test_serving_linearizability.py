@@ -186,6 +186,91 @@ def test_shrink_minimizes_to_readable_counterexample():
     assert step[2][0][0] == OP_ADD_E
 
 
+def _epoch_schedule_for_seed(seed: int) -> sch.Schedule:
+    """Schedules sprinkled with hostile wait-free reads and time-travel
+    reads (DESIGN.md §13) on top of the usual mutation interleavings."""
+    rng = random.Random(seed)
+    programs = sch.gen_client_programs(
+        rng, clients=3, batches_per_client=2,
+        conflict_rate=RATES[seed % len(RATES)])
+    return sch.random_schedule(rng, programs, epoch_read_rate=0.5,
+                               tt_read_rate=0.3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_epoch_resolved_reads_linearizable_dense(seed):
+    """Wait-free epoch-resolved reads (the double collect CANNOT match: a
+    mutation lands in the dependency set on every fetch) and time-travel
+    reads must still satisfy obligation (4): every observation equals BFS
+    over the oracle at its epoch's linearization prefix — i.e. the §13
+    answers are bit-consistent with a serial replay."""
+    # capacity 128 headroom: the hostile reads add fresh sink vertices, and
+    # an auto-grow mid-schedule would reset the ring (tested elsewhere)
+    _run_with_shrink(_epoch_schedule_for_seed(seed), capacity=128)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_epoch_resolved_reads_linearizable_sharded(seed):
+    mesh = make_graph_mesh()
+    _run_with_shrink(_epoch_schedule_for_seed(seed), capacity=128, mesh=mesh)
+
+
+def test_hostile_epoch_read_starves_and_pins_a_serial_prefix():
+    """Deterministic core of the sweep above: the hostile read exhausts its
+    budget (starved=True), resolves at a pinned epoch, and its answers are
+    exactly the pinned prefix's (check_trace_linearizable obligation 4)."""
+    steps = [
+        ("submit", "a", [(OP_ADD_V, 0, -1, -1), (OP_ADD_V, 1, -1, -1),
+                         (OP_ADD_E, 0, 1, -1)]),
+        ("pump",),
+        ("read_epoch", [(0, 1), (1, 0)]),
+        ("flush",),
+    ]
+    trace = sch.run_and_check(sch.Schedule(steps), capacity=128)
+    obs = trace.reads[0]
+    assert obs.mode == "epoch"
+    assert obs.starved                     # the adversary really starved it
+    assert obs.results[0] == (True, [0, 1])
+    assert obs.results[1][0] is False
+    # the pinned epoch is a real published epoch with a recorded prefix
+    assert obs.epoch in trace.pool.epoch_log
+
+
+def test_time_travel_reads_observe_past_epochs():
+    """tt steps answer from the ring's reconstruction: the SAME pair flips
+    found across epochs exactly at the publish that added the edge."""
+    steps = [
+        ("submit", "a", [(OP_ADD_V, 1, -1, -1), (OP_ADD_V, 2, -1, -1)]),
+        ("pump",),                                      # epoch 1
+        ("submit", "a", [(OP_ADD_E, 1, 2, -1)]),
+        ("pump",),                                      # epoch 2
+        ("tt", 1, [(1, 2)]),                            # back 1 -> epoch 1
+        ("tt", 0, [(1, 2)]),                            # back 0 -> epoch 2
+    ]
+    trace = sch.run_and_check(sch.Schedule(steps), capacity=CAP)
+    assert [o.mode for o in trace.reads] == ["tt", "tt"]
+    assert trace.reads[0].epoch == 1
+    assert trace.reads[0].results[0] == (False, [])     # edge not yet live
+    assert trace.reads[1].epoch == 2
+    assert trace.reads[1].results[0] == (True, [1, 2])
+
+
+def test_zero_epoch_rates_leave_seeded_schedules_identical():
+    """Back-compat guard: epoch_read_rate=0/tt_read_rate=0 must not draw
+    from the rng, so every pre-existing seeded schedule stays byte-equal."""
+    for seed in (0, 7, 991):
+        rng1 = random.Random(seed)
+        p1 = sch.gen_client_programs(rng1)
+        s1 = sch.random_schedule(rng1, p1)
+        rng2 = random.Random(seed)
+        p2 = sch.gen_client_programs(rng2)
+        s2 = sch.random_schedule(rng2, p2, epoch_read_rate=0.0,
+                                 tt_read_rate=0.0)
+        assert s1.steps == s2.steps
+
+
 @pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.integers(min_value=0, max_value=10_000))

@@ -1,0 +1,310 @@
+"""Double-collect starvation regression: wait-free epoch resolution.
+
+The paper's GetPath is obstruction-free only — a mutator that commits
+between every pair of collects starves the query FOREVER under the old
+``max_rounds=None`` default (the PR-6 liveness hole). This suite pins the
+fix (DESIGN.md §13) at every layer:
+
+  * the session layer terminates BOUNDED under the worst-case adversary
+    (a mutation in the query's dependency set on every single fetch), in
+    both conflict modes: "retry" (bounded give-up, ``starved=True``) and
+    "epoch" (wait-free resolution against one pinned published epoch);
+  * the epoch-pinned answer is CORRECT: it equals the sequential oracle
+    replay of the pool's linearization prefix at the pinned epoch;
+  * dense and sharded states behave identically;
+  * the serving layer (``GraphCoServer``) surfaces the events through
+    ``ServeStats`` and takes the ring-validated index path when the index
+    is stale at head but its build epoch is still retained.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    OP_ADD_E,
+    OP_ADD_V,
+    OP_REM_E,
+    GraphOracle,
+    get_path_session,
+    get_paths_session,
+    make_graph,
+)
+from repro.core.distributed import make_graph_mesh
+from repro.runtime.ingest import IngestPool
+from repro.runtime.serve_loop import GraphCoServer, serve
+
+CHAIN = 6
+
+
+def _chain_pool(mesh=None, capacity=64, retain=64) -> IngestPool:
+    """Pool holding the chain 0 -> 1 -> ... -> CHAIN-1."""
+    from repro.core import partition
+
+    dense = make_graph(capacity)
+    state = partition.shard_state(mesh, dense) if mesh is not None else dense
+    pool = IngestPool(state, mesh=mesh, retain_epochs=retain)
+    for k in range(CHAIN):
+        pool.submit("seed", [(OP_ADD_V, k)])
+    for k in range(CHAIN - 1):
+        pool.submit("seed", [(OP_ADD_E, k, k + 1)])
+    pool.flush()
+    return pool
+
+
+def _hostile_fetch(pool, src=0):
+    """State fetch that first commits a mutation bumping ``src``'s ecnt —
+    the §3.5 adversary at maximum rate: NO two consecutive collects can
+    ever match, so an unbounded retry loop would spin forever."""
+    def fetch():
+        fresh = 1000 + pool.stats.submitted   # unique across sessions
+        pool.submit("_adv", [(OP_ADD_V, fresh), (OP_ADD_E, src, fresh)])
+        pool.flush()
+        return pool.snapshot()
+
+    return fetch
+
+
+def _oracle_at(pool, epoch) -> GraphOracle:
+    """Sequential oracle replay of the linearization prefix ``epoch``
+    published — the serial state the pinned answer must agree with."""
+    prefix = pool.linearization_prefix(epoch)
+    oracle = GraphOracle(pool.snapshot().capacity)
+    for bid in pool.linearization[:prefix]:
+        for op in pool.tickets[bid].ops:    # ops may be short tuples
+            k1 = op[1] if len(op) > 1 else -1
+            k2 = op[2] if len(op) > 2 else -1
+            ex = op[3] if len(op) > 3 else -1
+            oracle.apply(op[0], k1, k2, ex)
+    return oracle
+
+
+@pytest.mark.parametrize("sharded", [False, True], ids=["dense", "sharded"])
+def test_starved_session_resolves_waitfree_with_correct_epoch_answer(sharded):
+    """THE regression: mutator commits on every fetch; the query must
+    terminate in <= max_rounds + 1 collects and its epoch-pinned answers
+    must equal the oracle at the pinned linearization prefix."""
+    mesh = make_graph_mesh() if sharded else None
+    pool = _chain_pool(mesh)
+    pairs = [(0, CHAIN - 1), (CHAIN - 1, 0), (0, 3)]
+    st: dict = {}
+    out, rounds = get_paths_session(
+        _hostile_fetch(pool), pairs, max_rounds=4, on_conflict="epoch",
+        fetch_epoch=pool.snapshot_epoch, stats=st)
+    assert rounds == 5                    # budget 4 + the one pinned collect
+    assert st["starved"] and st["resolved"] == "epoch"
+    assert st["epoch"] is not None
+    oracle = _oracle_at(pool, st["epoch"])
+    for (k, l), (found, keys) in zip(pairs, out):
+        assert found == oracle.reachable(k, l), (k, l)
+        if found:
+            assert oracle.is_valid_path(keys, k, l)
+    assert out[0][0] is True and out[1][0] is False
+
+
+def test_retry_mode_terminates_bounded_and_reports_starved():
+    """The pre-ring deviation stays available: on_conflict="retry" gives up
+    at the budget with (False, []) per pair and starved=True — bounded, so
+    callers can resubmit instead of hanging the serving loop."""
+    pool = _chain_pool()
+    st: dict = {}
+    out, rounds = get_paths_session(
+        _hostile_fetch(pool), [(0, CHAIN - 1)], max_rounds=3,
+        on_conflict="retry", stats=st)
+    assert rounds == 3
+    assert out == [(False, [])]
+    assert st["starved"] and st["resolved"] == "budget"
+
+
+def test_default_max_rounds_is_bounded_not_infinite():
+    """Satellite bugfix: the old default (max_rounds=None) spun forever
+    under sustained mutation. The default budget must terminate the session
+    on its own — this test HANGS on the old code."""
+    pool = _chain_pool()
+    out, rounds = get_paths_session(_hostile_fetch(pool), [(0, 1)])
+    assert rounds == 16                   # the new bounded default
+    pr = get_path_session(_hostile_fetch(pool), 0, 1)
+    assert int(pr.rounds) == 16
+    assert bool(pr.starved)
+
+
+def test_single_path_session_epoch_mode_pins_answer():
+    pool = _chain_pool()
+    pr = get_path_session(_hostile_fetch(pool), 0, CHAIN - 1, max_rounds=3,
+                          on_conflict="epoch",
+                          fetch_epoch=pool.snapshot_epoch)
+    assert bool(pr.found)
+    assert bool(pr.starved)
+    assert int(pr.rounds) == 4
+    keys = [int(x) for x in np.asarray(pr.keys)[: int(pr.length)]]
+    assert keys == list(range(CHAIN))     # the chain is the only path
+
+
+def test_unknown_on_conflict_mode_rejected():
+    g = make_graph(8)
+    with pytest.raises(ValueError):
+        get_paths_session(lambda: g, [(0, 1)], on_conflict="banana")
+    with pytest.raises(ValueError):
+        get_path_session(lambda: g, 0, 1, on_conflict="banana")
+
+
+def test_quiet_session_matches_without_touching_the_budget():
+    """No mutation => the second collect matches and neither conflict mode
+    changes anything (the fix costs nothing on the fast path)."""
+    pool = _chain_pool()
+    for mode in ("retry", "epoch"):
+        st: dict = {}
+        out, rounds = get_paths_session(
+            lambda: pool.snapshot(), [(0, CHAIN - 1)], max_rounds=4,
+            on_conflict=mode, fetch_epoch=pool.snapshot_epoch, stats=st)
+        assert rounds == 2
+        assert out[0][0] is True
+        assert not st["starved"] and st["resolved"] == "match"
+
+
+def _hostile_server(index=False, retain=64):
+    """Ingest-backed server whose published snapshot is re-mutated on every
+    read — the server-level restatement of the hostile fetch."""
+    srv = GraphCoServer(capacity=64, ingest=True, index=index,
+                        retain_epochs=retain)
+    for k in range(CHAIN):
+        srv.submit([(OP_ADD_V, k)])
+    for k in range(CHAIN - 1):
+        srv.submit([(OP_ADD_E, k, k + 1)])
+    if index:
+        srv.index_tick()
+    orig = srv.pool.snapshot
+
+    def hostile_snapshot():
+        fresh = 2000 + srv.pool.stats.submitted   # unique across sessions
+        srv.pool.submit("_adv", [(OP_ADD_V, fresh), (OP_ADD_E, 0, fresh)])
+        srv.pool.pump()
+        return orig()
+
+    srv.pool.snapshot = hostile_snapshot
+    return srv
+
+
+def test_server_get_paths_resolves_waitfree_and_counts_events():
+    srv = _hostile_server()
+    assert srv.on_conflict == "epoch"     # pool-backed default
+    out, rounds = srv.get_paths([(0, CHAIN - 1)], max_rounds=3)
+    assert out[0][0] is True
+    assert srv.getpath_starved == 1
+    assert srv.epoch_resolved == 1
+
+
+def test_server_get_path_singleton_starved_counters():
+    srv = _hostile_server()
+    pr = srv.get_path(0, CHAIN - 1, max_rounds=3)
+    assert bool(pr.found) and bool(pr.starved)
+    assert srv.getpath_starved == 1
+    assert srv.epoch_resolved == 1
+
+
+def test_server_ring_validates_stale_index_pins_epoch():
+    """Satellite bugfix: an index made stale by a mutation RACING the
+    session (published between the session's admitted-epoch read and its
+    state fetch) must keep serving decided pairs, pinned to the still-
+    retained build epoch, instead of dumping the whole batch to the BFS
+    fallback — index_hits stays pinned for the decided pairs."""
+    srv = GraphCoServer(capacity=64, ingest=True, index=True,
+                        retain_epochs=64)
+    for k in range(CHAIN):
+        srv.submit([(OP_ADD_V, k)])
+    for k in range(CHAIN - 1):
+        srv.submit([(OP_ADD_E, k, k + 1)])
+    srv.index_tick()                      # index fresh at this epoch
+    orig = srv.pool.snapshot
+
+    def racing_snapshot():
+        # fires INSIDE the session, after fetch_epoch() admitted it: the
+        # head moves but the index's epoch is within the invocation window
+        srv.pool.submit("_adv", [(OP_ADD_V, 50), (OP_ADD_E, 50, 0)])
+        srv.pool.pump()
+        return orig()
+
+    srv.pool.snapshot = racing_snapshot
+    res = srv.get_reach([(0, CHAIN - 1), (CHAIN - 1, 0), (50, 1)])
+    assert res.pinned_epoch is not None
+    assert not res.stale                  # the batch did NOT go whole-stale
+    # answers pin to the admitted epoch: vertex 50 did not exist there
+    assert res.found == [True, False, False]
+    assert res.from_index + res.fellback == 3
+    assert srv.index_hits == res.from_index
+    assert srv.index_misses == res.fellback
+    # oracle agreement at the pinned epoch
+    oracle = _oracle_at(srv.pool, res.pinned_epoch)
+    for (k, l), found in zip([(0, CHAIN - 1), (CHAIN - 1, 0), (50, 1)],
+                             res.found):
+        assert found == oracle.reachable(k, l)
+
+
+def test_index_stale_before_invocation_never_pins():
+    """The admitted-epoch guard: a mutation that happened-BEFORE the query
+    (published, epoch advanced, then the query starts) must not be absorbed
+    by a pin — the index's epoch predates the invocation window, so the
+    batch takes the whole-stale BFS fallback and answers at the head."""
+    srv = GraphCoServer(capacity=64, ingest=True, index=True,
+                        retain_epochs=64)
+    for k in range(CHAIN):
+        srv.submit([(OP_ADD_V, k)])
+    for k in range(CHAIN - 1):
+        srv.submit([(OP_ADD_E, k, k + 1)])
+    srv.index_tick()
+    srv.submit([(OP_ADD_V, 50), (OP_ADD_E, 50, 0)])   # happens-before
+    res = srv.get_reach([(50, 1), (0, CHAIN - 1)])
+    assert res.pinned_epoch is None and res.stale
+    assert res.found == [True, True]      # the new edge IS visible
+    assert res.from_index == 0 and res.fellback == 2
+
+
+def test_server_without_ring_match_keeps_plain_fallback():
+    """If the index's epoch has aged out of a tiny ring, the batch falls
+    back whole (stale=True) — exactly the old behavior, now the exception
+    rather than the rule."""
+    srv = GraphCoServer(capacity=64, ingest=True, index=True, retain_epochs=2)
+    for k in range(CHAIN):
+        srv.submit([(OP_ADD_V, k)])
+    srv.index_tick()
+    for k in range(CHAIN - 1):            # > retain publishes age the stamp out
+        srv.submit([(OP_ADD_E, k, k + 1)])
+    res = srv.get_reach([(0, CHAIN - 1)])
+    assert res.pinned_epoch is None
+    assert res.stale                      # genuine whole-batch fallback
+    assert res.found == [True]            # served correctly by the BFS session
+    assert srv.index_misses == 1
+
+
+def test_serve_loop_surfaces_ring_stats():
+    """End-to-end: a serve() run against the hostile server reports the
+    starvation/resolution/time-travel counters as per-serve deltas."""
+
+    class TinyModel:
+        def prefill(self, params, batch):
+            import jax.numpy as jnp
+            tokens = batch["tokens"]
+            return jnp.zeros((tokens.shape[0], 8)), {}
+
+        def cache_from_prefill(self, caches, cache_len):
+            return caches
+
+        def decode_step(self, params, caches, tok, pos):
+            import jax.numpy as jnp
+            return jnp.zeros((tok.shape[0], 8)), caches
+
+    srv = _hostile_server()
+    prompts = np.zeros((2, 4), np.int32)
+
+    def queries(i):
+        return (0, CHAIN - 1) if i % 2 == 0 else None
+
+    out, stats = serve(TinyModel(), None, prompts, max_new_tokens=4,
+                       cache_len=16, graph=srv, query_stream=queries)
+    assert stats.getpath_calls == 2
+    assert stats.getpath_starved >= 1
+    assert stats.epoch_resolved >= 1
+    # ring endpoints also flow through the stats deltas
+    tt = srv.get_reach_at([(0, CHAIN - 1)], srv.epoch_window()[1])
+    assert tt.found == [True]
+    assert srv.tt_calls == 1
+    d = srv.epoch_diff(*srv.epoch_window())
+    assert srv.epoch_diff_calls == 1 and not d.evicted
