@@ -23,9 +23,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bfs, multi_bfs
+from repro.obs import trace as obs_trace
 from benchmarks.fig9_throughput import seed_graph
 
 QS = (1, 4, 16, 64)
+
+
+def _obs_columns(g, srcs, dsts):
+    """Obs-derived traversal columns (DESIGN.md §14): one traced hybrid
+    run per sweep point, outside the timing loop. ``capture()`` keeps the
+    recorder state local, so the timed runs stay on the untraced path."""
+    with obs_trace.capture() as rec:
+        jax.block_until_ready(multi_bfs(g, srcs, dsts, backend="hybrid"))
+    dirs = [e.get("args", {}).get("direction")
+            for e in rec.events() if e["name"] == "bfs.superstep"]
+    return {
+        "obs_supersteps": len(dirs),
+        "obs_pull_supersteps": sum(d == "pull" for d in dirs),
+        "obs_direction_flips": sum(a != b for a, b in zip(dirs, dirs[1:])),
+    }
 
 
 def _vmap_multi(state, srcs, dsts, backend="jnp"):
@@ -83,7 +99,9 @@ def run_sweep(*, backend="jnp", reps=None, seed=3, quick=False):
         steps_total = int(jnp.sum(m.steps))
         assert steps_total == int(jnp.sum(vm.steps)), "engines disagree on work"
         assert steps_total == int(jnp.sum(pm.steps)), "packed engine disagrees"
+        obs = _obs_columns(g, srcs, dsts)
         rows.append({
+            **obs,
             "q": q,
             "fused_s": t_fused,
             "fused_packed_s": t_packed,
@@ -120,6 +138,10 @@ def json_rows(rows, figure="multiquery",
                 "adj_packed_bytes": r["adj_packed_bytes"],
                 "adj_float32_bytes": r["adj_float32_bytes"],
                 "adj_compression": r["adj_compression"],
+                # obs-derived traversal columns (DESIGN.md §14)
+                "obs_supersteps": r["obs_supersteps"],
+                "obs_pull_supersteps": r["obs_pull_supersteps"],
+                "obs_direction_flips": r["obs_direction_flips"],
             })
     return out
 

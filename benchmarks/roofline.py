@@ -79,6 +79,40 @@ def format_table(rows) -> str:
     return "\n".join(out)
 
 
+def records(rows) -> list[dict]:
+    """Long-format BENCH records for the roofline table — the uniform
+    schema of benchmarks/run.py ({figure, q, engine, seconds, steps,
+    steps_per_s, speedup_vs_baseline} + extras), so a full ``--json`` run
+    commits ``BENCH_roofline.json`` next to the sweep figures and the
+    perf trajectory covers the analytic model too (DESIGN.md §14).
+
+    Mapping: one record per runnable (arch x shape) cell; ``seconds`` is
+    the binding roofline term (the modeled step time), ``q`` the
+    microbatch count, and ``speedup_vs_baseline`` the roofline fraction —
+    the cell's §Perf score, already a ratio-to-ideal.
+    """
+    out = []
+    for r in rows:
+        if r.get("skipped"):
+            continue
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append({
+            "figure": "roofline",
+            "q": int(r["microbatches"]),
+            "engine": f'{r["arch"]}/{r["shape"]}',
+            "seconds": float(bound_s),
+            "steps": 1,
+            "steps_per_s": 1.0 / bound_s if bound_s > 0 else 0.0,
+            "speedup_vs_baseline": float(r["roofline_fraction"]),
+            "compute_s": float(r["compute_s"]),
+            "memory_s": float(r["memory_s"]),
+            "collective_s": float(r["collective_s"]),
+            "dominant": r["dominant"],
+            "useful_ratio": float(r["useful_ratio"]),
+        })
+    return out
+
+
 def main(out_json: str | None = None):
     rows = build_table()
     print(format_table(rows))

@@ -169,6 +169,9 @@ def main() -> None:
         from benchmarks import roofline
         rows = roofline.build_table()
         print(roofline.format_table(rows))
+        # roofline rides the same long-format record stream (and hence the
+        # committed BENCH_roofline.json on full --json runs, DESIGN.md §14)
+        json_records += roofline.records(rows)
         for r in rows:
             if not r.get("skipped"):
                 csv.append(f'roofline/{r["arch"]}/{r["shape"]},'

@@ -38,7 +38,10 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.obs import trace as _trace
+from repro.obs.metrics import global_registry as _obs_registry
 from repro.core.graph import (
     WORD_BITS,
     GraphState,
@@ -462,20 +465,32 @@ def multi_bfs(state: GraphState, src_slots, dst_slots,
     mode stays in jnp for both hybrid flavors (parent extraction is the
     term the kernels exist to shrink, and closure mode has none).
     ``backend=None`` resolves via ``default_backend()`` here, outside the
-    jit boundary, so the resolved name is the static cache key.
+    jit boundary, so the resolved name is the static cache key. With the
+    tracing recorder enabled (DESIGN.md §14) — and only from host context,
+    never inside an enclosing jit trace — the SAME superstep body runs
+    under a host-driven loop instead of the fused ``lax.while_loop``, so
+    every superstep lands as one ``bfs.superstep`` span carrying its
+    direction tag and frontier/unvisited popcounts: bit-identical results,
+    post-hoc-explainable push/pull decisions.
     """
+    backend = _resolve_backend(backend)
+    if _trace.enabled() and not _is_tracer(state.valive):
+        return _multi_bfs_traced(state, src_slots, dst_slots,
+                                 backend=backend, parents=parents,
+                                 alpha=alpha, beta=beta)
     return _multi_bfs_jit(state, src_slots, dst_slots,
-                          backend=_resolve_backend(backend),
+                          backend=backend,
                           parents=parents, alpha=alpha, beta=beta)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("backend", "parents", "alpha", "beta"))
-def _multi_bfs_jit(state: GraphState, src_slots, dst_slots, backend: str,
-                   parents: bool, alpha: int,
-                   beta: int) -> MultiBFSResult:
-    src_slots = jnp.asarray(src_slots, jnp.int32)
-    dst_slots = jnp.asarray(dst_slots, jnp.int32)
+def _is_tracer(x) -> bool:
+    """True when called under an enclosing jit trace — the traced host
+    loop must never engage there (DESIGN.md §14)."""
+    return isinstance(x, jax.core.Tracer)
+
+
+def _multi_init(state: GraphState, src_slots, dst_slots, hybrid: bool):
+    """Shared loop-carry initialization for the fused and traced loops."""
     q = src_slots.shape[0]
     v = state.capacity
     alive = state.valive
@@ -488,6 +503,21 @@ def _multi_bfs_jit(state: GraphState, src_slots, dst_slots, backend: str,
     dist0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
     expanded0 = jnp.zeros((q, v), jnp.bool_)
     steps0 = jnp.zeros((q,), jnp.int32)
+    init = (frontier0, visited0, parent0, dist0, expanded0, steps0,
+            jnp.int32(0))
+    if hybrid:
+        init = init + (jnp.asarray(False),)
+    return init, src_ok
+
+
+def _multi_step_fns(state: GraphState, dst_slots, backend: str,
+                    parents: bool, alpha: int, beta: int):
+    """(cond, body) of the fused superstep loop — ONE implementation shared
+    by the jitted ``lax.while_loop`` and the traced host-driven loop
+    (DESIGN.md §14), so the traced path cannot drift from production."""
+    q = dst_slots.shape[0]
+    v = state.capacity
+    alive = state.valive
     hybrid = backend in HYBRID_BACKENDS
     is_packed = backend in PACKED_BACKENDS or hybrid
     if hybrid:
@@ -566,11 +596,94 @@ def _multi_bfs_jit(state: GraphState, src_slots, dst_slots, backend: str,
         out = (new, visited, parent, dist, expanded, steps, step + 1)
         return out + (pulling,) if hybrid else out
 
-    init = (frontier0, visited0, parent0, dist0, expanded0, steps0,
-            jnp.int32(0))
-    if hybrid:
-        init = init + (jnp.asarray(False),)
-    final = jax.lax.while_loop(cond, body, init)
+    return cond, body
+
+
+def _multi_result(final, src_ok, dst_slots) -> MultiBFSResult:
     frontiers, visited, parent, dist, expanded, steps, supersteps = final[:7]
+    q = visited.shape[0]
     found = (dst_slots >= 0) & visited[jnp.arange(q), jnp.maximum(dst_slots, 0)] & src_ok
     return MultiBFSResult(found, parent, dist, expanded, steps, supersteps)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "parents", "alpha", "beta"))
+def _multi_bfs_jit(state: GraphState, src_slots, dst_slots, backend: str,
+                   parents: bool, alpha: int,
+                   beta: int) -> MultiBFSResult:
+    src_slots = jnp.asarray(src_slots, jnp.int32)
+    dst_slots = jnp.asarray(dst_slots, jnp.int32)
+    hybrid = backend in HYBRID_BACKENDS
+    init, src_ok = _multi_init(state, src_slots, dst_slots, hybrid)
+    cond, body = _multi_step_fns(state, dst_slots, backend, parents,
+                                 alpha, beta)
+    final = jax.lax.while_loop(cond, body, init)
+    return _multi_result(final, src_ok, dst_slots)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "parents", "alpha", "beta"))
+def _multi_superstep_jit(state: GraphState, dst_slots, carry, backend: str,
+                         parents: bool, alpha: int, beta: int):
+    """ONE fused superstep — the traced host loop's jitted unit of work.
+    Applies the same ``body`` the while_loop runs (DESIGN.md §14)."""
+    _, body = _multi_step_fns(state, dst_slots, backend, parents,
+                              alpha, beta)
+    return body(carry)
+
+
+def _multi_bfs_traced(state: GraphState, src_slots, dst_slots, *,
+                      backend: str, parents: bool, alpha: int,
+                      beta: int) -> MultiBFSResult:
+    """Host-driven superstep loop under the tracing recorder
+    (DESIGN.md §14): bit-identical to ``_multi_bfs_jit`` (same init, same
+    superstep body, same termination predicate), but each superstep is one
+    jitted call fenced by ``jax.block_until_ready`` and recorded as a
+    ``bfs.superstep`` span with its direction tag and frontier/unvisited
+    popcounts — the push/pull decision trail the Perfetto trace makes
+    navigable. Never runs inside an enclosing jit (see ``multi_bfs``).
+    """
+    reg = _obs_registry()
+    src_slots = jnp.asarray(src_slots, jnp.int32)
+    dst_slots = jnp.asarray(dst_slots, jnp.int32)
+    hybrid = backend in HYBRID_BACKENDS
+    carry, src_ok = _multi_init(state, src_slots, dst_slots, hybrid)
+    q = int(src_slots.shape[0])
+    v = int(state.capacity)
+    dst_np = np.asarray(dst_slots)
+    alive_np = np.asarray(state.valive)
+    last_dir = None
+    with _trace.span("bfs.session", queries=q, capacity=v,
+                     backend=backend, parents=parents) as session:
+        while True:
+            # the while_loop cond, evaluated host-side on materialized carry
+            frontiers = np.asarray(carry[0])
+            visited = np.asarray(carry[1])
+            step = int(carry[6])
+            hit_dst = (dst_np >= 0) & visited[np.arange(q),
+                                             np.maximum(dst_np, 0)]
+            act = frontiers.any(axis=1) & ~hit_dst & (step < v)
+            if not act.any():
+                break
+            nf = int(frontiers[act].sum())
+            nu = int(((alive_np[None, :] & ~visited) & act[:, None]).sum())
+            with _trace.span("bfs.superstep", step=step, frontier_pop=nf,
+                             unvisited_pop=nu) as sp:
+                carry = _multi_superstep_jit(state, dst_slots, carry,
+                                             backend=backend,
+                                             parents=parents, alpha=alpha,
+                                             beta=beta)
+                _trace.fence(carry)
+                # the carried ``pulling`` flag IS the decision this
+                # superstep executed — read it back, never re-derive it
+                direction = ("pull" if hybrid and bool(carry[7])
+                             else "push")
+                sp.set(direction=direction)
+            reg.inc("bfs.supersteps")
+            if direction == "pull":
+                reg.inc("bfs.pull_supersteps")
+            if last_dir is not None and direction != last_dir:
+                reg.inc("bfs.direction_flips")
+            last_dir = direction
+        session.set(supersteps=int(carry[6]))
+    return _multi_result(carry, src_ok, dst_slots)

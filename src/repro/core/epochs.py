@@ -51,6 +51,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.graph import GraphState, pack_transpose
+from repro.obs import trace as _trace
+from repro.obs.metrics import global_registry as _obs_registry
 
 # The six per-row fields a delta record patches, in GraphState order
 # (adj_in_packed is derived, never stored; see module docstring).
@@ -176,6 +178,11 @@ class EpochRing:
         while len(self._records) > self.retain - 1:
             self._records.pop(0)
             self.evicted += 1
+            if _trace.enabled():
+                _obs_registry().inc("ring.evictions")
+        if _trace.enabled():
+            _obs_registry().set("ring.occupancy", len(self._records))
+            _trace.counter("ring.occupancy", len(self._records))
 
     # -- read side ----------------------------------------------------------
     def window(self) -> tuple[int, int]:
@@ -212,8 +219,18 @@ class EpochRing:
         Always a dense ``GraphState`` (time-travel queries are read-only;
         a sharded pool's history reconstructs to the gathered dense form).
         Raises ``EpochEvictedError`` outside the window."""
-        f = self._fields_at(epoch)
-        adj = jnp.asarray(f["adj_packed"])
+        with _trace.span("ring.state_at", epoch=int(epoch)) as sp:
+            f = self._fields_at(epoch)
+            if _trace.enabled():
+                # replay depth: records XORed backward from the newest state
+                depth = min(len(self._records),
+                            max(0, self._newest - int(epoch)))
+                sp.set(depth=depth)
+                _obs_registry().observe("ring.resolve_depth", depth)
+            adj = jnp.asarray(f["adj_packed"])
+            return self._state_from_fields(f, adj)
+
+    def _state_from_fields(self, f, adj) -> GraphState:
         return GraphState(
             vkey=jnp.asarray(f["vkey"]),
             valive=jnp.asarray(f["valive"]),

@@ -516,9 +516,37 @@ def multi_bfs(state: ShardedGraphState, src_slots, dst_slots,
     ``core.bfs.default_backend()`` HERE, outside the jit boundary, so the
     resolved name (not None) is the static cache key and a changed
     ``REPRO_BFS_BACKEND`` takes effect on the next call.
+
+    Under tracing (DESIGN.md §14) the call is wrapped in one
+    ``bfs.session.sharded`` span recording supersteps and the estimated
+    packed frontier-exchange volume (the per-superstep psum/all_gather of
+    [Q, ceil(V/32)] uint32 words across all shards). The while_loop stays
+    inside shard_map, so there are no per-superstep child spans here —
+    superstep-level attribution is the dense engine's traced path.
     """
+    backend = _resolve_backend(backend)
+    from repro.obs import trace as _trace
+    if _trace.enabled() and not isinstance(state.valive, jax.core.Tracer):
+        from repro.obs.metrics import global_registry as _obs_registry
+
+        q = int(jnp.asarray(src_slots).shape[0])
+        v = int(state.capacity)
+        size = int(state.mesh.shape[AXIS])
+        with _trace.span("bfs.session.sharded", queries=q, capacity=v,
+                         shards=size, backend=backend) as sp:
+            res = _multi_bfs_jit(state, src_slots, dst_slots,
+                                 backend=backend, alpha=alpha, beta=beta)
+            _trace.fence(res)
+            steps = int(res.supersteps)
+            words = (v + 31) // 32
+            xbytes = steps * q * words * 4 * size
+            sp.set(supersteps=steps, exchange_bytes=xbytes)
+            reg = _obs_registry()
+            reg.inc("bfs.supersteps", steps)
+            reg.inc("bfs.exchange_bytes", xbytes)
+        return res
     return _multi_bfs_jit(state, src_slots, dst_slots,
-                          backend=_resolve_backend(backend), alpha=alpha,
+                          backend=backend, alpha=alpha,
                           beta=beta)
 
 

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import ops as gops
 from repro.core.bfs import bfs, extract_path, multi_bfs
 from repro.core.graph import GraphState, OpBatch, find_slot, find_slots, version_vector
+from repro.obs import trace as _trace
 
 
 class Collect(NamedTuple):
@@ -157,12 +158,50 @@ def collect_batch(state, ks, ls, backend: str | None = None,
 
     ``backend=None`` resolves via ``core.bfs.default_backend()`` here,
     outside the jit boundary, so the resolved name is the static key.
-    """
-    from repro.core.bfs import _resolve_backend
 
-    return _collect_batch_jit(state, ks, ls,
-                              backend=_resolve_backend(backend),
-                              engine=engine)
+    Under the tracing recorder (DESIGN.md §14) the fused engine runs as a
+    host-level composition — slot lookup, ``multi_bfs`` (whose traced form
+    emits one ``bfs.superstep`` span per expansion), jitted finisher — so
+    the per-superstep spans surface at the serving layer too. Results are
+    bit-identical: same ops, only the jit boundary moves.
+    """
+    from repro.core.bfs import _is_tracer, _resolve_backend
+
+    backend = _resolve_backend(backend)
+    if (engine == "fused" and _trace.enabled()
+            and not _is_tracer(state.valive)):
+        ks = jnp.asarray(ks, jnp.int32)
+        ls = jnp.asarray(ls, jnp.int32)
+        from repro.core import partition
+        from repro.core.partition import ShardedGraphState
+
+        sk = find_slots(state, ks)
+        sl = find_slots(state, ls)
+        traverse = (partition.multi_bfs
+                    if isinstance(state, ShardedGraphState) else multi_bfs)
+        res = traverse(state, sk, sl, backend=backend)
+        return _collect_batch_finish_jit(state, res, sk, sl)
+    return _collect_batch_jit(state, ks, ls, backend=backend, engine=engine)
+
+
+def _finish_collect_batch(state, res, sk, sl):
+    """Touched-set/version bookkeeping after the fused traversal — shared
+    by the end-to-end jit and the traced host path (DESIGN.md §14)."""
+    present = (sk >= 0) & (sl >= 0)
+    q = sk.shape[0]
+    qi = jnp.arange(q)
+    touched = res.expanded
+    tk = jnp.maximum(sk, 0)
+    tl = jnp.maximum(sl, 0)
+    touched = touched.at[qi, tk].set(touched[qi, tk] | (sk >= 0))
+    touched = touched.at[qi, tl].set(touched[qi, tl] | (sl >= 0))
+    vv = jnp.where(touched[:, :, None], version_vector(state)[None], jnp.int32(0))
+    return Collect(res.found & present, res.parent, touched, vv, sk, sl, present)
+
+
+@jax.jit
+def _collect_batch_finish_jit(state, res, sk, sl):
+    return _finish_collect_batch(state, res, sk, sl)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "engine"))
@@ -180,18 +219,9 @@ def _collect_batch_jit(state, ks, ls, backend: str, engine: str):
         raise ValueError(f"unknown collect_batch engine {engine!r}")
     sk = find_slots(state, ks)
     sl = find_slots(state, ls)
-    present = (sk >= 0) & (sl >= 0)
     traverse = partition.multi_bfs if sharded else multi_bfs
     res = traverse(state, sk, sl, backend=backend)
-    q = ks.shape[0]
-    qi = jnp.arange(q)
-    touched = res.expanded
-    tk = jnp.maximum(sk, 0)
-    tl = jnp.maximum(sl, 0)
-    touched = touched.at[qi, tk].set(touched[qi, tk] | (sk >= 0))
-    touched = touched.at[qi, tl].set(touched[qi, tl] | (sl >= 0))
-    vv = jnp.where(touched[:, :, None], version_vector(state)[None], jnp.int32(0))
-    return Collect(res.found & present, res.parent, touched, vv, sk, sl, present)
+    return _finish_collect_batch(state, res, sk, sl)
 
 
 @jax.jit
@@ -251,37 +281,51 @@ def get_paths_session(fetch_state, pairs, *, max_rounds: int | None = 16,
         raise ValueError(f"unknown on_conflict mode {on_conflict!r}")
     ks = [p[0] for p in pairs]
     ls = [p[1] for p in pairs]
-    state = fetch_state()
-    prev = collect_batch(state, ks, ls, backend=backend, engine=engine)
-    rounds = 1
-    while True:
+    with _trace.span("session.get_paths", pairs=len(pairs),
+                     on_conflict=on_conflict) as _sp:
         state = fetch_state()
-        cur = collect_batch(state, ks, ls, backend=backend, engine=engine)
-        rounds += 1
-        # a capacity grow between collects changes every row shape — by
-        # definition an effective mutation, never a match (comparing would
-        # be a shape error, not a False)
-        if (prev.versions.shape == cur.versions.shape
-                and bool(compare_collect_batches(prev, cur))):
-            _session_stats(stats, rounds=rounds, starved=False,
-                           resolved="match", epoch=None)
-            return _materialize_batch(state, cur, pairs, rounds), rounds
-        prev = cur
-        if max_rounds is not None and rounds >= max_rounds:
-            if on_conflict == "epoch":
-                if fetch_epoch is not None:
-                    epoch, state = fetch_epoch()
-                else:
-                    epoch, state = None, fetch_state()
-                cur = collect_batch(state, ks, ls, backend=backend,
-                                    engine=engine)
-                rounds += 1
-                _session_stats(stats, rounds=rounds, starved=True,
-                               resolved="epoch", epoch=epoch)
+        with _trace.span("collect.round", round=1):
+            prev = _trace.fence(
+                collect_batch(state, ks, ls, backend=backend, engine=engine))
+        rounds = 1
+        while True:
+            state = fetch_state()
+            with _trace.span("collect.round", round=rounds + 1):
+                cur = _trace.fence(
+                    collect_batch(state, ks, ls, backend=backend,
+                                  engine=engine))
+            rounds += 1
+            # a capacity grow between collects changes every row shape — by
+            # definition an effective mutation, never a match (comparing would
+            # be a shape error, not a False)
+            if (prev.versions.shape == cur.versions.shape
+                    and bool(compare_collect_batches(prev, cur))):
+                _session_stats(stats, rounds=rounds, starved=False,
+                               resolved="match", epoch=None)
+                _sp.set(rounds=rounds, resolved="match")
                 return _materialize_batch(state, cur, pairs, rounds), rounds
-            _session_stats(stats, rounds=rounds, starved=True,
-                           resolved="budget", epoch=None)
-            return [(False, []) for _ in pairs], rounds
+            prev = cur
+            if max_rounds is not None and rounds >= max_rounds:
+                if on_conflict == "epoch":
+                    if fetch_epoch is not None:
+                        epoch, state = fetch_epoch()
+                    else:
+                        epoch, state = None, fetch_state()
+                    with _trace.span("collect.round", round=rounds + 1,
+                                     pinned=True):
+                        cur = _trace.fence(
+                            collect_batch(state, ks, ls, backend=backend,
+                                          engine=engine))
+                    rounds += 1
+                    _session_stats(stats, rounds=rounds, starved=True,
+                                   resolved="epoch", epoch=epoch)
+                    _sp.set(rounds=rounds, resolved="epoch")
+                    return (_materialize_batch(state, cur, pairs, rounds),
+                            rounds)
+                _session_stats(stats, rounds=rounds, starved=True,
+                               resolved="budget", epoch=None)
+                _sp.set(rounds=rounds, resolved="budget")
+                return [(False, []) for _ in pairs], rounds
 
 
 # ----------------------------------------------------------------------------

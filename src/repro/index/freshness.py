@@ -39,6 +39,7 @@ over the same landmarks (tests/test_index.py asserts this).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -46,6 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bfs import multi_bfs
+from repro.obs import trace as _trace
+from repro.obs.metrics import global_registry as _obs_registry
 from repro.core.graph import find_slots, version_vector
 from repro.core.snapshot import get_paths_session
 from repro.index.labels import (
@@ -237,32 +240,56 @@ def reach_session(fetch_state, index: ReachIndex | None, pairs, *,
 
     if q == 0:
         return ReachSessionResult([], 0, 0, False, 0, materialize)
-    # the admitted epoch is read BEFORE the state fetch: it bounds the
-    # query's invocation from below, so any pin >= it is a moment inside
-    # the invocation window (fetch_epoch returns the published
-    # (epoch, state) slot)
-    admitted = fetch_epoch()[0] if fetch_epoch is not None else None
-    state = fetch_state()
-    if index_fresh(index, state):
-        return _index_serve(state, fetch_state, None)
-    if on_conflict == "epoch" and admitted is not None:
-        pin = index_fresh_at(index, ring)
-        if pin is not None and pin >= admitted:
-            # only a RACING mutation separates the index from the head:
-            # decided pairs are exact at the pinned epoch, and undecided
-            # pairs collect over the frozen reconstruction (one consistent
-            # state — two rounds, no race)
-            pinned = ring.state_at(pin)
-            return _index_serve(pinned, lambda: pinned, pin)
-    st: dict = {}
-    out, rounds = get_paths_session(fetch_state, pairs, max_rounds=max_rounds,
-                                    backend=backend, engine=engine,
-                                    on_conflict=on_conflict,
-                                    fetch_epoch=fetch_epoch, stats=st)
-    return ReachSessionResult([bool(f) for f, _ in out], 0, q,
-                              index is not None, rounds, materialize,
-                              pinned_epoch=st.get("epoch"),
-                              starved=bool(st.get("starved", False)))
+
+    def _session_body():
+        # the admitted epoch is read BEFORE the state fetch: it bounds the
+        # query's invocation from below, so any pin >= it is a moment inside
+        # the invocation window (fetch_epoch returns the published
+        # (epoch, state) slot)
+        admitted = fetch_epoch()[0] if fetch_epoch is not None else None
+        state = fetch_state()
+        if index_fresh(index, state):
+            return _index_serve(state, fetch_state, None)
+        if on_conflict == "epoch" and admitted is not None:
+            with _trace.span("index.ring_validate", admitted=admitted):
+                t0 = time.perf_counter()
+                pin = index_fresh_at(index, ring)
+                ok = pin is not None and pin >= admitted
+                pinned = ring.state_at(pin) if ok else None
+                if _trace.enabled():
+                    _obs_registry().observe("index.ring_validate_s",
+                                            time.perf_counter() - t0)
+            if ok:
+                # only a RACING mutation separates the index from the head:
+                # decided pairs are exact at the pinned epoch, and undecided
+                # pairs collect over the frozen reconstruction (one
+                # consistent state — two rounds, no race)
+                return _index_serve(pinned, lambda: pinned, pin)
+        st: dict = {}
+        with _trace.span("index.fallback", pairs=q):
+            t0 = time.perf_counter()
+            out, rounds = get_paths_session(fetch_state, pairs,
+                                            max_rounds=max_rounds,
+                                            backend=backend, engine=engine,
+                                            on_conflict=on_conflict,
+                                            fetch_epoch=fetch_epoch, stats=st)
+            if _trace.enabled():
+                _obs_registry().observe("index.fallback_s",
+                                        time.perf_counter() - t0)
+        return ReachSessionResult([bool(f) for f, _ in out], 0, q,
+                                  index is not None, rounds, materialize,
+                                  pinned_epoch=st.get("epoch"),
+                                  starved=bool(st.get("starved", False)))
+
+    with _trace.span("index.query", pairs=q) as sp:
+        t0 = time.perf_counter()
+        res = _session_body()
+        sp.set(from_index=res.from_index, fellback=res.fellback,
+               stale=res.stale, pinned=res.pinned_epoch)
+        if _trace.enabled():
+            _obs_registry().observe("index.query_s",
+                                    time.perf_counter() - t0)
+        return res
 
 
 def reach_counts_session(fetch_state, index: ReachIndex | None, keys, *,

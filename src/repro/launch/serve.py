@@ -8,10 +8,18 @@ several simulated clients stream conflicting mutation batches, query
 sessions resolve wait-free against the published epoch when starved, and
 after the decode loop the launcher issues time-travel reachability and
 epoch-diff queries against retained (and one evicted) epochs.
+
+``REPRO_TRACE=1`` arms the observability recorder (DESIGN.md §14): the
+run emits a Perfetto-loadable trace (``REPRO_TRACE_PATH``, default
+``repro_trace.json``) with the full span hierarchy — ingest round →
+fused apply, bfs session → per-superstep direction tags, index query →
+ring-validate/fallback — plus a ``get_metrics`` dump. Load the file at
+https://ui.perfetto.dev or summarize it with ``tools/trace_view.py``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -19,6 +27,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import OP_ADD_E, OP_ADD_V
 from repro.models.model import build_model
+from repro.obs import trace
 from repro.runtime.serve_loop import GraphCoServer, serve
 
 
@@ -40,8 +49,15 @@ def _demo_epoch_ring(graph: GraphCoServer, rng) -> None:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="tiny config (default; --no-smoke for full size)")
+    ap.add_argument("--index", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="maintain the 2-hop reachability index "
+                         "(DESIGN.md §9) so queries take the index fast "
+                         "path / ring-validate / fallback routes")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=32)
@@ -64,7 +80,7 @@ def main():
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
 
-    graph = GraphCoServer(ingest=args.ingest,
+    graph = GraphCoServer(ingest=args.ingest, index=args.index,
                           retain_epochs=args.retain_epochs)
     for k in range(16):
         graph.submit([(OP_ADD_V, k)])
@@ -109,6 +125,25 @@ def main():
         print(f"ring endpoints: tt_calls {graph.tt_calls} "
               f"(evicted {graph.tt_evicted}), "
               f"epoch_diff_calls {graph.epoch_diff_calls}")
+    if args.index:
+        # one query against a deliberately stale index (mutate, don't
+        # refresh): exercises the ring-validate / BFS-fallback routes the
+        # in-loop queries skip because index_tick refreshes first
+        # (DESIGN.md §9, §13 — and their spans under REPRO_TRACE)
+        u, v = (int(x) for x in rng.integers(0, 16, 2))
+        graph.submit([(OP_ADD_E, u, v)])
+        res = graph.get_reach([(u, v)])
+        print(f"stale-index reach({u},{v}) -> {res.found[0]} "
+              f"(from_index {res.from_index}, fellback {res.fellback}, "
+              f"pinned {res.pinned_epoch})")
+    if trace.enabled():
+        path = trace.save()
+        n = len(trace.recorder().events())
+        print(f"trace: {n} events -> {path} "
+              f"(load at https://ui.perfetto.dev, or "
+              f"`python tools/trace_view.py --summarize {path}`)")
+        print("metrics:", json.dumps(graph.get_metrics(), indent=2,
+                                     default=str))
 
 
 if __name__ == "__main__":

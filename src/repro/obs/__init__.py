@@ -1,0 +1,45 @@
+"""Observability: structured tracing + typed metrics (DESIGN.md §14).
+
+``repro.obs.trace`` — hierarchical spans with a process-global recorder
+(env ``REPRO_TRACE=1``), Perfetto/Chrome trace-event export, and a
+device-timing ``fence``. ``repro.obs.metrics`` — the typed
+``MetricsRegistry`` plus the ``StatsView`` base the ad-hoc stat
+dataclasses now ride on. Both halves are free when disabled: the tier-1
+overhead test (tests/test_obs.py) pins zero extra jit retraces and a <5%
+wall budget for the disabled instrumentation.
+"""
+from repro.obs.metrics import (
+    GLOBAL,
+    MetricsRegistry,
+    OBS_METRICS,
+    StatsView,
+    global_registry,
+)
+from repro.obs.trace import (
+    capture,
+    counter,
+    disable,
+    enable,
+    enabled,
+    fence,
+    recorder,
+    save,
+    span,
+)
+
+__all__ = [
+    "GLOBAL",
+    "MetricsRegistry",
+    "OBS_METRICS",
+    "StatsView",
+    "capture",
+    "counter",
+    "disable",
+    "enable",
+    "enabled",
+    "fence",
+    "global_registry",
+    "recorder",
+    "save",
+    "span",
+]

@@ -60,7 +60,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -78,6 +78,9 @@ from repro.core import (
 )
 from repro.core import partition
 from repro.core.epochs import EpochEvictedError, EpochRing
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry, StatsView
+from repro.obs.metrics import global_registry as _obs_registry
 
 _VERTEX_OPS = (OP_ADD_V, OP_REM_V, OP_CON_V)
 _EDGE_OPS = (OP_ADD_E, OP_REM_E, OP_CON_E)
@@ -173,26 +176,34 @@ class Ticket:
         return len(self.ops)
 
 
-@dataclass
-class IngestStats:
-    """Admission observability (surfaced through ServeStats, DESIGN.md §12)."""
+class IngestStats(StatsView):
+    """Admission observability (surfaced through ServeStats and the
+    ``get_metrics`` endpoint, DESIGN.md §12, §14).
 
-    submitted: int = 0
-    applied: int = 0
-    aborted: int = 0
-    fused_calls: int = 0          # device-side fused apply_ops_fast calls
-    coalesced_batches: int = 0    # client batches carried by those calls
-    coalesce_max: int = 0         # max client batches in one fused call
-    coalesce_lanes_max: int = 0   # max fused lanes (pre-padding)
-    retries: int = 0              # admission round losses across all batches
-    wait_s: float = 0.0           # total enqueue->admission wait
-    wait_max_s: float = 0.0
-    queue_depth_max: int = 0
-    queue_depth: int = 0          # depth at the last pump
-    epochs: int = 0               # snapshot epochs published
-    grow_events: int = 0          # R_TABLE_FULL auto-grow replays
-    epochs_retained: int = 0      # epochs currently addressable in the ring
-    epochs_evicted: int = 0       # delta records dropped by bounded retention
+    A ``MetricsRegistry``-backed view: each field below is stored under
+    ``ingest.<field>`` in the pool's registry, while every pre-existing
+    ``stats.field`` read/write keeps its exact dataclass semantics.
+    """
+
+    _PREFIX = "ingest"
+    _SPEC = {
+        "submitted": ("counter", 0),
+        "applied": ("counter", 0),
+        "aborted": ("counter", 0),
+        "fused_calls": ("counter", 0),         # fused apply_ops_fast calls
+        "coalesced_batches": ("counter", 0),   # client batches they carried
+        "coalesce_max": ("gauge", 0),          # max batches in one fused call
+        "coalesce_lanes_max": ("gauge", 0),    # max fused lanes (pre-padding)
+        "retries": ("counter", 0),             # admission round losses
+        "wait_s": ("counter", 0.0),            # total enqueue->admission wait
+        "wait_max_s": ("gauge", 0.0),
+        "queue_depth_max": ("gauge", 0),
+        "queue_depth": ("gauge", 0),           # depth at the last pump
+        "epochs": ("gauge", 0),                # snapshot epochs published
+        "grow_events": ("counter", 0),         # R_TABLE_FULL auto-grow replays
+        "epochs_retained": ("gauge", 0),       # epochs addressable in the ring
+        "epochs_evicted": ("gauge", 0),        # deltas dropped by retention
+    }
 
 
 def _next_pow2(n: int, floor: int = 8) -> int:
@@ -220,7 +231,8 @@ class IngestPool:
     def __init__(self, state, *, mesh=None, auto_grow: bool = True,
                  max_inflight: int = 8, max_coalesce_lanes: int = 256,
                  pad_lanes: bool = True, fault=None, on_grow=None,
-                 clock=time.monotonic, retain_epochs: int = 64):
+                 clock=time.monotonic, retain_epochs: int = 64,
+                 registry: MetricsRegistry | None = None):
         self.mesh = mesh if mesh is not None else getattr(state, "mesh", None)
         self.auto_grow = auto_grow
         self.max_inflight = int(max_inflight)
@@ -230,7 +242,10 @@ class IngestPool:
         self.on_grow = on_grow
         self.clock = clock
         self.locks = EntityLockTable()
-        self.stats = IngestStats()
+        # pool-local registry (shareable with the owning server's ServeStats
+        # so one snapshot serves both, DESIGN.md §14)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.stats = IngestStats(self.registry)
         self.linearization: list[int] = []   # batch_ids in claimed serial order
         self.tickets: dict[int, Ticket] = {}
         self.epoch_log: dict[int, int] = {0: 0}  # epoch -> linearization prefix
@@ -410,22 +425,36 @@ class IngestPool:
             res = np.asarray(res)
             with self._mutex:
                 self.stats.grow_events += 1
+            _trace.counter("ingest.grow_events", self.stats.grow_events)
             if self.on_grow is not None:
                 self.on_grow()
         return state, res
 
     def pump(self) -> int:
-        """One admission round; returns the number of batches applied."""
-        with self._admission:
-            admitted = self._admit()
+        """One admission round; returns the number of batches applied.
+
+        Traced as one ``ingest.round`` span enclosing ``ingest.admit`` and
+        the round's ``ingest.fused_apply`` (DESIGN.md §14); wall seconds
+        land in the ``ingest.round_s`` histogram when tracing is on.
+        """
+        with self._admission, _trace.span("ingest.round") as sp:
+            t0 = time.perf_counter()
+            with _trace.span("ingest.admit"):
+                admitted = self._admit()
             if not admitted:
                 return 0
             try:
-                return self._run_round(admitted)
+                applied = self._run_round(admitted)
             finally:
                 for t in admitted:
                     if t.status != "aborted":  # aborted already released
                         self.locks.release_sorted(t.footprint)
+            sp.set(admitted=len(admitted), applied=applied,
+                   epoch=self.epoch)
+            if _trace.enabled():
+                _obs_registry().observe("ingest.round_s",
+                                        time.perf_counter() - t0)
+            return applied
 
     def _run_round(self, admitted: list[Ticket]) -> int:
         base = self._head
@@ -437,7 +466,14 @@ class IngestPool:
             lanes = len(fused)
             pad = _next_pow2(lanes) if self.pad_lanes else lanes
             batch = make_op_batch(fused, lanes=pad)
-            state, res = self._apply_with_grow(base, batch)
+            with _trace.span("ingest.fused_apply", lanes=lanes, pad=pad,
+                             batches=len(live)):
+                t0 = time.perf_counter()
+                state, res = self._apply_with_grow(base, batch)
+                _trace.fence(state)
+            if _trace.enabled():
+                _obs_registry().observe("ingest.fused_apply_s",
+                                        time.perf_counter() - t0)
             # post-apply fault window: a batch dying here has its lanes in
             # the fused result — that result must be thrown away, never
             # published (no torn apply_ops_fast; DESIGN.md §12)

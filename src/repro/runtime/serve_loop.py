@@ -39,34 +39,48 @@ from repro.index import (
     reach_session,
     refresh,
 )
+from repro.obs import trace as _trace
+from repro.obs.metrics import StatsView
+from repro.obs.metrics import global_registry as _obs_registry
 
 
-@dataclass
-class ServeStats:
-    decode_steps: int = 0
-    decode_tokens: int = 0
-    graph_ops: int = 0
-    getpath_calls: int = 0
-    getpath_rounds: int = 0
-    getpath_starved: int = 0  # sessions whose double collect never matched
-    epoch_resolved: int = 0   # starved sessions resolved wait-free (§13)
-    tt_calls: int = 0         # time-travel reachability queries served
-    tt_evicted: int = 0       # time-travel queries past the retention window
-    epoch_diff_calls: int = 0  # epoch-diff audit queries served
-    grow_events: int = 0
-    index_hits: int = 0       # queries answered on the index fast path
-    index_misses: int = 0     # queries that fell back to the fused BFS
-    index_refreshes: int = 0  # index builds/refreshes performed
-    # -- multi-tenant admission observability (DESIGN.md §12) ---------------
-    ingest_batches: int = 0         # client batches admitted and applied
-    ingest_fused_calls: int = 0     # coalesced device-side apply calls
-    ingest_coalesce_max: int = 0    # max client batches in one fused call
-    ingest_retries: int = 0         # admission rounds lost to conflicts
-    ingest_wait_s: float = 0.0      # total enqueue->admission wait
-    ingest_wait_max_s: float = 0.0
-    ingest_queue_depth_max: int = 0
-    ingest_epochs: int = 0          # snapshot epochs published
-    wall_s: float = 0.0
+class ServeStats(StatsView):
+    """Per-``serve()``-call observability (DESIGN.md §12, §13, §14).
+
+    A ``MetricsRegistry``-backed view (fields stored under
+    ``serve.<field>``): every field reports THIS call's activity — server-
+    lifetime counters are snapshotted at serve start and reported as
+    deltas, except the ``*_max`` high-water marks, which stay lifetime
+    values (a max has no meaningful delta).
+    """
+
+    _PREFIX = "serve"
+    _SPEC = {
+        "decode_steps": ("counter", 0),
+        "decode_tokens": ("counter", 0),
+        "graph_ops": ("counter", 0),
+        "getpath_calls": ("counter", 0),
+        "getpath_rounds": ("counter", 0),
+        "getpath_starved": ("gauge", 0),  # sessions whose collects never matched
+        "epoch_resolved": ("gauge", 0),   # starved sessions resolved wait-free
+        "tt_calls": ("gauge", 0),         # time-travel queries served
+        "tt_evicted": ("gauge", 0),       # time-travel past the window
+        "epoch_diff_calls": ("gauge", 0),  # epoch-diff audit queries served
+        "grow_events": ("gauge", 0),      # auto-grows during THIS serve call
+        "index_hits": ("gauge", 0),       # index fast-path answers
+        "index_misses": ("gauge", 0),     # fused-BFS fallbacks
+        "index_refreshes": ("gauge", 0),  # index builds/refreshes
+        # -- multi-tenant admission observability (DESIGN.md §12) -----------
+        "ingest_batches": ("gauge", 0),       # client batches applied
+        "ingest_fused_calls": ("gauge", 0),   # coalesced device applies
+        "ingest_coalesce_max": ("gauge", 0),  # max batches in one fused call
+        "ingest_retries": ("gauge", 0),       # rounds lost to conflicts
+        "ingest_wait_s": ("gauge", 0.0),      # total enqueue->admission wait
+        "ingest_wait_max_s": ("gauge", 0.0),
+        "ingest_queue_depth_max": ("gauge", 0),
+        "ingest_epochs": ("gauge", 0),        # snapshot epochs published
+        "wall_s": ("gauge", 0.0),
+    }
 
 
 @dataclass
@@ -395,6 +409,33 @@ class GraphCoServer:
                 self.index_misses += len(counts)
         return counts
 
+    # -- metrics endpoint (DESIGN.md §14) ----------------------------------
+    def get_metrics(self) -> dict:
+        """One flat name -> value snapshot of everything the server can
+        observe (DESIGN.md §14): its lifetime counters (``server.*``), the
+        ingest pool's registry (``ingest.*``) plus ring window, and the
+        process-global tracing metrics (``bfs.*``, ``index.*``, ``ring.*``,
+        ``ingest.*_s`` histograms). Histograms are {count, sum, min, max}
+        sub-dicts; everything is plain JSON-serializable."""
+        out = {
+            "server.grow_events": self.grow_events,
+            "server.index_hits": self.index_hits,
+            "server.index_misses": self.index_misses,
+            "server.index_refreshes": self.index_refreshes,
+            "server.getpath_starved": self.getpath_starved,
+            "server.epoch_resolved": self.epoch_resolved,
+            "server.tt_calls": self.tt_calls,
+            "server.tt_evicted": self.tt_evicted,
+            "server.epoch_diff_calls": self.epoch_diff_calls,
+        }
+        if self.pool is not None:
+            out.update(self.pool.registry.snapshot())
+            lo, hi = self.pool.epoch_window()
+            out["ring.window_lo"] = int(lo)
+            out["ring.window_hi"] = int(hi)
+        out.update(_obs_registry().snapshot())
+        return out
+
 
 def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
           cache_len: int, graph: GraphCoServer | None = None,
@@ -413,8 +454,11 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
     """
     t0 = time.time()
     stats = ServeStats()
-    # index counters on the server are lifetime-cumulative; ServeStats
-    # reports per-serve deltas like every other field
+    # server counters are lifetime-cumulative; ServeStats reports per-serve
+    # deltas, so EVERY lifetime counter gets a start-of-serve snapshot —
+    # grow_events included (it used to leak the lifetime total into the
+    # second and later serve() calls)
+    grow0 = graph.grow_events if graph is not None else 0
     idx0 = ((graph.index_hits, graph.index_misses, graph.index_refreshes)
             if graph is not None else (0, 0, 0))
     ring0 = ((graph.getpath_starved, graph.epoch_resolved, graph.tt_calls,
@@ -427,8 +471,13 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
              pool.stats.wait_s, pool.stats.epochs)
             if pool is not None else (0, 0, 0, 0.0, 0))
     b, p = prompts.shape
-    last, caches = model.prefill(params, {"tokens": jnp.asarray(prompts)})
-    caches = model.cache_from_prefill(caches, cache_len)
+    _session = _trace.span("serve.session", batch=b,
+                           max_new_tokens=max_new_tokens)
+    _session.__enter__()
+    with _trace.span("serve.prefill", batch=b, prompt_len=p):
+        last, caches = model.prefill(params, {"tokens": jnp.asarray(prompts)})
+        caches = model.cache_from_prefill(caches, cache_len)
+        _trace.fence(last)
     jdecode = jax.jit(model.decode_step)
 
     out = np.zeros((b, max_new_tokens), np.int32)
@@ -491,8 +540,10 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
                     res = graph.get_path(int(q[0]), int(q[1]))
                     stats.getpath_calls += 1
                     stats.getpath_rounds += int(res.rounds)
-        tok_logits, caches = jdecode(params, caches, tok, jnp.int32(p + i))
-        tok = jnp.argmax(tok_logits, axis=-1).astype(jnp.int32)
+        with _trace.span("serve.decode_step", step=i):
+            tok_logits, caches = jdecode(params, caches, tok, jnp.int32(p + i))
+            tok = jnp.argmax(tok_logits, axis=-1).astype(jnp.int32)
+            _trace.fence(tok)
         stats.decode_steps += 1
         stats.decode_tokens += b
     if pool is not None:
@@ -507,7 +558,7 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         stats.ingest_wait_max_s = pool.stats.wait_max_s
         stats.ingest_queue_depth_max = pool.stats.queue_depth_max
     if graph is not None:
-        stats.grow_events = graph.grow_events
+        stats.grow_events = graph.grow_events - grow0
         stats.index_hits = graph.index_hits - idx0[0]
         stats.index_misses = graph.index_misses - idx0[1]
         stats.index_refreshes = graph.index_refreshes - idx0[2]
@@ -517,4 +568,8 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         stats.tt_evicted = graph.tt_evicted - ring0[3]
         stats.epoch_diff_calls = graph.epoch_diff_calls - ring0[4]
     stats.wall_s = time.time() - t0
+    _session.set(decode_steps=stats.decode_steps,
+                 getpath_calls=stats.getpath_calls,
+                 graph_ops=stats.graph_ops)
+    _session.__exit__(None, None, None)
     return out, stats

@@ -92,3 +92,22 @@ def test_registry_matches_committed_bench_records_in_repo():
     schema-valid; figures without records are tolerated (fresh-clone rule)."""
     errors, _notes = check_committed_records()
     assert errors == [], errors
+
+
+def test_roofline_records_ride_the_bench_schema():
+    """benchmarks/roofline.py feeds the same long-format record stream as
+    the sweep figures (DESIGN.md §14): every runnable (arch x shape) cell
+    must emit one schema-valid record, skipped cells none, and ``seconds``
+    must be the binding roofline term."""
+    from benchmarks import roofline
+
+    rows = roofline.build_table()
+    recs = roofline.records(rows)
+    assert len(recs) == sum(not r.get("skipped") for r in rows)
+    assert validate_records(recs, ["roofline"]) == []
+    for rec in recs:
+        assert rec["figure"] == "roofline"
+        assert rec["seconds"] == max(rec["compute_s"], rec["memory_s"],
+                                     rec["collective_s"])
+        assert rec["steps_per_s"] > 0
+        assert 0.0 <= rec["speedup_vs_baseline"] <= 1.0

@@ -119,6 +119,43 @@ def test_serve_stats_surface_three_clients():
     assert out_paths[0] == (True, [1, 12])
 
 
+def test_serve_stats_deltas_reset_between_serve_calls():
+    """Two consecutive ``serve()`` calls on one server: ServeStats is a
+    PER-CALL report, so a grow (or any other lifetime event) in the first
+    call must not leak into the second call's stats. Regression for
+    ``grow_events`` reporting the server's lifetime total instead of the
+    start-of-serve delta every other counter already used."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.runtime.serve_loop import serve
+
+    cfg = get_config("olmo-1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.zeros((1, 8), np.int32)
+
+    srv = GraphCoServer(capacity=4, ingest=True)
+
+    def growing_clients(step):
+        # 6 vertices into a capacity-4 table: forces >= 1 auto-grow replay
+        if step == 0:
+            return [("A", [(OP_ADD_V, k) for k in range(6)])]
+        return []
+
+    _, s1 = serve(model, params, prompts, max_new_tokens=2, cache_len=16,
+                  graph=srv, clients=growing_clients)
+    assert s1.grow_events >= 1
+    assert s1.ingest_batches == 1
+
+    _, s2 = serve(model, params, prompts, max_new_tokens=2, cache_len=16,
+                  graph=srv, clients=lambda i: [])
+    assert s2.grow_events == 0       # was: lifetime total leaked in
+    assert s2.ingest_batches == 0
+    assert s2.ingest_epochs == 0
+
+
 def test_serve_rejects_clients_without_ingest_pool():
     import pytest
 

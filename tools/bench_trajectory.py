@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Perf trajectory report: committed BENCH_*.json across git history.
+
+The full benchmark run (``python -m benchmarks.run --json ...``) commits
+one ``BENCH_<figure>.json`` per figure at the repo root — the longitudinal
+perf record (DESIGN.md §14). This tool walks the git history of those
+files and reports, per (figure, engine) series, how the headline
+``steps_per_s`` (and ``speedup_vs_baseline``) moved commit over commit:
+
+  python tools/bench_trajectory.py              # all figures, full history
+  python tools/bench_trajectory.py --max-commits 20
+  python tools/bench_trajectory.py --figure multiquery
+
+NON-GATING by design: the bench-smoke CI step runs it as a report. Missing
+records, unreadable history, or a shallow clone produce notes, never a
+non-zero exit — the trajectory is evidence for humans reading the CI log,
+not a regression oracle (quick/smoke numbers never land in BENCH files,
+so history points are always full-run measurements).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+from collections import defaultdict
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _git(*args: str) -> str:
+    return subprocess.run(["git", *args], cwd=ROOT, check=True,
+                          capture_output=True, text=True).stdout
+
+
+def bench_files_in_history() -> list[str]:
+    """Every BENCH_*.json path that ever existed in the history."""
+    try:
+        out = _git("log", "--name-only", "--pretty=format:", "--",
+                   "BENCH_*.json")
+    except subprocess.CalledProcessError:
+        return []
+    names = {line.strip() for line in out.splitlines() if line.strip()}
+    names |= {p.name for p in ROOT.glob("BENCH_*.json")}
+    return sorted(n for n in names if n.startswith("BENCH_"))
+
+
+def history_of(path: str, max_commits: int) -> list[dict]:
+    """[{sha, when, rows}] oldest -> newest for one BENCH file (skips
+    commits where the blob is unreadable/invalid)."""
+    try:
+        log = _git("log", f"--max-count={max_commits}",
+                   "--pretty=format:%h %cs", "--", path)
+    except subprocess.CalledProcessError:
+        return []
+    points = []
+    for line in log.splitlines():
+        sha, _, when = line.strip().partition(" ")
+        if not sha:
+            continue
+        try:
+            rows = json.loads(_git("show", f"{sha}:{path}"))
+        except (subprocess.CalledProcessError, json.JSONDecodeError):
+            continue
+        if isinstance(rows, list) and rows:
+            points.append({"sha": sha, "when": when, "rows": rows})
+    return list(reversed(points))
+
+
+def series(points: list[dict]) -> dict:
+    """(figure, variant, engine, q) -> [(sha, when, steps_per_s, speedup)]
+    oldest -> newest. One BENCH file can carry several sweep variants of
+    one figure — distinct record ``figure`` strings, per-``mix`` rows,
+    per-``density`` rows — and collapsing them would fabricate movement
+    inside a single commit, so every discriminator a record carries joins
+    the key."""
+    out: dict = defaultdict(list)
+    for pt in points:
+        for rec in pt["rows"]:
+            try:
+                variant = "/".join(str(rec[k]) for k in ("mix", "density")
+                                   if k in rec)
+                key = (str(rec["figure"]), variant,
+                       str(rec["engine"]), int(rec["q"]))
+                out[key].append((pt["sha"], pt["when"],
+                                 float(rec["steps_per_s"]),
+                                 float(rec["speedup_vs_baseline"])))
+            except (KeyError, TypeError, ValueError):
+                continue
+    return dict(out)
+
+
+def report(figure_filter: str | None, max_commits: int,
+           out=sys.stdout) -> int:
+    """Print the trajectory tables; returns the number of history points
+    found (0 = nothing to report, still exit 0)."""
+    files = bench_files_in_history()
+    if figure_filter:
+        files = [f for f in files if figure_filter in f]
+    if not files:
+        print("bench_trajectory: no BENCH_*.json in history yet "
+              "(a full `benchmarks/run.py --json` run creates them)",
+              file=out)
+        return 0
+    total = 0
+    for path in files:
+        pts = history_of(path, max_commits)
+        if not pts:
+            print(f"{path}: no readable history points", file=out)
+            continue
+        total += len(pts)
+        fig = path[len("BENCH_"):-len(".json")]
+        print(f"\n{fig}: {len(pts)} committed run(s), "
+              f"{pts[0]['when']} .. {pts[-1]['when']}", file=out)
+        for (rfig, variant, engine, q), samples in sorted(series(pts).items()):
+            first, last = samples[0], samples[-1]
+            drift = ((last[2] / first[2] - 1.0) * 100.0
+                     if first[2] else float("nan"))
+            line = " -> ".join(f"{s[2]:.3g}" for s in samples[-6:])
+            label = engine if rfig == fig else f"{rfig}/{engine}"
+            if variant:
+                label = f"{label}[{variant}]"
+            print(f"  {label} q={q}: steps/s {line} "
+                  f"({drift:+.1f}% vs oldest; speedup now {last[3]:.2f}x)",
+                  file=out)
+    return total
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--figure", default=None,
+                    help="only figures whose name contains this substring")
+    ap.add_argument("--max-commits", type=int, default=50,
+                    help="history depth per BENCH file (default 50)")
+    args = ap.parse_args()
+    try:
+        report(args.figure, args.max_commits)
+    except Exception as e:  # non-gating: a broken report is a note
+        print(f"bench_trajectory: report failed non-fatally: {e}",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Offline viewer for repro trace files (DESIGN.md §14).
+
+The observability recorder (``repro.obs.trace``, armed by ``REPRO_TRACE=1``)
+writes Chrome trace-event JSON that https://ui.perfetto.dev loads directly.
+This tool reads the same file without a browser:
+
+  python tools/trace_view.py repro_trace.json               # dump events
+  python tools/trace_view.py --summarize repro_trace.json   # per-span table
+
+``--summarize`` prints one row per span name — count, total/mean/max wall —
+plus counter series and the tag breakdown of ``bfs.superstep`` directions;
+the obs-tests CI step round-trips a recorded trace through it to keep the
+export format honest.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter, defaultdict
+
+
+def load(path: str) -> list[dict]:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: no traceEvents array")
+    return events
+
+
+def summarize(events: list[dict]) -> dict:
+    """Aggregate a trace into {spans, counters, directions} (all plain
+    dicts — the shape tests/test_obs.py asserts on)."""
+    spans: dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "total_us": 0.0, "max_us": 0.0})
+    counters: dict[str, int] = Counter()
+    directions: dict[str, int] = Counter()
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "X":
+            s = spans[ev["name"]]
+            dur = float(ev.get("dur", 0.0))
+            s["count"] += 1
+            s["total_us"] += dur
+            s["max_us"] = max(s["max_us"], dur)
+            if ev["name"] == "bfs.superstep":
+                d = ev.get("args", {}).get("direction")
+                if d is not None:
+                    directions[d] += 1
+        elif ph == "C":
+            counters[ev["name"]] += 1
+    return {"spans": dict(spans), "counters": dict(counters),
+            "directions": dict(directions)}
+
+
+def print_summary(summary: dict, out=sys.stdout) -> None:
+    spans = summary["spans"]
+    if not spans:
+        print("(no spans)", file=out)
+        return
+    w = max(len(n) for n in spans) + 2
+    print(f"{'span':<{w}}{'count':>7}{'total ms':>12}{'mean ms':>10}"
+          f"{'max ms':>10}", file=out)
+    for name in sorted(spans, key=lambda n: -spans[n]["total_us"]):
+        s = spans[name]
+        tot, mx = s["total_us"] / 1e3, s["max_us"] / 1e3
+        print(f"{name:<{w}}{s['count']:>7}{tot:>12.3f}"
+              f"{tot / s['count']:>10.3f}{mx:>10.3f}", file=out)
+    if summary["directions"]:
+        tags = ", ".join(f"{k}={v}" for k, v in
+                         sorted(summary["directions"].items()))
+        print(f"\nbfs.superstep directions: {tags}", file=out)
+    if summary["counters"]:
+        tags = ", ".join(f"{k} x{v}" for k, v in
+                         sorted(summary["counters"].items()))
+        print(f"counter series: {tags}", file=out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="trace JSON written by repro.obs.trace")
+    ap.add_argument("--summarize", action="store_true",
+                    help="per-span aggregate table instead of an event dump")
+    args = ap.parse_args()
+    events = load(args.path)
+    if args.summarize:
+        print_summary(summarize(events))
+        return 0
+    for ev in events:
+        ts = ev.get("ts", 0.0) / 1e3
+        if ev.get("ph") == "X":
+            print(f"{ts:12.3f}ms +{ev.get('dur', 0.0) / 1e3:.3f}ms "
+                  f"{ev['name']} {ev.get('args', '')}")
+        else:
+            print(f"{ts:12.3f}ms {ev.get('ph')} {ev['name']} "
+                  f"{ev.get('args', '')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
