@@ -131,6 +131,28 @@ def check_committed_records(figures=None, root: pathlib.Path = ROOT
     return errors, notes
 
 
+def preflight(root: pathlib.Path = ROOT) -> list[str]:
+    """--smoke import-and-registry preflight (DESIGN.md §15): every
+    registered figure module must exist under benchmarks/, import
+    cleanly, and expose the ``main`` entry the driver is about to call —
+    so a broken import or a FIGURES typo fails the gate in milliseconds
+    instead of mid-sweep. Built on repro.analysis.modwalk, the analysis
+    framework's module-walking helper."""
+    src = str(root / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.analysis.modwalk import iter_package_modules, preflight_imports
+
+    on_disk = {name for name, _ in
+               iter_package_modules(root / "benchmarks", "benchmarks")}
+    registered = [f"benchmarks.{module}" for _, module, _ in FIGURES]
+    errors = [f"{mod}: registered in FIGURES but no such module under "
+              f"benchmarks/" for mod in registered if mod not in on_disk]
+    errors += preflight_imports([m for m in registered if m in on_disk],
+                                require_attr="main")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -141,6 +163,14 @@ def main() -> None:
                          "emits schema-valid JSON")
     args = ap.parse_args()
     quick = args.quick or args.smoke
+
+    if args.smoke:
+        failures = preflight()
+        if failures:
+            print("\n".join(failures), file=sys.stderr)
+            sys.exit(1)
+        print(f"preflight: {len(FIGURES)} registered figure modules "
+              f"import cleanly and expose main()")
 
     csv: list[str] = []
     json_records: list[dict] = []

@@ -1,0 +1,23 @@
+"""repro.analysis — the repo's invariant linter + Pallas kernel sanitizer
+(DESIGN.md §15).
+
+``python -m repro.analysis`` runs every registered rule over the tree and
+exits non-zero on live findings; CI gates on it. See ``framework.py`` for
+the rule/suppression/baseline model and ``rules/`` for the invariants.
+"""
+from repro.analysis.framework import (  # noqa: F401
+    AnalysisResult,
+    FileContext,
+    Finding,
+    RepoContext,
+    Rule,
+    all_rules,
+    get_rule,
+    register,
+    run,
+)
+
+__all__ = [
+    "AnalysisResult", "FileContext", "Finding", "RepoContext", "Rule",
+    "all_rules", "get_rule", "register", "run",
+]

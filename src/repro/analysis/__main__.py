@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` — the CI gate entry point (DESIGN.md §15)."""
+import sys
+
+from repro.analysis.cli import main
+
+sys.exit(main())

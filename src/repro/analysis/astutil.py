@@ -1,0 +1,170 @@
+"""Shared AST helpers for ``repro.analysis`` rules (DESIGN.md §15).
+
+Pure ``ast``-level utilities: dotted-name rendering, call resolution, and
+the intra-module jit-reachability walk the trace-purity rule is built on.
+No imports of the analyzed code ever happen here — rules that need live
+objects (metrics-doc) do their own importing and say so.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+
+def dotted(node: ast.AST) -> str:
+    """Render a Name/Attribute chain as 'a.b.c' ('' when not a plain
+    chain). Subscripts and calls inside the chain end the rendering at
+    that point — good enough for pattern rules."""
+    parts: list[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    """Dotted name of a call's callee ('' when dynamic)."""
+    return dotted(call.func)
+
+
+def keyword_names(call: ast.Call) -> set[str]:
+    return {kw.arg for kw in call.keywords if kw.arg is not None}
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    """Parent link attached by ``FileContext.tree``."""
+    return getattr(node, "_repro_parent", None)
+
+
+def enclosing_class(node: ast.AST) -> Optional[ast.ClassDef]:
+    cur = parent(node)
+    while cur is not None:
+        if isinstance(cur, ast.ClassDef):
+            return cur
+        cur = parent(cur)
+    return None
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    cur = parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = parent(cur)
+    return None
+
+
+def module_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """All function defs in the module keyed by BARE name (module level,
+    methods and nested defs alike — bare-name resolution is the documented
+    heuristic of the reachability walk; a miss only widens the scanned
+    set, never narrows it)."""
+    out: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            out.setdefault(node.name, node)
+    return out
+
+
+# --- jit-entry detection ----------------------------------------------------
+# Decorator spellings that make a function a traced/compiled entry point.
+_JIT_DECOR_SUFFIXES = ("jit", "pallas_call", "shard_map", "pmap")
+# Call targets whose FUNCTION ARGUMENTS are traced (loop bodies etc.).
+_TRACED_ARG_CALLS = ("while_loop", "fori_loop", "cond", "scan", "switch",
+                     "pallas_call", "shard_map", "vmap", "grad", "jit")
+
+
+def _decorator_is_jit(dec: ast.AST) -> bool:
+    name = dotted(dec)
+    if name and name.split(".")[-1] in _JIT_DECOR_SUFFIXES:
+        return True
+    if isinstance(dec, ast.Call):
+        # functools.partial(jax.jit, ...) and jax.jit(...) spellings
+        callee = dotted(dec.func)
+        if callee and callee.split(".")[-1] in _JIT_DECOR_SUFFIXES:
+            return True
+        if callee.split(".")[-1] == "partial" and dec.args:
+            inner = dotted(dec.args[0])
+            if inner and inner.split(".")[-1] in _JIT_DECOR_SUFFIXES:
+                return True
+    return False
+
+
+def jit_entry_names(tree: ast.Module) -> set[str]:
+    """Functions that are traced entry points: decorated with jax.jit /
+    pallas_call / shard_map (any partial spelling), or passed by name into
+    a tracing combinator (lax.while_loop / cond / scan / fori_loop /
+    pallas_call / shard_map / vmap / jit)."""
+    entries: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            if any(_decorator_is_jit(d) for d in node.decorator_list):
+                entries.add(node.name)
+        elif isinstance(node, ast.Call):
+            callee = call_name(node)
+            if callee and callee.split(".")[-1] in _TRACED_ARG_CALLS:
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        entries.add(arg.id)
+                    elif isinstance(arg, ast.Call):
+                        # functools.partial(fn, ...) passed as traced arg
+                        inner = dotted(arg.func)
+                        if inner.split(".")[-1] == "partial" and arg.args:
+                            nm = dotted(arg.args[0])
+                            if nm and "." not in nm:
+                                entries.add(nm)
+    return entries
+
+
+def jit_reachable_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """Transitive closure of module functions reachable from the jit
+    entries via bare-name calls. Nested defs are covered implicitly (a
+    FunctionDef's walk includes its nested bodies)."""
+    funcs = module_functions(tree)
+    work = [n for n in jit_entry_names(tree) if n in funcs]
+    reached: dict[str, ast.FunctionDef] = {}
+    while work:
+        name = work.pop()
+        if name in reached:
+            continue
+        fn = funcs.get(name)
+        if fn is None:
+            continue
+        reached[name] = fn
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = call_name(node)
+                if callee and "." not in callee and callee in funcs \
+                        and callee not in reached:
+                    work.append(callee)
+    return reached
+
+
+def iter_calls(node: ast.AST) -> Iterator[ast.Call]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def literal_assignment(tree: ast.Module, name: str):
+    """(value, node) of a module-level ``NAME = <literal>`` assignment;
+    (None, node) when present but not a pure literal; (None, None) when
+    absent. Used by the kernel-shape sanitizer to read KERNEL_META without
+    importing the package."""
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == name:
+                try:
+                    return ast.literal_eval(node.value), node
+                except (ValueError, SyntaxError):
+                    return None, node
+    return None, None

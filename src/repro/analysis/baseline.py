@@ -1,0 +1,115 @@
+"""Committed finding baseline for ``repro.analysis`` (DESIGN.md §15).
+
+The baseline (``analysis_baseline.json`` at the repo root) grandfathers
+pre-existing findings that are *correct code* the heuristic rules cannot
+see through — never newly written violations. Policy:
+
+  * every entry carries a one-line ``why`` justification (enforced here);
+  * entries pin (rule, path, line) plus a ``contains`` substring of the
+    message, so an entry silences exactly the finding it was written for
+    and nothing that later drifts onto the same line;
+  * an entry that matches NO current finding is *stale* and reported as a
+    finding itself — the baseline can only shrink or be re-justified,
+    never rot;
+  * the gate (and tests/test_analysis.py) keeps the file at <= 10 entries.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis.framework import Finding
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+MAX_ENTRIES = 10
+
+_REQUIRED = ("rule", "path", "why")
+
+
+@dataclass
+class BaselineEntry:
+    rule: str
+    path: str
+    why: str
+    line: Optional[int] = None       # None = any line in the file
+    contains: str = ""               # substring the message must contain
+
+    def matches(self, f: Finding) -> bool:
+        return (f.rule == self.rule and f.path == self.path
+                and (self.line is None or f.line == self.line)
+                and (self.contains in f.message))
+
+    def describe(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"[{self.rule}] {loc}"
+
+
+class Baseline:
+    """Loaded baseline; ``apply`` partitions findings into live /
+    grandfathered and reports stale entries."""
+
+    def __init__(self, entries: list[BaselineEntry], path: Optional[Path] = None):
+        self.entries = entries
+        self.path = path
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        path = Path(path)
+        if not path.exists():
+            return cls([], path)
+        data = json.loads(path.read_text(encoding="utf-8"))
+        raw = data["entries"] if isinstance(data, dict) else data
+        entries = []
+        problems = []
+        for i, e in enumerate(raw):
+            missing = [k for k in _REQUIRED if not e.get(k)]
+            if missing:
+                problems.append(
+                    f"baseline entry {i} missing/empty {missing} — every "
+                    f"entry needs a rule, a path and a one-line why")
+                continue
+            entries.append(BaselineEntry(
+                rule=e["rule"], path=e["path"], why=e["why"],
+                line=e.get("line"), contains=e.get("contains", "")))
+        if len(raw) > MAX_ENTRIES:
+            problems.append(
+                f"baseline has {len(raw)} entries — policy caps it at "
+                f"{MAX_ENTRIES}; fix findings instead of accumulating them")
+        bl = cls(entries, path)
+        bl._load_problems = problems  # surfaced by apply()
+        return bl
+
+    _load_problems: list = []
+
+    def apply(self, findings: list[Finding],
+              active: Optional[set] = None
+              ) -> tuple[list[Finding], list[Finding], list[Finding]]:
+        """(live, grandfathered, stale+malformed-as-findings).
+
+        ``active`` is the set of rule names that actually ran: entries for
+        rules OUTSIDE it are neither matched nor stale (a single-rule run
+        must not call every other rule's baseline entries dead)."""
+        rel = self.path.name if self.path else DEFAULT_BASELINE
+        live: list[Finding] = []
+        grandfathered: list[Finding] = []
+        hit = [0] * len(self.entries)
+        for f in findings:
+            for i, e in enumerate(self.entries):
+                if e.matches(f):
+                    hit[i] += 1
+                    grandfathered.append(f)
+                    break
+            else:
+                live.append(f)
+        stale = [
+            Finding("stale-baseline", rel, 0,
+                    f"{e.describe()} matches no current finding — remove "
+                    f"the entry (was justified: {e.why})")
+            for i, e in enumerate(self.entries)
+            if not hit[i] and (active is None or e.rule in active)
+        ]
+        stale += [Finding("stale-baseline", rel, 0, msg)
+                  for msg in getattr(self, "_load_problems", [])]
+        return live, grandfathered, stale

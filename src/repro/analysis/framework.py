@@ -1,0 +1,366 @@
+"""Rule registry, suppression and baseline plumbing for ``repro.analysis``.
+
+The repo's correctness argument rests on hand-maintained structural
+invariants (mirrored adjacency writes, the single ``traversable``
+predicate, sorted entity-lock discipline, epoch-validated index reads,
+...). Each invariant is encoded here as a *rule* — a pure function from
+parsed source to findings — so violations are caught at diff time instead
+of waiting for a property test to hit the bad interleaving
+(DESIGN.md §15).
+
+Vocabulary:
+
+  * A **rule** has a unique kebab-case name, a severity, a one-line
+    invariant statement, and a ``check`` callback. File-scoped rules run
+    once per scanned file (``FileContext``); repo-scoped rules run once
+    per analysis (``RepoContext``) and walk whatever they need.
+  * A **finding** is (rule, path, line, message). Findings are what the
+    CLI prints, ``--json`` serializes, and CI gates on.
+  * An inline ``repro-lint: allow(rule-a, rule-b)`` comment (written
+    after a ``#``) — on the offending line or the line directly above
+    it — suppresses matching
+    findings. Suppressions that silence nothing are themselves reported
+    (rule name ``unused-suppression``) so dead allows cannot accumulate.
+  * The committed **baseline** (``analysis_baseline.json``) grandfathers
+    pre-existing, justified findings; see ``baseline.py``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import TYPE_CHECKING, Callable, Iterable, Optional, Union
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle is type-only
+    from repro.analysis.baseline import Baseline
+
+SEVERITIES = ("error", "warning")
+
+# Inline suppression syntax. Intentionally strict: exactly this spelling,
+# so grep finds every allow in the tree.
+ALLOW_RE = re.compile(r"#\s*repro-lint:\s*allow\(([a-z0-9_,\-\s]+)\)")
+
+# Paths never scanned by the default walk: deliberate-violation fixtures.
+GLOBAL_EXCLUDES = ("tests/lint_fixtures",)
+
+# Default scan roots, relative to the analysis root (usually the repo).
+DEFAULT_ROOTS = ("src", "tools", "benchmarks", "examples", "tests")
+
+UNUSED_SUPPRESSION = "unused-suppression"
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file and line."""
+
+    rule: str
+    path: str          # repo-relative, forward slashes
+    line: int          # 1-indexed; 0 = whole-file finding
+    message: str
+    severity: str = "error"
+
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.line, self.message)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "severity": self.severity}
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+class FileContext:
+    """Everything a file-scoped rule may look at for one source file."""
+
+    def __init__(self, root: Path, path: Path, source: str):
+        self.root = root
+        self.path = path
+        self.relpath = _rel(root, path)
+        self.source = source
+        self.lines = source.splitlines()
+        self._tree: Optional[ast.AST] = None
+        self._parse_error: Optional[SyntaxError] = None
+
+    @property
+    def tree(self) -> Optional[ast.Module]:
+        """Parsed AST with parent links, or None on a syntax error (the
+        runner reports unparseable files once, as a framework finding)."""
+        if self._tree is None and self._parse_error is None:
+            try:
+                tree = ast.parse(self.source, filename=str(self.path))
+            except SyntaxError as e:  # pragma: no cover - defensive
+                self._parse_error = e
+                return None
+            for node in ast.walk(tree):
+                for child in ast.iter_child_nodes(node):
+                    child._repro_parent = node  # type: ignore[attr-defined]
+            self._tree = tree
+        return self._tree  # type: ignore[return-value]
+
+    def finding(self, rule: "Rule", node_or_line, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(rule.name, self.relpath, int(line), message,
+                       rule.severity)
+
+
+class RepoContext:
+    """What a repo-scoped rule sees: the root and the scanned file set."""
+
+    def __init__(self, root: Path, files: list[Path]):
+        self.root = root
+        self.files = files
+
+    def rel(self, path: Path) -> str:
+        return _rel(self.root, path)
+
+    def finding(self, rule: "Rule", path: Path, line: int,
+                message: str) -> Finding:
+        return Finding(rule.name, _rel(self.root, path), int(line), message,
+                       rule.severity)
+
+
+CheckFn = Callable[[Union[FileContext, RepoContext]], Iterable[Finding]]
+
+
+@dataclass
+class Rule:
+    """A registered invariant check (DESIGN.md §15).
+
+    ``default_filter`` restricts which files the rule sees during a
+    DEFAULT root walk (repo gate); files passed explicitly to ``run`` are
+    always offered to every file-scoped rule, so fixtures under tests/
+    can exercise rules whose default scope excludes tests.
+    """
+
+    name: str
+    invariant: str                      # one-line statement of the invariant
+    check: CheckFn
+    scope: str = "file"                 # "file" | "repo"
+    severity: str = "error"
+    origin: str = ""                    # PR / bug class that motivated it
+    default_filter: Callable[[str], bool] = lambda rel: True
+
+    def __post_init__(self):
+        assert self.scope in ("file", "repo"), self.scope
+        assert self.severity in SEVERITIES, self.severity
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    """Add a rule to the global registry (import-time side effect of the
+    ``repro.analysis.rules`` package)."""
+    if rule.name in _REGISTRY:
+        raise ValueError(f"duplicate rule name {rule.name!r}")
+    _REGISTRY[rule.name] = rule
+    return rule
+
+
+def all_rules() -> list[Rule]:
+    """Registered rules, sorted by name (imports the rules package once)."""
+    import repro.analysis.rules  # noqa: F401  (registration side effect)
+
+    return [(_REGISTRY[k]) for k in sorted(_REGISTRY)]
+
+
+def get_rule(name: str) -> Rule:
+    import repro.analysis.rules  # noqa: F401
+
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown rule {name!r} (known: {known})") from None
+
+
+# ----------------------------------------------------------------------------
+# Suppressions
+# ----------------------------------------------------------------------------
+class Suppressions:
+    """Parsed ``# repro-lint: allow(...)`` comments of one file.
+
+    An allow on line N silences findings of the named rules on line N and
+    line N+1 (i.e. the comment sits on the offending line or directly
+    above it). ``unused`` reports allows that silenced nothing.
+    """
+
+    def __init__(self, source: str):
+        # line -> set of rule names allowed there
+        self.allows: dict[int, set[str]] = {}
+        self._used: dict[int, set[str]] = {}
+        for i, text in enumerate(source.splitlines(), 1):
+            m = ALLOW_RE.search(text)
+            if m:
+                names = {n.strip() for n in m.group(1).split(",") if n.strip()}
+                self.allows[i] = names
+
+    def suppresses(self, finding: Finding) -> bool:
+        for line in (finding.line, finding.line - 1):
+            names = self.allows.get(line)
+            if names and finding.rule in names:
+                self._used.setdefault(line, set()).add(finding.rule)
+                return True
+        return False
+
+    def unused(self, relpath: str,
+               active: Optional[set] = None) -> list[Finding]:
+        """Allows that silenced nothing. ``active`` restricts the check to
+        the rules that actually ran — a single-rule run must not call every
+        other rule's allows dead."""
+        out = []
+        for line, names in sorted(self.allows.items()):
+            dead = names - self._used.get(line, set())
+            if active is not None:
+                dead &= active
+            for name in sorted(dead):
+                out.append(Finding(
+                    UNUSED_SUPPRESSION, relpath, line,
+                    f"allow({name}) suppresses nothing — remove it",
+                    "error"))
+        return out
+
+
+# ----------------------------------------------------------------------------
+# Running
+# ----------------------------------------------------------------------------
+@dataclass
+class AnalysisResult:
+    """Everything one analysis run produced, pre-gating."""
+
+    findings: list[Finding] = field(default_factory=list)       # live
+    suppressed: list[Finding] = field(default_factory=list)     # via allow()
+    baselined: list[Finding] = field(default_factory=list)      # via baseline
+    files_scanned: int = 0
+    rules_run: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> dict:
+        return {
+            "ok": self.ok,
+            "files_scanned": self.files_scanned,
+            "rules": self.rules_run,
+            "findings": [f.to_json() for f in self.findings],
+            "suppressed": [f.to_json() for f in self.suppressed],
+            "baselined": [f.to_json() for f in self.baselined],
+        }
+
+
+def _rel(root: Path, path: Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def default_files(root: Path) -> list[Path]:
+    """The default scan set: every .py under the scan roots, minus the
+    deliberate-violation fixtures."""
+    out: list[Path] = []
+    for d in DEFAULT_ROOTS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            rel = _rel(root, p)
+            if any(rel.startswith(x) for x in GLOBAL_EXCLUDES):
+                continue
+            out.append(p)
+    return out
+
+
+def run(root: Path, paths: Optional[list[Path]] = None,
+        rules: Optional[list[Rule]] = None,
+        baseline: Optional["Baseline"] = None) -> AnalysisResult:
+    """Run ``rules`` (default: all registered) over ``paths`` (default:
+    the standard root walk) and fold in suppressions and the baseline.
+
+    Explicit ``paths`` bypass the per-rule default filters — that is how
+    the fixture tests point one rule at one deliberately-bad file.
+    """
+    root = Path(root)
+    explicit = paths is not None
+    files = [Path(p) for p in paths] if explicit else default_files(root)
+    rules = list(rules) if rules is not None else all_rules()
+
+    result = AnalysisResult(files_scanned=len(files),
+                            rules_run=[r.name for r in rules])
+    raw: list[Finding] = []
+    contexts: dict[str, FileContext] = {}
+
+    file_rules = [r for r in rules if r.scope == "file"]
+    repo_rules = [r for r in rules if r.scope == "repo"]
+
+    for path in files:
+        try:
+            source = path.read_text(encoding="utf-8")
+        except OSError as e:
+            raw.append(Finding("framework", _rel(root, path), 0,
+                               f"unreadable: {e}"))
+            continue
+        ctx = FileContext(root, path, source)
+        contexts[ctx.relpath] = ctx
+        if path.suffix != ".py":
+            continue
+        if ctx.tree is None:
+            raw.append(Finding("framework", ctx.relpath, 0,
+                               "syntax error — file not analyzable"))
+            continue
+        for rule in file_rules:
+            if not explicit and not rule.default_filter(ctx.relpath):
+                continue
+            raw.extend(rule.check(ctx))
+
+    repo_ctx = RepoContext(root, files)
+    for rule in repo_rules:
+        raw.extend(rule.check(repo_ctx))
+
+    # de-dup (a rule revisiting a node must not double-report), stable order
+    seen: set[tuple] = set()
+    ordered: list[Finding] = []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule, f.message)):
+        if f.key() not in seen:
+            seen.add(f.key())
+            ordered.append(f)
+
+    # suppressions: parsed per file that actually has findings
+    supp_cache: dict[str, Suppressions] = {}
+    live: list[Finding] = []
+    for f in ordered:
+        supp = supp_cache.get(f.path)
+        if supp is None:
+            ctx = contexts.get(f.path)
+            if ctx is None:
+                fpath = root / f.path
+                try:
+                    src = fpath.read_text(encoding="utf-8")
+                except OSError:
+                    src = ""
+            else:
+                src = ctx.source
+            supp = supp_cache[f.path] = Suppressions(src)
+        if supp.suppresses(f):
+            result.suppressed.append(f)
+        else:
+            live.append(f)
+
+    # dead allows: checked for every SCANNED file (not only files with
+    # findings), so a stale allow() cannot hide forever
+    active = {r.name for r in rules}
+    for relpath, ctx in contexts.items():
+        supp = supp_cache.get(relpath) or Suppressions(ctx.source)
+        live.extend(supp.unused(relpath, active))
+
+    if baseline is not None:
+        live, grandfathered, stale = baseline.apply(live, active)
+        result.baselined = grandfathered
+        live.extend(stale)
+
+    result.findings = sorted(live, key=lambda f: (f.path, f.line, f.rule))
+    return result

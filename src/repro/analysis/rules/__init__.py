@@ -1,0 +1,24 @@
+"""Rule registry population: importing this package registers every rule
+(DESIGN.md §15). Add new rules by creating a module here that calls
+``framework.register`` at import time and listing it below."""
+from repro.analysis.rules import (  # noqa: F401  (registration side effects)
+    design_refs,
+    epoch_freshness,
+    kernel_shapes,
+    lock_order,
+    metrics_doc,
+    mirror_write,
+    trace_purity,
+    traversable,
+)
+
+__all__ = [
+    "design_refs",
+    "epoch_freshness",
+    "kernel_shapes",
+    "lock_order",
+    "metrics_doc",
+    "mirror_write",
+    "trace_purity",
+    "traversable",
+]

@@ -1,0 +1,383 @@
+"""kernel-shape: Pallas kernel packages carry checkable metadata
+(DESIGN.md §10, §15).
+
+Every kernel package (a directory with ``kernel.py`` + ``ops.py``) must
+ship a ``meta.py`` whose module-level ``KERNEL_META`` is a PURE LITERAL
+describing the package's kernels — tile defaults, block shapes, dtypes,
+divisibility guards, packed padding strategy and a static VMEM budget.
+The sanitizer cross-checks that declaration against the actual source,
+so the metadata cannot drift from the code it describes:
+
+  * ``tiles`` must match the kernel wrapper's keyword-only defaults
+    (tile-default drift is how a "tuning" commit silently changes the
+    divisibility contract every caller pads against);
+  * ``tiles % align == 0`` — sublane/lane alignment for the backend;
+  * every ``divides`` entry must be enforced by an ``assert`` in the
+    wrapper mentioning ``<dim> % <tile>`` (the grid is only total when
+    the operand extent divides by the block);
+  * declared output dtypes must agree with the wrapper's
+    ``jax.ShapeDtypeStruct`` list (``"*"`` = dtype passthrough);
+  * the oracle named by ``ref`` must exist in ``ref.py`` with the same
+    positional arity as the wrapper (contract drift: an operand added to
+    the kernel but not the oracle);
+  * ``packed`` kernels must declare how uint32 padding bits stay safe:
+    ``pad_safety: "slice"`` (the named ops.py wrapper depads with a
+    bounded slice) or ``"mask"`` (the kernel body writes single-bit
+    masks built by shifting, never whole padded words);
+  * the static VMEM footprint — sum of resolved block sizes times dtype
+    width, plus ``scratch_bytes`` — must fit ``vmem_budget_bytes``.
+
+``KERNEL_META`` schema (all sizes plain int literals — ``ast.literal_eval``
+is the parser, so no ``16 * 2**20`` arithmetic)::
+
+    KERNEL_META = {
+        "package": "bfs_step",
+        "vmem_budget_bytes": {"tpu": 16777216},
+        "dims": {"q": 64},            # assumed sizes of non-tile block dims
+        "kernels": {
+            "bfs_step_pallas": {
+                "tiles": {"tr": 256, "tc": 256},
+                "align": {"tr": 8, "tc": 128},
+                "divides": {"v": ["tr", "tc"]},
+                "operands": {"frontier": {"block": ["tr"],
+                                          "dtype": "float32"}, ...},
+                "outputs": {"new": {"block": ["tc"], "dtype": "int32"}, ...},
+                "packed": False,
+                "pad_safety": None,   # "slice" | "mask" for packed kernels
+                "wrapper": "bfs_step",  # ops.py depad entry (pad_safety=slice)
+                "ref": "bfs_step_ref",
+                "scratch_bytes": 0,
+            },
+        },
+    }
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis import astutil
+from repro.analysis.framework import Finding, RepoContext, Rule, register
+
+DTYPE_BYTES = {
+    "int8": 1, "uint8": 1, "bool": 1, "bool_": 1,
+    "int16": 2, "uint16": 2, "bfloat16": 2, "float16": 2,
+    "int32": 4, "uint32": 4, "float32": 4,
+    "int64": 8, "uint64": 8, "float64": 8,
+    "*": 4,  # dtype passthrough: budget conservatively as a 4-byte word
+}
+PAD_SAFETY = ("slice", "mask")
+_TOP_KEYS = ("package", "vmem_budget_bytes", "kernels")
+
+
+def _parse(path: Path) -> Optional[ast.Module]:
+    try:
+        return ast.parse(path.read_text(encoding="utf-8"),
+                         filename=str(path))
+    except (OSError, SyntaxError):
+        return None
+
+
+def _fn_defs(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def _kwonly_defaults(fn: ast.FunctionDef) -> dict[str, object]:
+    """{kwonly arg name: literal default} (non-constant defaults omitted)."""
+    out: dict[str, object] = {}
+    for arg, default in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if isinstance(default, ast.Constant):
+            out[arg.arg] = default.value
+    return out
+
+
+def _shape_struct_dtypes(fn: ast.FunctionDef) -> list[str]:
+    """Dtype names of the wrapper's ShapeDtypeStruct outputs, in source
+    order. ``jnp.int32`` -> "int32"; an ``x.dtype`` passthrough -> "*"."""
+    out: list[str] = []
+    for call in astutil.iter_calls(fn):
+        if astutil.call_name(call).split(".")[-1] != "ShapeDtypeStruct":
+            continue
+        if len(call.args) < 2:
+            out.append("?")
+            continue
+        d = call.args[1]
+        name = astutil.dotted(d)
+        if name.endswith(".dtype"):
+            out.append("*")
+        elif name:
+            out.append(name.split(".")[-1])
+        else:
+            out.append("?")
+    return out
+
+
+def _has_bounded_slice(fn: ast.FunctionDef) -> bool:
+    """True when the function subscripts with a Slice whose upper bound is
+    set — the ``out[:q]`` / ``.at[:v].set`` depad idiom."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Slice) and node.upper is not None:
+            return True
+    return False
+
+
+def _has_shift(tree: ast.AST) -> bool:
+    return any(isinstance(n, ast.BinOp) and isinstance(n.op, ast.LShift)
+               for n in ast.walk(tree))
+
+
+def _assert_sources(fn: ast.FunctionDef) -> list[str]:
+    return [ast.unparse(n.test) for n in ast.walk(fn)
+            if isinstance(n, ast.Assert)]
+
+
+class _Pkg:
+    """One kernel package directory's parsed members."""
+
+    def __init__(self, ctx: RepoContext, directory: Path,
+                 members: dict[str, Path]):
+        self.ctx = ctx
+        self.dir = directory
+        self.members = members          # filename -> Path
+        self.findings: list[Finding] = []
+
+    def flag(self, filename: str, line: int, msg: str) -> None:
+        self.findings.append(self.ctx.finding(
+            RULE, self.members.get(filename, self.dir / filename), line, msg))
+
+    # -- schema --------------------------------------------------------------
+    def load_meta(self) -> Optional[dict]:
+        if "meta.py" not in self.members:
+            self.flag("kernel.py", 0,
+                      "kernel package has no meta.py — declare KERNEL_META "
+                      "(tiles, blocks, dtypes, VMEM budget) so the shape "
+                      "sanitizer can gate drift (DESIGN.md §15)")
+            return None
+        tree = _parse(self.members["meta.py"])
+        if tree is None:
+            self.flag("meta.py", 0, "meta.py unreadable or syntactically "
+                                    "invalid")
+            return None
+        meta, node = astutil.literal_assignment(tree, "KERNEL_META")
+        if node is None:
+            self.flag("meta.py", 0, "meta.py defines no KERNEL_META")
+            return None
+        if meta is None:
+            self.flag("meta.py", node.lineno,
+                      "KERNEL_META must be a pure literal (plain ints, no "
+                      "arithmetic or names) — ast.literal_eval is the parser")
+            return None
+        if not isinstance(meta, dict) or not all(k in meta for k in _TOP_KEYS):
+            self.flag("meta.py", node.lineno,
+                      f"KERNEL_META missing required keys {_TOP_KEYS}")
+            return None
+        budget = meta["vmem_budget_bytes"]
+        if (not isinstance(budget, dict) or not budget
+                or not all(isinstance(v, int) and v > 0
+                           for v in budget.values())):
+            self.flag("meta.py", node.lineno,
+                      "vmem_budget_bytes must map backend -> positive int "
+                      "bytes")
+            return None
+        if not isinstance(meta["kernels"], dict) or not meta["kernels"]:
+            self.flag("meta.py", node.lineno,
+                      "KERNEL_META['kernels'] must be a non-empty dict")
+            return None
+        return meta
+
+    # -- per-kernel checks ---------------------------------------------------
+    def check_kernel(self, meta: dict, name: str, entry: dict,
+                     kernel_tree: ast.Module,
+                     kernel_fns: dict[str, ast.FunctionDef],
+                     ops_fns: dict[str, ast.FunctionDef],
+                     ref_fns: dict[str, ast.FunctionDef]) -> None:
+        fn = kernel_fns.get(name)
+        if fn is None:
+            self.flag("meta.py", 0,
+                      f"KERNEL_META declares {name} but kernel.py defines "
+                      f"no such function")
+            return
+        tiles = entry.get("tiles", {})
+        align = entry.get("align", {})
+        dims = dict(meta.get("dims", {}))
+
+        # tile-default drift vs the wrapper's keyword-only defaults
+        defaults = _kwonly_defaults(fn)
+        for t, val in tiles.items():
+            if t not in defaults:
+                self.flag("kernel.py", fn.lineno,
+                          f"{name}: declared tile {t!r} is not a "
+                          f"keyword-only arg with a literal default")
+            elif defaults[t] != val:
+                self.flag("kernel.py", fn.lineno,
+                          f"{name}: tile default drift — meta.py says "
+                          f"{t}={val}, kernel.py says {t}={defaults[t]}; "
+                          f"update KERNEL_META with the retuned value")
+
+        # alignment: tiles must honor the declared sublane/lane multiples
+        for t, val in tiles.items():
+            if not isinstance(val, int) or val <= 0:
+                self.flag("meta.py", 0, f"{name}: tile {t}={val!r} must be "
+                                        f"a positive int")
+                continue
+            a = align.get(t)
+            if isinstance(a, int) and a > 0 and val % a != 0:
+                self.flag("meta.py", 0,
+                          f"{name}: tile {t}={val} violates its declared "
+                          f"alignment {a} ({val} % {a} != 0)")
+
+        # divisibility guards: each declared dim % tile must be asserted
+        asserts = " ; ".join(_assert_sources(fn))
+        for dim, guarded in entry.get("divides", {}).items():
+            for t in guarded:
+                if f"{dim} % {t}" not in asserts:
+                    self.flag("kernel.py", fn.lineno,
+                              f"{name}: KERNEL_META declares the grid "
+                              f"needs {dim} % {t} == 0 but no assert in "
+                              f"the wrapper enforces it — a ragged last "
+                              f"block would read out of bounds")
+
+        # output dtype agreement with the wrapper's ShapeDtypeStruct list
+        declared = [(k, v.get("dtype", "?"))
+                    for k, v in entry.get("outputs", {}).items()]
+        actual = _shape_struct_dtypes(fn)
+        if len(declared) != len(actual):
+            self.flag("kernel.py", fn.lineno,
+                      f"{name}: KERNEL_META declares {len(declared)} "
+                      f"outputs, kernel.py builds {len(actual)} "
+                      f"ShapeDtypeStruct out_shapes")
+        else:
+            for (oname, want), got in zip(declared, actual):
+                if want != got and "*" not in (want, got):
+                    self.flag("kernel.py", fn.lineno,
+                              f"{name}: output {oname!r} dtype drift — "
+                              f"meta.py says {want}, kernel.py's "
+                              f"ShapeDtypeStruct says {got}")
+
+        # oracle: must exist in ref.py with the wrapper's positional arity
+        ref_name = entry.get("ref")
+        if ref_name:
+            ref = ref_fns.get(ref_name)
+            if ref is None:
+                self.flag("ref.py", 0,
+                          f"{name}: declared oracle {ref_name}() not found "
+                          f"in ref.py — every kernel ships a pure-jnp "
+                          f"oracle (DESIGN.md §10)")
+            elif len(ref.args.args) != len(fn.args.args):
+                self.flag("ref.py", ref.lineno,
+                          f"{ref_name}() takes {len(ref.args.args)} "
+                          f"positional operands but {name} takes "
+                          f"{len(fn.args.args)} — kernel/oracle contract "
+                          f"drift")
+
+        # packed padding-bit safety
+        if entry.get("packed"):
+            safety = entry.get("pad_safety")
+            if safety not in PAD_SAFETY:
+                self.flag("meta.py", 0,
+                          f"{name}: packed kernel must declare pad_safety "
+                          f"in {PAD_SAFETY} — uint32 padding bits need an "
+                          f"explicit story")
+            elif safety == "slice":
+                wrapper = ops_fns.get(entry.get("wrapper", ""))
+                if wrapper is None:
+                    self.flag("ops.py", 0,
+                              f"{name}: pad_safety='slice' names ops.py "
+                              f"wrapper {entry.get('wrapper')!r}, which "
+                              f"does not exist")
+                elif not _has_bounded_slice(wrapper):
+                    self.flag("ops.py", wrapper.lineno,
+                              f"{entry.get('wrapper')}(): pad_safety="
+                              f"'slice' but no bounded slice ([:v]-style "
+                              f"depad) found — padded lanes would leak to "
+                              f"callers")
+            elif safety == "mask" and not _has_shift(kernel_tree):
+                # the shift lives in the private kernel body, so scan the
+                # whole module, not just the wrapper
+                self.flag("kernel.py", fn.lineno,
+                          f"{name}: pad_safety='mask' but kernel.py "
+                          f"builds no shifted bit masks (<<) — whole-word "
+                          f"writes would clobber padding bits")
+
+        # static VMEM footprint vs the per-backend budget
+        total = entry.get("scratch_bytes", 0)
+        bad_dim = False
+        for group in ("operands", "outputs"):
+            for oname, spec in entry.get(group, {}).items():
+                width = DTYPE_BYTES.get(spec.get("dtype", "?"))
+                if width is None:
+                    self.flag("meta.py", 0,
+                              f"{name}: {oname!r} has unknown dtype "
+                              f"{spec.get('dtype')!r}")
+                    bad_dim = True
+                    continue
+                n = 1
+                for d in spec.get("block", []):
+                    size = d if isinstance(d, int) else tiles.get(
+                        d, dims.get(d))
+                    if not isinstance(size, int):
+                        self.flag("meta.py", 0,
+                                  f"{name}: block dim {d!r} of {oname!r} "
+                                  f"is neither a tile nor in "
+                                  f"KERNEL_META['dims']")
+                        bad_dim = True
+                        size = 1
+                    n *= size
+                total += n * width
+        if not bad_dim:
+            backend, budget = min(meta["vmem_budget_bytes"].items(),
+                                  key=lambda kv: kv[1])
+            if total > budget:
+                self.flag("meta.py", 0,
+                          f"{name}: static VMEM footprint {total} bytes "
+                          f"exceeds the {backend} budget {budget} — "
+                          f"shrink the tiles or raise the budget with a "
+                          f"justification")
+
+
+def check(ctx: RepoContext) -> list[Finding]:
+    # group scanned files into kernel-package directories
+    dirs: dict[Path, dict[str, Path]] = {}
+    for p in ctx.files:
+        if p.name in ("kernel.py", "ops.py", "ref.py", "meta.py"):
+            dirs.setdefault(p.parent, {})[p.name] = p
+    out: list[Finding] = []
+    for directory in sorted(dirs):
+        members = dirs[directory]
+        if "kernel.py" not in members or "ops.py" not in members:
+            continue  # not a kernel package (e.g. a lone helper file)
+        pkg = _Pkg(ctx, directory, members)
+        meta = pkg.load_meta()
+        if meta is not None:
+            ktree = _parse(members["kernel.py"])
+            otree = _parse(members["ops.py"])
+            rtree = _parse(members["ref.py"]) if "ref.py" in members else None
+            if ktree is None:
+                pkg.flag("kernel.py", 0, "kernel.py unparseable")
+            else:
+                kernel_fns = _fn_defs(ktree)
+                ops_fns = _fn_defs(otree) if otree else {}
+                ref_fns = _fn_defs(rtree) if rtree else {}
+                for name, entry in meta["kernels"].items():
+                    if not isinstance(entry, dict):
+                        pkg.flag("meta.py", 0,
+                                 f"kernel entry {name!r} must be a dict")
+                        continue
+                    pkg.check_kernel(meta, name, entry, ktree, kernel_fns,
+                                     ops_fns, ref_fns)
+        out.extend(pkg.findings)
+    return out
+
+
+RULE = register(Rule(
+    name="kernel-shape",
+    invariant="every kernel package's KERNEL_META agrees with its "
+              "kernel.py/ops.py/ref.py: tile defaults, divisibility "
+              "guards, output dtypes, packed padding safety and the "
+              "static VMEM budget",
+    check=check,
+    scope="repo",
+    origin="PR 2/PR 4 Pallas tiling contracts",
+    default_filter=lambda rel: rel.startswith("src/repro/kernels/"),
+))

@@ -1,0 +1,96 @@
+"""trace-purity: no host syncs or wall-clock reads in traced code
+(DESIGN.md §10, §14, §15).
+
+Functions that run under ``jax.jit`` / ``shard_map`` / ``pl.pallas_call``
+(or are passed into ``lax.while_loop`` / ``cond`` / ``scan`` bodies) are
+traced: a ``time.*`` or ``random.*`` call silently bakes one sample into
+the compiled artifact, and host-sync idioms — ``.item()``,
+``bool(array)``, ``np.asarray(...)`` — either crash on tracers or,
+worse, force a device round-trip per call when tracing is avoided. The
+obs layer's null-span path (``_trace.span`` / ``enabled`` / ``fence``)
+is explicitly exempt: its disabled path is host-free by construction and
+pinned by tests/test_obs.py, and the ``repro/obs`` package itself is the
+one place allowed to read clocks.
+
+Detection: intra-module call graph from the jit entry points
+(``astutil.jit_reachable_functions`` — bare-name resolution, documented
+heuristic), then flag the banned call patterns inside reached bodies.
+``jnp.asarray`` is fine (a traced op); ``np.asarray`` is not.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.framework import FileContext, Finding, Rule, register
+
+# dotted-prefix bans: wall clocks and host RNGs inside traced code
+BANNED_PREFIXES = (
+    ("time.", "wall-clock read"),
+    ("random.", "host RNG draw"),
+    ("np.random.", "host RNG draw"),
+    ("numpy.random.", "host RNG draw"),
+)
+# exact-callee bans: host-sync conversions
+BANNED_CALLS = {
+    "np.asarray": "host-sync materialization (np.asarray forces the device "
+                  "buffer to host; use jnp.asarray)",
+    "numpy.asarray": "host-sync materialization (use jnp.asarray)",
+    "bool": "host-sync truthiness (bool(traced array) blocks or raises "
+            "under tracing)",
+}
+BANNED_METHODS = {
+    "item": "host-sync scalar read (.item() blocks on the device value)",
+    "block_until_ready": "explicit host sync inside traced code",
+}
+# the obs layer's null-span surface is exempt (host-free disabled path)
+EXEMPT_PREFIXES = ("_trace.",)
+
+
+def _banned(call: ast.Call) -> str | None:
+    name = astutil.call_name(call)
+    if not name:
+        return None
+    if any(name.startswith(p) for p in EXEMPT_PREFIXES):
+        return None
+    if name in BANNED_CALLS:
+        return f"{name}() — {BANNED_CALLS[name]}"
+    for prefix, why in BANNED_PREFIXES:
+        if name.startswith(prefix):
+            return f"{name}() — {why}"
+    meth = name.split(".")[-1]
+    if isinstance(call.func, ast.Attribute) and meth in BANNED_METHODS:
+        return f".{meth}() — {BANNED_METHODS[meth]}"
+    return None
+
+
+def check(ctx: FileContext) -> list[Finding]:
+    if ctx.relpath.startswith("src/repro/obs/"):
+        return []  # the obs layer owns the clocks (null-span exemption)
+    reached = astutil.jit_reachable_functions(ctx.tree)
+    if not reached:
+        return []
+    out: list[Finding] = []
+    seen_lines: set[int] = set()
+    for fname, fn in sorted(reached.items()):
+        for call in astutil.iter_calls(fn):
+            why = _banned(call)
+            if why is None or call.lineno in seen_lines:
+                continue
+            seen_lines.add(call.lineno)
+            out.append(ctx.finding(
+                RULE, call,
+                f"{why} inside {fname}(), which is reachable from a "
+                f"jit/shard_map/pallas_call hot loop (DESIGN.md §14 "
+                f"trace-purity)"))
+    return out
+
+
+RULE = register(Rule(
+    name="trace-purity",
+    invariant="no time/random/host-sync calls in functions reachable from "
+              "jit, shard_map or pallas_call entry points",
+    check=check,
+    origin="PR 8 obs-layer zero-overhead pins",
+    default_filter=lambda rel: rel.startswith("src/"),
+))

@@ -1,0 +1,69 @@
+"""traversable-predicate: no raw adjacency liveness tests (DESIGN.md §1, §15).
+
+PR 4's parent-scan drift — ``bfs_step_jnp`` testing ``adj > 0`` bare
+while the expansion applied the endpoint-liveness mask — is the bug class
+this rule kills: exactly ONE predicate, ``core.graph.traversable`` (and
+its packed twin), may decide whether an edge is logically present. Any
+other comparison of an adjacency expression against a constant is either
+a liveness test that forgot the alive mask, or physical-bit bookkeeping
+that must say so with an inline allow.
+
+Heuristic: a Compare / BinOp whose operand's dotted source involves a
+name containing ``adj`` (``adj``, ``adj_packed``, ``adj_in``, ``adj_l``,
+``adjw_ref``, ...) tested against a numeric constant, outside the
+predicate's home ``core/graph.py`` and the host-side spec oracle.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import FileContext, Finding, Rule, register
+
+# files allowed to test adjacency raw: the predicate definition site and
+# the host-side python spec oracle (definitionally correct by inspection)
+ALLOWED = ("core/graph.py", "core/oracle.py")
+
+
+def _mentions_adj(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and "adj" in n.id:
+            return True
+        if isinstance(n, ast.Attribute) and "adj" in n.attr:
+            return True
+    return False
+
+
+def _is_const_num(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and isinstance(
+        node.value, (int, float)) and not isinstance(node.value, bool)
+
+
+def check(ctx: FileContext) -> list[Finding]:
+    if ctx.relpath.endswith(ALLOWED):
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        sides = [node.left] + list(node.comparators)
+        if not any(_is_const_num(s) for s in sides):
+            continue
+        exprs = [s for s in sides if not _is_const_num(s)]
+        if any(_mentions_adj(e) for e in exprs):
+            out.append(ctx.finding(
+                RULE, node,
+                "raw adjacency test — edge liveness must come from "
+                "core.graph.traversable()/traversable_packed() (or be an "
+                "explicitly allowed physical-bit read); the PR 4 "
+                "parent-scan drift is exactly this pattern"))
+    return out
+
+
+RULE = register(Rule(
+    name="traversable-predicate",
+    invariant="edge liveness is decided only by core.graph.traversable / "
+              "traversable_packed",
+    check=check,
+    origin="PR 4 parent-scan liveness drift",
+    default_filter=lambda rel: rel.startswith(("src/", "benchmarks/")),
+))

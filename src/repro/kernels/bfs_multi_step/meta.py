@@ -1,0 +1,58 @@
+"""KERNEL_META for the bfs_multi_step package — checked by the
+kernel-shape sanitizer (``python -m repro.analysis``, DESIGN.md §15).
+
+Pure literal by contract (``ast.literal_eval`` is the parser): 16777216 =
+16 MiB VMEM budget, 4194304 = the 4 MiB parent-broadcast scratch budget
+(kernel.py's ``_PARENT_BCAST_BUDGET``). ``q`` is the full query-slab
+height (the engine's admission cap pads to 64); ``tc`` = tw * 32 for the
+packed kernel.
+"""
+
+KERNEL_META = {
+    "package": "bfs_multi_step",
+    "vmem_budget_bytes": {"tpu": 16777216},
+    "dims": {"q": 64, "tc": 256},
+    "kernels": {
+        "multi_bfs_step_pallas": {
+            "tiles": {"tr": 256, "tc": 256},
+            "align": {"tr": 8, "tc": 128},
+            "divides": {"rows": ["tr"], "v": ["tc"]},
+            "operands": {
+                "frontiers": {"block": ["q", "tr"], "dtype": "float32"},
+                "adj": {"block": ["tr", "tc"], "dtype": "uint8"},
+                "alive": {"block": ["tc"], "dtype": "int32"},
+                "visited": {"block": ["q", "tc"], "dtype": "int32"},
+            },
+            "outputs": {
+                "new": {"block": ["q", "tc"], "dtype": "int32"},
+                "parent": {"block": ["q", "tc"], "dtype": "int32"},
+            },
+            "packed": False,
+            "pad_safety": None,
+            "wrapper": "multi_bfs_step",
+            "ref": "multi_bfs_step_ref",
+            "scratch_bytes": 4194304,
+        },
+        "multi_bfs_step_packed_pallas": {
+            "tiles": {"tr": 256, "tw": 8},
+            "align": {"tr": 8, "tw": 8},
+            "divides": {"rows": ["tr"], "w": ["tw"]},
+            "operands": {
+                "frontiers": {"block": ["q", "tr"], "dtype": "float32"},
+                "adj_packed": {"block": ["tr", "tw"], "dtype": "uint32"},
+                "alive": {"block": ["tc"], "dtype": "int32"},
+                "visited": {"block": ["q", "tc"], "dtype": "int32"},
+            },
+            "outputs": {
+                "new": {"block": ["q", "tc"], "dtype": "int32"},
+                "parent": {"block": ["q", "tc"], "dtype": "int32"},
+                "reach_words": {"block": ["q", "tw"], "dtype": "uint32"},
+            },
+            "packed": True,
+            "pad_safety": "slice",
+            "wrapper": "multi_bfs_step_packed",
+            "ref": "multi_bfs_step_packed_ref",
+            "scratch_bytes": 4194304,
+        },
+    },
+}

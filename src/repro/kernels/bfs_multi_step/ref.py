@@ -16,9 +16,12 @@ def multi_bfs_step_ref(frontiers, adj, alive, visited):
     """
     v = adj.shape[0]
     f = frontiers.astype(jnp.float32)
+    # repro-lint: allow(traversable-predicate) — raw tile; next line masks
     reach = (f @ adj.astype(jnp.float32)) > 0
     new = reach & (alive[None, :] > 0) & (visited == 0)
     idx = jnp.arange(v, dtype=jnp.int32)
+    # parent scan over the raw tile; `new` above already gates which
+    # parents survive  # repro-lint: allow(traversable-predicate)
     cand = jnp.where((frontiers[:, :, None] > 0) & (adj[None, :, :] > 0),
                      idx[None, :, None], INT32_MAX)
     parent = jnp.min(cand, axis=1)
@@ -38,9 +41,12 @@ def multi_bfs_step_packed_ref(frontiers, adj_packed, alive, visited):
     w = adj_packed.shape[1]
     vc = w * WORD_BITS
     adj = unpack_bits(adj_packed, vc).astype(jnp.uint8)  # [R, W*32]
+    # repro-lint: allow(traversable-predicate) — raw tile; next line masks
     reach = (frontiers.astype(jnp.float32) @ adj.astype(jnp.float32)) > 0
     new = reach & (alive[None, :] > 0) & (visited == 0)
     idx = jnp.arange(rows, dtype=jnp.int32)
+    # parent scan over the raw tile; `new` above already gates which
+    # parents survive  # repro-lint: allow(traversable-predicate)
     cand = jnp.where((frontiers[:, :, None] > 0) & (adj[None, :, :] > 0),
                      idx[None, :, None], INT32_MAX)
     parent = jnp.min(cand, axis=1)

@@ -1,0 +1,59 @@
+"""KERNEL_META for the bfs_step package — checked by the kernel-shape
+sanitizer (``python -m repro.analysis``, DESIGN.md §15).
+
+Pure literal by contract: the sanitizer reads it with ``ast.literal_eval``
+(no imports, no arithmetic), so sizes are plain ints (16777216 = 16 MiB).
+Tile defaults here must match the keyword-only defaults in kernel.py —
+the sanitizer flags drift in either direction.
+"""
+
+KERNEL_META = {
+    "package": "bfs_step",
+    "vmem_budget_bytes": {"tpu": 16777216},
+    # assumed sizes for non-tile block dims in the static VMEM estimate:
+    # tc = tw * 32 (the packed kernel's derived column-tile width)
+    "dims": {"tc": 256},
+    "kernels": {
+        "bfs_step_pallas": {
+            "tiles": {"tr": 256, "tc": 256},
+            "align": {"tr": 8, "tc": 128},
+            "divides": {"v": ["tr", "tc"]},
+            "operands": {
+                "frontier": {"block": ["tr"], "dtype": "float32"},
+                "adj": {"block": ["tr", "tc"], "dtype": "uint8"},
+                "alive": {"block": ["tc"], "dtype": "int32"},
+                "visited": {"block": ["tc"], "dtype": "int32"},
+            },
+            "outputs": {
+                "new": {"block": ["tc"], "dtype": "int32"},
+                "parent": {"block": ["tc"], "dtype": "int32"},
+            },
+            "packed": False,
+            "pad_safety": None,
+            "wrapper": "bfs_step",
+            "ref": "bfs_step_ref",
+            "scratch_bytes": 0,
+        },
+        "bfs_step_packed_pallas": {
+            "tiles": {"tr": 256, "tw": 8},
+            "align": {"tr": 8, "tw": 8},
+            "divides": {"v": ["tr"], "w": ["tw"]},
+            "operands": {
+                "frontier": {"block": ["tr"], "dtype": "float32"},
+                "adj_packed": {"block": ["tr", "tw"], "dtype": "uint32"},
+                "alive": {"block": ["tc"], "dtype": "int32"},
+                "visited": {"block": ["tc"], "dtype": "int32"},
+            },
+            "outputs": {
+                "new": {"block": ["tc"], "dtype": "int32"},
+                "parent": {"block": ["tc"], "dtype": "int32"},
+                "reach_words": {"block": ["tw"], "dtype": "uint32"},
+            },
+            "packed": True,
+            "pad_safety": "slice",
+            "wrapper": "bfs_step_packed",
+            "ref": "bfs_step_packed_ref",
+            "scratch_bytes": 0,
+        },
+    },
+}

@@ -17,9 +17,12 @@ def bfs_step_ref(frontier, adj, alive, visited):
     """
     v = adj.shape[0]
     f = frontier.astype(jnp.float32)
+    # repro-lint: allow(traversable-predicate) — raw tile; next line masks
     reach = (f @ adj.astype(jnp.float32)) > 0
     new = reach & (alive > 0) & (visited == 0)
     idx = jnp.arange(v, dtype=jnp.int32)
+    # parent scan over the raw tile; `new` above already gates which
+    # parents survive  # repro-lint: allow(traversable-predicate)
     cand = jnp.where((frontier[:, None] > 0) & (adj > 0), idx[:, None], INT32_MAX)
     parent = jnp.min(cand, axis=0)
     parent = jnp.where(new, parent, jnp.int32(-1))
@@ -39,6 +42,8 @@ def bfs_step_packed_ref(frontier, adj_packed, alive, visited):
     fp = jnp.zeros((vc,), jnp.float32).at[:v].set(frontier.astype(jnp.float32))
     adj_p = jnp.zeros((vc, vc), jnp.uint8).at[:v].set(adj)
     new, parent = bfs_step_ref(fp, adj_p, alive, visited)
+    # raw pre-mask OR partial: reach_words deliberately carries physical
+    # reachability (DESIGN.md §10)  # repro-lint: allow(traversable-predicate)
     reach = (fp @ adj_p.astype(jnp.float32)) > 0
     from repro.core.graph import pack_bits
 

@@ -1,0 +1,64 @@
+"""KERNEL_META for the edge_update package — checked by the kernel-shape
+sanitizer (``python -m repro.analysis``, DESIGN.md §15).
+
+Pure literal by contract (``ast.literal_eval`` is the parser). The
+adjacency/ecnt dtypes are passthrough (``"*"`` — the kernel's out_shape
+reuses the operand dtype), and the whole fired batch ``b`` rides along in
+every tile. The packed variant's padding story is ``"mask"``: the kernel
+read-modify-writes single bits via shifted masks (``1 << (c % 32)``), so
+padding bits in the uint32 words are preserved by construction rather
+than sliced off by the wrapper.
+"""
+
+KERNEL_META = {
+    "package": "edge_update",
+    "vmem_budget_bytes": {"tpu": 16777216},
+    # b = fired-batch length, v = dense column count, w = packed words
+    "dims": {"b": 1024, "v": 2048, "w": 64},
+    "kernels": {
+        "edge_update_pallas": {
+            "tiles": {"tr": 8},
+            "align": {"tr": 8},
+            "divides": {"v": ["tr"]},
+            "operands": {
+                "rows": {"block": ["b"], "dtype": "int32"},
+                "cols": {"block": ["b"], "dtype": "int32"},
+                "vals": {"block": ["b"], "dtype": "int32"},
+                "mask": {"block": ["b"], "dtype": "int32"},
+                "adj": {"block": ["tr", "v"], "dtype": "*"},
+                "ecnt": {"block": ["tr"], "dtype": "*"},
+            },
+            "outputs": {
+                "adj": {"block": ["tr", "v"], "dtype": "*"},
+                "ecnt": {"block": ["tr"], "dtype": "*"},
+            },
+            "packed": False,
+            "pad_safety": None,
+            "wrapper": "edge_update",
+            "ref": "edge_update_ref",
+            "scratch_bytes": 0,
+        },
+        "edge_update_packed_pallas": {
+            "tiles": {"tr": 8},
+            "align": {"tr": 8},
+            "divides": {"v": ["tr"]},
+            "operands": {
+                "rows": {"block": ["b"], "dtype": "int32"},
+                "cols": {"block": ["b"], "dtype": "int32"},
+                "vals": {"block": ["b"], "dtype": "int32"},
+                "mask": {"block": ["b"], "dtype": "int32"},
+                "adj_packed": {"block": ["tr", "w"], "dtype": "*"},
+                "ecnt": {"block": ["tr"], "dtype": "*"},
+            },
+            "outputs": {
+                "adj_packed": {"block": ["tr", "w"], "dtype": "*"},
+                "ecnt": {"block": ["tr"], "dtype": "*"},
+            },
+            "packed": True,
+            "pad_safety": "mask",
+            "wrapper": "edge_update_packed",
+            "ref": "edge_update_packed_ref",
+            "scratch_bytes": 0,
+        },
+    },
+}

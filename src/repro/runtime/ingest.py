@@ -259,8 +259,10 @@ class IngestPool:
         self._slots = [(0, state), (0, state)]
         self._cur = 0
         self._queue: list[Ticket] = []
-        self._mutex = threading.Lock()       # queue + stats guard
-        self._admission = threading.Lock()   # one admission round at a time
+        # queue/stats guard and one-admission-round guard: with-managed
+        # MODULE locks, not entity locks  # repro-lint: allow(lock-order)
+        self._mutex = threading.Lock()
+        self._admission = threading.Lock()   # repro-lint: allow(lock-order)
         self._next_id = 0
 
     # -- read side (never blocks behind writers) ----------------------------

@@ -1,0 +1,3 @@
+"""Deliberate dangling design citation (lint fixture).
+
+See DESIGN.md §99 for a section that does not exist."""  # LINT-EXPECT: design-refs

@@ -1,0 +1,4 @@
+"""Suppressed dangling design citation (lint fixture)."""
+
+# historical section, kept for the suppression test
+X = "DESIGN.md §99"  # repro-lint: allow(design-refs)

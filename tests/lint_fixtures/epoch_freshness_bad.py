@@ -1,0 +1,6 @@
+"""Deliberate raw index-read violations (lint fixture)."""
+from repro.index.query import query_reach  # LINT-EXPECT: epoch-freshness
+
+
+def bad_reach(idx, s, t):
+    return query_reach(idx, s, t)  # LINT-EXPECT: epoch-freshness

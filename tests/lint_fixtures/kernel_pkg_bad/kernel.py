@@ -1,0 +1,10 @@
+"""Deliberately drifted kernel package (lint fixture): tile default,
+output dtype, missing divisibility assert, missing oracle, pad_safety and
+VMEM budget all disagree with meta.py."""
+import jax
+import jax.numpy as jnp
+
+
+def toy_pallas(x, *, tr: int = 128):  # LINT-EXPECT: kernel-shape
+    v = x.shape[0]
+    return jax.ShapeDtypeStruct((v,), jnp.float32)

@@ -1,0 +1,21 @@
+"""KERNEL_META that disagrees with its kernel.py on purpose (fixture)."""
+
+KERNEL_META = {
+    "package": "kernel_pkg_bad",
+    "vmem_budget_bytes": {"tpu": 64},
+    "dims": {},
+    "kernels": {
+        "toy_pallas": {
+            "tiles": {"tr": 256},
+            "align": {"tr": 8},
+            "divides": {"v": ["tr"]},
+            "operands": {"x": {"block": ["tr"], "dtype": "int32"}},
+            "outputs": {"y": {"block": ["tr"], "dtype": "int32"}},
+            "packed": True,
+            "pad_safety": None,
+            "wrapper": "toy",
+            "ref": "toy_ref",
+            "scratch_bytes": 0,
+        },
+    },
+}

@@ -1,0 +1,1 @@
+"""Oracle module of the drifted fixture package — toy_ref is MISSING."""

@@ -1,0 +1,11 @@
+"""Kernel package with ONE deliberate drift, suppressed inline (fixture)."""
+import jax
+import jax.numpy as jnp
+
+
+# deliberate tile drift, pinned by the suppression test
+# repro-lint: allow(kernel-shape)
+def toy_pallas(x, *, tr: int = 128):
+    v = x.shape[0]
+    assert v % tr == 0
+    return jax.ShapeDtypeStruct((v,), jnp.int32)

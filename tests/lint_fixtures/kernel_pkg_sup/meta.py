@@ -1,0 +1,22 @@
+"""KERNEL_META whose only disagreement (tile default) is suppressed in
+kernel.py (fixture)."""
+
+KERNEL_META = {
+    "package": "kernel_pkg_sup",
+    "vmem_budget_bytes": {"tpu": 16777216},
+    "dims": {},
+    "kernels": {
+        "toy_pallas": {
+            "tiles": {"tr": 256},
+            "align": {"tr": 2},
+            "divides": {"v": ["tr"]},
+            "operands": {"x": {"block": ["tr"], "dtype": "int32"}},
+            "outputs": {"y": {"block": ["tr"], "dtype": "int32"}},
+            "packed": False,
+            "pad_safety": None,
+            "wrapper": "toy",
+            "ref": "toy_ref",
+            "scratch_bytes": 0,
+        },
+    },
+}

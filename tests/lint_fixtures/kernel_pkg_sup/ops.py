@@ -1,0 +1,5 @@
+"""Wrapper module of the suppressed fixture package."""
+
+
+def toy(x):
+    return x

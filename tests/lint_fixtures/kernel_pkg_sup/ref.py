@@ -1,0 +1,5 @@
+"""Oracle module of the suppressed fixture package."""
+
+
+def toy_ref(x):
+    return x

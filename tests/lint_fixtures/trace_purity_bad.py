@@ -1,0 +1,22 @@
+"""Deliberate trace-purity violations (lint fixture)."""
+import time
+
+import jax
+import numpy as np
+
+
+def helper(x):
+    t = time.perf_counter()  # LINT-EXPECT: trace-purity
+    return x + t
+
+
+@jax.jit
+def traced_entry(x):
+    x = helper(x)
+    host = np.asarray(x)  # LINT-EXPECT: trace-purity
+    return x + host.sum()
+
+
+def host_only(x):
+    # NOT jit-reachable: clocks are fine here
+    return time.time() + float(np.asarray(x).sum())

@@ -1,0 +1,11 @@
+"""Suppressed trace-purity violation (lint fixture)."""
+import time
+
+import jax
+
+
+@jax.jit
+def traced_entry(x):
+    # deliberate: pins that inline allows reach jit-reachable bodies
+    t = time.time()  # repro-lint: allow(trace-purity)
+    return x + t

@@ -1,0 +1,9 @@
+"""Deliberate raw adjacency liveness test (lint fixture)."""
+
+
+def bad_edge_present(adj, u, w):
+    return adj[u, w] > 0  # LINT-EXPECT: traversable-predicate
+
+
+def fine_unrelated(x):
+    return x > 0

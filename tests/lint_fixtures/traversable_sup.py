@@ -1,0 +1,6 @@
+"""Suppressed raw adjacency test (lint fixture)."""
+
+
+def allowed_physical_read(adj_packed, u, w):
+    # physical-bit bookkeeping, not a liveness decision
+    return adj_packed[u, w] > 0  # repro-lint: allow(traversable-predicate)

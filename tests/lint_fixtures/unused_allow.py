@@ -1,0 +1,3 @@
+"""An allow that silences nothing (lint fixture)."""
+
+X = 1  # repro-lint: allow(mirror-write)  # LINT-EXPECT: unused-suppression

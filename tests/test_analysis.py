@@ -1,0 +1,192 @@
+"""Tests for repro.analysis (DESIGN.md §15).
+
+Every rule fires on its deliberately-bad fixture at the marked lines
+(``# LINT-EXPECT: <rule>``), every suppressed twin is silent, unused
+allows and the baseline machinery behave, and the repo itself gates
+clean — the same invocation CI runs.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import framework, get_rule
+from repro.analysis.baseline import MAX_ENTRIES, Baseline, BaselineEntry
+from repro.analysis.framework import Finding
+from repro.analysis.rules.metrics_doc import missing_metrics, section_14
+
+ROOT = Path(__file__).resolve().parent.parent
+FIX = ROOT / "tests" / "lint_fixtures"
+EXPECT_RE = re.compile(r"#\s*LINT-EXPECT:\s*([a-z\-]+)")
+
+# (rule name, fixture stem) for the single-file rules
+FILE_RULES = [
+    ("mirror-write", "mirror_write"),
+    ("traversable-predicate", "traversable"),
+    ("lock-order", "lock_order"),
+    ("trace-purity", "trace_purity"),
+    ("epoch-freshness", "epoch_freshness"),
+    ("design-refs", "design_refs"),
+]
+KERNEL_BAD = sorted((FIX / "kernel_pkg_bad").glob("*.py"))
+KERNEL_SUP = sorted((FIX / "kernel_pkg_sup").glob("*.py"))
+
+
+def expected_lines(path: Path, rule: str) -> list[int]:
+    out = []
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        m = EXPECT_RE.search(line)
+        if m and m.group(1) == rule:
+            out.append(i)
+    return out
+
+
+def run_rule(rule: str, paths: list[Path]):
+    return framework.run(ROOT, paths=paths, rules=[get_rule(rule)])
+
+
+# ---------------------------------------------------------------------------
+# every rule fires on its fixture, at exactly the marked lines
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rule,stem", FILE_RULES)
+def test_rule_fires_at_marked_lines(rule, stem):
+    bad = FIX / f"{stem}_bad.py"
+    want = expected_lines(bad, rule)
+    assert want, f"fixture {bad} has no LINT-EXPECT markers"
+    result = run_rule(rule, [bad])
+    got = sorted(f.line for f in result.findings)
+    assert got == sorted(want), [f.render() for f in result.findings]
+    assert all(f.rule == rule for f in result.findings)
+
+
+@pytest.mark.parametrize("rule,stem", FILE_RULES)
+def test_rule_suppressed_variant_is_silent(rule, stem):
+    sup = FIX / f"{stem}_sup.py"
+    result = run_rule(rule, [sup])
+    assert result.findings == [], [f.render() for f in result.findings]
+    assert result.suppressed, "the allow() should have caught a finding"
+
+
+def test_kernel_shape_fires_on_drifted_package():
+    result = run_rule("kernel-shape", KERNEL_BAD)
+    messages = " | ".join(f.message for f in result.findings)
+    assert "tile default drift" in messages
+    assert "no assert in the wrapper enforces it" in messages
+    assert "dtype drift" in messages
+    assert "not found in ref.py" in messages
+    assert "pad_safety" in messages
+    assert "exceeds the tpu budget" in messages
+    # the kernel.py-anchored findings land on the marked def line
+    want = expected_lines(FIX / "kernel_pkg_bad" / "kernel.py",
+                          "kernel-shape")
+    kernel_lines = {f.line for f in result.findings
+                    if f.path.endswith("kernel_pkg_bad/kernel.py")}
+    assert set(want) <= kernel_lines
+
+
+def test_kernel_shape_suppressed_variant_is_silent():
+    result = run_rule("kernel-shape", KERNEL_SUP)
+    assert result.findings == [], [f.render() for f in result.findings]
+    assert result.suppressed, "the tile drift should be allow()-suppressed"
+
+
+def test_unused_suppression_is_flagged():
+    path = FIX / "unused_allow.py"
+    want = expected_lines(path, "unused-suppression")
+    result = run_rule("mirror-write", [path])
+    assert [f.line for f in result.findings] == want
+    assert result.findings[0].rule == framework.UNUSED_SUPPRESSION
+
+
+def test_unused_check_scoped_to_active_rules():
+    # running a DIFFERENT rule must not call the mirror-write allow dead
+    result = run_rule("design-refs", [FIX / "unused_allow.py"])
+    assert result.findings == [], [f.render() for f in result.findings]
+
+
+# ---------------------------------------------------------------------------
+# baseline machinery
+# ---------------------------------------------------------------------------
+def _finding(line=10):
+    return Finding("traversable-predicate", "src/x.py", line,
+                   "raw adjacency test — fixture")
+
+
+def test_baseline_grandfathers_matching_finding():
+    bl = Baseline([BaselineEntry(rule="traversable-predicate",
+                                 path="src/x.py", why="fixture", line=10,
+                                 contains="raw adjacency")])
+    live, grand, stale = bl.apply([_finding()])
+    assert live == [] and len(grand) == 1 and stale == []
+
+
+def test_baseline_stale_entry_is_a_finding():
+    bl = Baseline([BaselineEntry(rule="traversable-predicate",
+                                 path="src/x.py", why="fixture")])
+    live, grand, stale = bl.apply([])
+    assert live == [] and grand == []
+    assert [f.rule for f in stale] == ["stale-baseline"]
+
+
+def test_baseline_stale_check_scoped_to_active_rules():
+    bl = Baseline([BaselineEntry(rule="traversable-predicate",
+                                 path="src/x.py", why="fixture")])
+    _, _, stale = bl.apply([], active={"mirror-write"})
+    assert stale == []
+
+
+def test_baseline_cap_and_missing_why(tmp_path):
+    entries = [{"rule": "r", "path": "p", "why": f"e{i}"}
+               for i in range(MAX_ENTRIES + 1)]
+    entries.append({"rule": "r", "path": "p"})  # no why
+    f = tmp_path / "bl.json"
+    f.write_text(json.dumps({"entries": entries}))
+    bl = Baseline.load(f)
+    _, _, stale = bl.apply([], active=set())
+    msgs = " | ".join(x.message for x in stale)
+    assert "caps it at" in msgs and "one-line why" in msgs
+
+
+# ---------------------------------------------------------------------------
+# metrics-doc pure core
+# ---------------------------------------------------------------------------
+def test_missing_metrics_core():
+    doc = "## §14 — metrics\n\n| `ingest.batches` |\n\n## §1 — other\n"
+    assert section_14(doc).startswith("## §14")
+    assert missing_metrics(["ingest.batches"], doc) == []
+    assert missing_metrics(["serve.lost"], doc) == ["serve.lost"]
+    assert missing_metrics(["a", "b"], "no section") == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# CLI + the repo-wide gate (the exact CI invocation)
+# ---------------------------------------------------------------------------
+def test_cli_json_output(capsys):
+    from repro.analysis.cli import main
+    rc = main(["--root", str(ROOT), "--rule", "mirror-write",
+               "--no-baseline", "--json",
+               str(FIX / "mirror_write_bad.py")])
+    data = json.loads(capsys.readouterr().out)
+    assert rc == 1 and data["ok"] is False and data["findings"]
+
+
+def test_cli_list_rules(capsys):
+    from repro.analysis.cli import main
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for name in ("mirror-write", "kernel-shape", "metrics-doc"):
+        assert name in out
+
+
+def test_repo_gates_clean():
+    """The acceptance criterion itself: the committed tree, with its
+    committed baseline, has zero live findings."""
+    bl = Baseline.load(ROOT / "analysis_baseline.json")
+    assert len(bl.entries) <= MAX_ENTRIES
+    result = framework.run(ROOT, baseline=bl)
+    assert result.findings == [], [f.render() for f in result.findings]
+    assert result.files_scanned > 100
+    assert len(result.rules_run) >= 8

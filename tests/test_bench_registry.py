@@ -14,6 +14,7 @@ sys.path.insert(0, str(ROOT))
 from benchmarks.run import (  # noqa: E402
     FIGURES,
     check_committed_records,
+    preflight,
     validate_records,
     write_bench_files,
 )
@@ -92,6 +93,30 @@ def test_registry_matches_committed_bench_records_in_repo():
     schema-valid; figures without records are tolerated (fresh-clone rule)."""
     errors, _notes = check_committed_records()
     assert errors == [], errors
+
+
+def test_preflight_accepts_the_committed_registry():
+    """Every module registered in FIGURES exists under benchmarks/, imports
+    cleanly, and exposes main() — the --smoke import-and-registry gate."""
+    assert preflight() == []
+
+
+def test_preflight_catches_registry_typos_and_bad_entries(monkeypatch):
+    import benchmarks.run as run
+
+    monkeypatch.setattr(run, "FIGURES", (
+        ("ghost", "fig_ghost", "module that does not exist"),
+        ("driver", "run", "imports fine but exposes no figure entry"),
+    ))
+    errors = run.preflight()
+    assert any("benchmarks.fig_ghost" in e and "no such module" in e
+               for e in errors), errors
+    # prove require_attr is really checked: benchmarks.analytic imports
+    # fine but exposes no main() figure entry
+    monkeypatch.setattr(run, "FIGURES", (
+        ("analytic", "analytic", "no main() entry"),))
+    errors = run.preflight()
+    assert errors and "main" in errors[0], errors
 
 
 def test_roofline_records_ride_the_bench_schema():

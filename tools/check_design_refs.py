@@ -1,57 +1,32 @@
 #!/usr/bin/env python3
 """Fail if any `DESIGN.md §N` citation points at a missing section.
 
-Source docstrings cite the design document by section (`DESIGN.md §4`,
-`DESIGN.md §5(ii)`, ...). This check greps the code tree for those
-citations and verifies each resolves to a real heading in DESIGN.md:
+Thin wrapper kept for the old CLI entry point: the check itself is the
+``design-refs`` rule of ``repro.analysis`` (DESIGN.md §15) and normally
+runs inside ``python -m repro.analysis`` — the static-analysis CI gate.
 
-  * `§N`      -> a `## §N` heading must exist
-  * `§N(sub)` -> a `### §N(sub)` heading (or, failing that, `## §N`
-                 followed by the literal `§N(sub)` anywhere in the doc)
-
-Run from the repo root (CI does): python tools/check_design_refs.py
+Run from the repo root: python tools/check_design_refs.py
 """
 from __future__ import annotations
 
 import pathlib
-import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-SCAN_DIRS = ("src", "benchmarks", "tests", "examples")
-CITE = re.compile(r"DESIGN\.md\s+(§\d+(?:\([a-z]+\))?)")
-HEADING = re.compile(r"^#{2,3}\s+(§\d+(?:\([a-z]+\))?)(?=[\s—-]|$)", re.M)
+sys.path.insert(0, str(ROOT / "src"))
 
 
 def main() -> int:
-    design = ROOT / "DESIGN.md"
-    if not design.exists():
-        print("check_design_refs: DESIGN.md does not exist", file=sys.stderr)
-        return 1
-    text = design.read_text(encoding="utf-8")
-    headings = set(HEADING.findall(text))
+    from repro.analysis import framework, get_rule
 
-    failures = []
-    n_cites = 0
-    for d in SCAN_DIRS:
-        for path in sorted((ROOT / d).rglob("*.py")):
-            for lineno, line in enumerate(
-                    path.read_text(encoding="utf-8").splitlines(), 1):
-                for ref in CITE.findall(line):
-                    n_cites += 1
-                    base = ref.split("(")[0]
-                    ok = ref in headings or (
-                        "(" in ref and base in headings and ref in text)
-                    if not ok:
-                        failures.append(
-                            f"{path.relative_to(ROOT)}:{lineno}: cites "
-                            f"DESIGN.md {ref} but no such section heading")
-
-    if failures:
-        print("\n".join(failures), file=sys.stderr)
+    rule = get_rule("design-refs")
+    result = framework.run(ROOT, rules=[rule])
+    for f in result.findings:
+        print(f.render(), file=sys.stderr)
+    if result.findings:
         return 1
-    print(f"check_design_refs: {n_cites} citations, "
-          f"{len(headings)} sections — all resolve")
+    print(f"check_design_refs: {result.files_scanned} files scanned — "
+          f"all citations resolve (via repro.analysis design-refs)")
     return 0
 
 

@@ -1,57 +1,43 @@
 #!/usr/bin/env python3
 """Fail if any declared metric is missing from DESIGN.md §14's table.
 
-The metric surface is declared in exactly three places (DESIGN.md §14):
+Thin wrapper kept for the old CLI entry point: the check itself is the
+``metrics-doc`` rule of ``repro.analysis`` (DESIGN.md §15) and normally
+runs inside ``python -m repro.analysis`` — the static-analysis CI gate.
 
-  * ``repro.obs.metrics.OBS_METRICS`` — the tracing-only global registry;
-  * ``IngestStats._SPEC`` — the admission view (``ingest.<field>``);
-  * ``ServeStats._SPEC``  — the per-serve view (``serve.<field>``).
-
-Every qualified name must appear verbatim in DESIGN.md §14 so the doc's
-metric table can never silently drift from the code. Run from the repo
-root (the obs-tests CI step does): python tools/check_metrics_doc.py
+Run from the repo root: python tools/check_metrics_doc.py
 """
 from __future__ import annotations
 
 import pathlib
-import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+# old in-process API, kept for callers of the original tool
+from repro.analysis.rules.metrics_doc import (  # noqa: E402
+    missing_metrics,
+    section_14,
+)
 
 
-def declared_metrics() -> list[str]:
-    sys.path.insert(0, str(ROOT / "src"))
-    from repro.obs.metrics import OBS_METRICS
-    from repro.runtime.ingest import IngestStats
-    from repro.runtime.serve_loop import ServeStats
+def declared_metrics(root: pathlib.Path = ROOT) -> list[str]:
+    from repro.analysis.rules.metrics_doc import declared_metrics as impl
+    return impl(root)
 
-    names = set(OBS_METRICS)
-    for view in (IngestStats, ServeStats):
-        names.update(view._qual(f) for f in view._SPEC)
-    return sorted(names)
-
-
-def section_14(text: str) -> str:
-    m = re.search(r"^##\s+§14\b.*?(?=^##\s+§|\Z)", text, re.M | re.S)
-    return m.group(0) if m else ""
 
 def main() -> int:
-    design = (ROOT / "DESIGN.md").read_text(encoding="utf-8")
-    sec = section_14(design)
-    if not sec:
-        print("check_metrics_doc: DESIGN.md has no `## §14` section",
-              file=sys.stderr)
+    from repro.analysis import framework, get_rule
+
+    rule = get_rule("metrics-doc")
+    result = framework.run(ROOT, rules=[rule])
+    for f in result.findings:
+        print(f.render(), file=sys.stderr)
+    if result.findings:
         return 1
-    missing = [n for n in declared_metrics() if n not in sec]
-    if missing:
-        print("check_metrics_doc: metrics missing from DESIGN.md §14:",
-              file=sys.stderr)
-        for n in missing:
-            print(f"  {n}", file=sys.stderr)
-        return 1
-    print(f"check_metrics_doc: {len(declared_metrics())} metrics all "
-          "documented in DESIGN.md §14")
+    print(f"check_metrics_doc: {len(declared_metrics(ROOT))} metrics all "
+          "documented in DESIGN.md §14 (via repro.analysis metrics-doc)")
     return 0
 
 
