@@ -44,6 +44,9 @@ FIGURES = (
     ("snapshot", "fig_snapshot",
      "Wait-free snapshot — epoch-ring resolution vs retry loop under a "
      "100%-mutation adversary (DESIGN.md §13)"),
+    ("recovery", "fig_recovery",
+     "Durable ingest — WAL append overhead + recovery wall-time vs "
+     "checkpoint cadence (DESIGN.md §16)"),
 )
 
 REQUIRED_KEYS = {

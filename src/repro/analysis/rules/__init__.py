@@ -3,6 +3,7 @@
 ``framework.register`` at import time and listing it below."""
 from repro.analysis.rules import (  # noqa: F401  (registration side effects)
     design_refs,
+    durable_ack,
     epoch_freshness,
     kernel_shapes,
     lock_order,
@@ -14,6 +15,7 @@ from repro.analysis.rules import (  # noqa: F401  (registration side effects)
 
 __all__ = [
     "design_refs",
+    "durable_ack",
     "epoch_freshness",
     "kernel_shapes",
     "lock_order",

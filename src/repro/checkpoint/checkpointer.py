@@ -34,16 +34,48 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so renames/creates inside it are durable."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+# tmp dirs with a LIVE writer thread in this process: the stale-tmp sweep
+# below must not reap a write that is still going to publish (a simulated
+# in-process crash leaves the background writer running; a real kill -9
+# leaves no writer, so its debris is always sweepable)
+_live_tmp_lock = threading.Lock()
+_live_tmp: set[str] = set()
+
+
 class Checkpointer:
     def __init__(self, directory: str, *, keep: int = 3):
         self.dir = directory
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
+        # a crashed writer (kill between tmp write and rename) leaves a
+        # stale .tmp_step_* dir; it never shadows a published step, but
+        # clean it so retention math and disk usage stay honest
+        with _live_tmp_lock:
+            live = set(_live_tmp)
+        for name in os.listdir(directory):
+            path = os.path.join(directory, name)
+            if name.startswith(".tmp_step_") and path not in live:
+                shutil.rmtree(path, ignore_errors=True)
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, tree, *, extra: dict | None = None, blocking: bool = False):
-        """Snapshot ``tree`` at ``step``. Returns immediately unless blocking."""
+        """Snapshot ``tree`` at ``step``. Returns immediately unless blocking.
+
+        ``blocking=True`` joins the writer thread before returning, so the
+        checkpoint is fully published (fsynced + renamed) on return — the
+        guarantee recovery cadence and WAL truncation build on.
+        """
         self.wait()
         leaves, treedef = _flatten(tree)
         host_leaves = [np.asarray(x) for x in leaves]   # device -> host now
@@ -58,29 +90,63 @@ class Checkpointer:
             "time": time.time(),
         }
 
-        def write():
-            tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
-            final = os.path.join(self.dir, f"step_{step:09d}")
-            os.makedirs(tmp, exist_ok=True)
-            for i, leaf in enumerate(host_leaves):
-                np.save(os.path.join(tmp, f"leaf_{i:06d}.npy"), leaf)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._retain()
+        # register the tmp path BEFORE the thread starts: a concurrently
+        # constructed Checkpointer on the same directory must never sweep
+        # a write that is still going to publish
+        tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
+        with _live_tmp_lock:
+            _live_tmp.add(tmp)
 
+        def write():
+            try:
+                self._write(step, host_leaves, manifest)
+            except BaseException as e:  # surfaced by the next wait()/save()
+                self._error = e
+            finally:
+                with _live_tmp_lock:
+                    _live_tmp.discard(tmp)
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
         if blocking:
-            write()
-        else:
-            self._thread = threading.Thread(target=write, daemon=True)
-            self._thread.start()
+            self.wait()
+
+    def _write(self, step: int, host_leaves, manifest: dict,
+               publish: bool = True):
+        """Write tmp dir, fsync every file + the dirs, then atomic rename.
+        ``publish=False`` stops before the rename — the ``ckpt-mid-write``
+        crash stage in the chaos harness."""
+        tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        os.makedirs(tmp, exist_ok=True)
+        for i, leaf in enumerate(host_leaves):
+            p = os.path.join(tmp, f"leaf_{i:06d}.npy")
+            with open(p, "wb") as f:
+                np.save(f, leaf)
+                f.flush()
+                os.fsync(f.fileno())
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
+        if not publish:
+            return
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _fsync_dir(self.dir)
+        self._retain()
 
     def wait(self):
+        """Join the in-flight writer; re-raise any background failure (a
+        silently-dropped checkpoint must not look like a durable one)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("background checkpoint write failed") from err
 
     def _retain(self):
         steps = self.all_steps()
@@ -127,3 +193,23 @@ class Checkpointer:
             else:
                 out.append(jax.device_put(arr))
         return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+    def restore_raw(self, *, step: int | None = None
+                    ) -> tuple[list[np.ndarray], dict]:
+        """Load the raw host leaves + manifest without a template.
+
+        The graph-aware wrapper (runtime/recovery.py) needs this: its
+        trees carry a VARIABLE number of leaves (epoch-ring records vary
+        per checkpoint), so the template-based ``restore`` leaf-count
+        assertion cannot apply.
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves = [np.load(os.path.join(path, f"leaf_{i:06d}.npy"))
+                  for i in range(manifest["n_leaves"])]
+        return leaves, manifest

@@ -27,6 +27,7 @@ from repro.core.graph import (  # noqa: F401
     R_EDGE_REMOVED,
     R_FALSE,
     R_PENDING,
+    R_RECOVERING,
     R_TABLE_FULL,
     R_TRUE,
     R_VERTEX_NOT_PRESENT,

@@ -270,6 +270,55 @@ class EpochRing:
                 return e
         return None
 
+    # -- checkpoint serialization (DESIGN.md §16) ---------------------------
+    def dump(self) -> tuple[list[np.ndarray], dict]:
+        """Flatten the ring into (leaves, meta) for the graph checkpointer.
+
+        Leaf order: the 5 ``_latest`` fields (in ``_ROW_FIELDS`` order),
+        then 7 arrays per retained record (versions, rows, and the five
+        XOR patches).  ``meta`` is JSON-safe and records the layout so
+        ``load`` can reassemble records of any count — the reason the
+        checkpointer grew ``restore_raw`` (template restores assume a
+        fixed leaf count).
+        """
+        meta = {"retain": self.retain, "newest": self._newest,
+                "evicted": self.evicted, "n_records": len(self._records),
+                "has_latest": self._latest is not None,
+                "record_epochs": [r.epoch for r in self._records]}
+        leaves: list[np.ndarray] = []
+        if self._latest is not None:
+            leaves += [self._latest[k] for k in _ROW_FIELDS]
+        for rec in self._records:
+            leaves += [rec.versions, rec.rows, rec.vkey_xor, rec.valive_xor,
+                       rec.vver_xor, rec.ecnt_xor, rec.adj_xor]
+        return leaves, meta
+
+    @classmethod
+    def load(cls, leaves: list[np.ndarray], meta: dict) -> "EpochRing":
+        """Rebuild a ring from ``dump`` output, bit-identical: same window,
+        same records, same eviction counter."""
+        ring = cls(retain=int(meta["retain"]))
+        ring._newest = int(meta["newest"])
+        ring.evicted = int(meta["evicted"])
+        i = 0
+        if meta.get("has_latest"):
+            ring._latest = {k: np.asarray(leaves[i + j])
+                            for j, k in enumerate(_ROW_FIELDS)}
+            i += len(_ROW_FIELDS)
+        cap = (int(ring._latest["vkey"].shape[0])
+               if ring._latest is not None else 0)
+        for epoch in meta.get("record_epochs", []):
+            versions, rows, vk, va, vv, ec, adj = leaves[i:i + 7]
+            i += 7
+            ring._records.append(EpochRecord(
+                epoch=int(epoch), capacity=cap,
+                versions=np.asarray(versions),
+                rows=np.asarray(rows, dtype=np.int32),
+                vkey_xor=np.asarray(vk), valive_xor=np.asarray(va),
+                vver_xor=np.asarray(vv), ecnt_xor=np.asarray(ec),
+                adj_xor=np.asarray(adj)))
+        return ring
+
     def diff(self, e1: int, e2: int) -> EpochDiff:
         """Rows (and their keys) that changed between two retained epochs.
         Raises ``EpochEvictedError`` if either endpoint left the window."""

@@ -213,6 +213,8 @@ R_EDGE_ADDED = 5            # "EDGE ADDED"
 R_EDGE_REMOVED = 6          # "EDGE REMOVED"
 R_TABLE_FULL = 7            # out of slots — host must grow() and resubmit
 R_CAS_FAIL = 8              # versioned op saw a stale ecnt (CAS-failure analogue)
+R_RECOVERING = 9            # server-side typed rejection: write refused while
+                            # the pool restarts from WAL+checkpoint (DESIGN.md §16)
 
 RESULT_NAMES = {
     R_PENDING: "PENDING",
@@ -225,6 +227,7 @@ RESULT_NAMES = {
     R_EDGE_REMOVED: "EDGE REMOVED",
     R_TABLE_FULL: "TABLE FULL",
     R_CAS_FAIL: "CAS FAIL",
+    R_RECOVERING: "RECOVERING",
 }
 
 

@@ -158,6 +158,8 @@ class ReachSessionResult:
     # at when the ring validated a stale-at-head index (DESIGN.md §13)
     starved: bool = False            # the BFS session exhausted its retry
     # budget (wait-free epoch resolution or capped-retry, per on_conflict)
+    degraded: bool = False           # answered off the server's pinned
+    # pre-failure epoch while it recovers (DESIGN.md §16)
 
     def paths(self):
         """[(found, keys)] per pair — lazy witness paths via fused BFS."""

@@ -159,6 +159,15 @@ OBS_METRICS: dict[str, tuple[str, str]] = {
     "ring.evictions": ("counter", "delta records dropped by retention"),
     "ring.resolve_depth": ("histogram",
                            "XOR records replayed per state_at()"),
+    "wal.append_s": ("histogram",
+                     "wall seconds per durable WAL append (incl. fsync)"),
+    "ckpt.save_s": ("histogram",
+                    "wall seconds per published graph checkpoint"),
+    "recovery.restore_s": ("histogram",
+                           "wall seconds per checkpoint+WAL recovery"),
+    "serve.degraded": ("gauge",
+                       "1 while the server recovers (pinned reads, "
+                       "R_RECOVERING writes)"),
 }
 
 GLOBAL = MetricsRegistry()

@@ -24,6 +24,22 @@ import time
 from dataclasses import dataclass, field
 
 
+class SimulatedCrash(RuntimeError):
+    """Raised by the ingest pool when a FaultInjector durability stage
+    fires: models a process kill -9 at that exact point.  The pool is
+    dead after this — the chaos harness recovers a fresh pool from the
+    WAL + checkpoint and proves equivalence (DESIGN.md §16).
+
+    ``stage`` names where the kill landed; ``epoch`` is the epoch the
+    dying round WOULD have published (for harness assertions).
+    """
+
+    def __init__(self, stage: str, epoch: int = -1):
+        super().__init__(f"simulated kill -9 at stage {stage!r}")
+        self.stage = stage
+        self.epoch = epoch
+
+
 @dataclass
 class Heartbeat:
     timeout_s: float = 30.0
@@ -71,15 +87,41 @@ class FaultInjector:
         includes the batch's lanes) is computed, before it is published —
         the torn-write window the pool must recompute its way out of.
 
-    ``fired`` records consumed entries for assertions.
+    The four DURABILITY stages (DESIGN.md §16) model a whole-process
+    kill -9 instead of a single batch abort — the pool raises
+    ``SimulatedCrash`` and the chaos harness must recover a fresh pool
+    from checkpoint + WAL.  The client_id for these is the sentinel
+    ``"*"`` (the crash is not attributable to one client):
+
+      * ``"wal-append"`` — mid-append: a torn, checksum-invalid frame is
+        on disk; recovery must truncate it (round unacked -> no loss);
+      * ``"wal-fsync"`` — the record is fully durable but the epoch was
+        never published and no client was acked; replay must be
+        idempotent (the recovered log may extend the published prefix);
+      * ``"ckpt-mid-write"`` — checkpoint tmp dir written, rename never
+        happened; recovery must load the PREVIOUS checkpoint;
+      * ``"post-publish-pre-ack"`` — record durable AND epoch published,
+        but clients were never acked; recovery re-derives the identical
+        state and the harness treats the round as durable-but-unacked.
+
+    ``fired`` records consumed entries for assertions.  ``delays`` maps a
+    plan entry to the number of probes of that (client, stage) pair to let
+    PASS before it becomes eligible — ``delays[("*", "wal-fsync")] = 3``
+    arms the kill at the 4th round reaching the fsync point, which is how
+    the chaos suite sweeps a crash across every round of a schedule.
     """
 
     plan: list = field(default_factory=list)
     fired: list = field(default_factory=list)
+    delays: dict = field(default_factory=dict)
 
     def should_die(self, client_id: str, stage: str) -> bool:
         key = (client_id, stage)
         if key in self.plan:
+            left = self.delays.get(key, 0)
+            if left > 0:
+                self.delays[key] = left - 1
+                return False
             self.plan.remove(key)
             self.fired.append(key)
             return True

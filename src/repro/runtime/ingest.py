@@ -81,6 +81,8 @@ from repro.core.epochs import EpochEvictedError, EpochRing
 from repro.obs import trace as _trace
 from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.obs.metrics import global_registry as _obs_registry
+from repro.runtime.fault import SimulatedCrash
+from repro.runtime.wal import WalRecord
 
 _VERTEX_OPS = (OP_ADD_V, OP_REM_V, OP_CON_V)
 _EDGE_OPS = (OP_ADD_E, OP_REM_E, OP_CON_E)
@@ -203,6 +205,11 @@ class IngestStats(StatsView):
         "grow_events": ("counter", 0),         # R_TABLE_FULL auto-grow replays
         "epochs_retained": ("gauge", 0),       # epochs addressable in the ring
         "epochs_evicted": ("gauge", 0),        # deltas dropped by retention
+        "wal_records": ("gauge", 0),           # WAL records appended (lifetime)
+        "wal_bytes": ("gauge", 0),             # WAL bytes appended (lifetime)
+        "wal_append_s": ("counter", 0.0),      # wall time inside WAL appends
+        "wal_truncations": ("gauge", 0),       # checkpoint-driven truncations
+        "ckpt_saves": ("counter", 0),          # graph checkpoints published
     }
 
 
@@ -232,7 +239,8 @@ class IngestPool:
                  max_inflight: int = 8, max_coalesce_lanes: int = 256,
                  pad_lanes: bool = True, fault=None, on_grow=None,
                  clock=time.monotonic, retain_epochs: int = 64,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None,
+                 wal=None, ckpt=None, ckpt_every: int = 0):
         self.mesh = mesh if mesh is not None else getattr(state, "mesh", None)
         self.auto_grow = auto_grow
         self.max_inflight = int(max_inflight)
@@ -241,6 +249,16 @@ class IngestPool:
         self.fault = fault
         self.on_grow = on_grow
         self.clock = clock
+        # durability (DESIGN.md §16): a WriteAheadLog makes every acked
+        # round replayable; a GraphCheckpointer at a round cadence bounds
+        # the log (ckpt_every=0 disables cadence checkpoints)
+        self.wal = wal
+        self.ckpt = ckpt
+        self.ckpt_every = int(ckpt_every)
+        self._rounds_since_ckpt = 0
+        # the owning server stamps its index freshness here so cadence
+        # checkpoints carry it (runtime/serve_loop.py index_tick)
+        self.index_stamp: dict | None = None
         self.locks = EntityLockTable()
         # pool-local registry (shareable with the owning server's ServeStats
         # so one snapshot serves both, DESIGN.md §14)
@@ -486,6 +504,30 @@ class IngestPool:
                     self._abort(t)
                 continue                     # recompute from the same base
             now = self.clock()
+            # durability point (DESIGN.md §16): the round's WAL record is
+            # fsync-durable BEFORE the epoch flips and BEFORE any client is
+            # acked — a kill -9 past this line loses nothing acknowledged
+            self._wal_commit(live, res, lanes, pad)
+            with self._mutex:
+                for t in live:
+                    # linearization order is part of the published prefix
+                    # (epoch_log maps the new epoch to this length), so it
+                    # must be appended before _publish
+                    self.linearization.append(t.batch_id)
+                self.stats.fused_calls += 1
+                self.stats.coalesced_batches += len(live)
+                self.stats.coalesce_max = max(self.stats.coalesce_max, len(live))
+                self.stats.coalesce_lanes_max = max(
+                    self.stats.coalesce_lanes_max, lanes)
+                epoch = self._publish(state)
+                if self.wal is not None:
+                    self.stats.wal_records = self.wal.stats.records
+                    self.stats.wal_bytes = self.wal.stats.bytes
+                    self.stats.wal_append_s = self.wal.stats.append_s
+            if self._crash_fires("post-publish-pre-ack"):
+                # epoch durable AND published, clients never acked: recovery
+                # must reproduce it bit-identically (durable-but-unacked)
+                raise SimulatedCrash("post-publish-pre-ack", epoch)
             off = 0
             with self._mutex:
                 for t in live:
@@ -496,18 +538,95 @@ class IngestPool:
                     self.stats.wait_s += t.wait_s
                     self.stats.wait_max_s = max(self.stats.wait_max_s, t.wait_s)
                     self.stats.applied += 1
-                    self.linearization.append(t.batch_id)
                     self._queue.remove(t)
-                self.stats.fused_calls += 1
-                self.stats.coalesced_batches += len(live)
-                self.stats.coalesce_max = max(self.stats.coalesce_max, len(live))
-                self.stats.coalesce_lanes_max = max(
-                    self.stats.coalesce_lanes_max, lanes)
-                epoch = self._publish(state)
                 self.stats.queue_depth = len(self._queue)
             for t in live:
                 t.epoch = epoch
+            self._maybe_checkpoint(epoch, state)
             return len(live)
+
+    def _crash_fires(self, stage: str) -> bool:
+        """Durability crash stages are process-level, not per-client: the
+        FaultInjector plan names them under the sentinel client ``"*"``."""
+        return self.fault is not None and self.fault.should_die("*", stage)
+
+    def _wal_commit(self, live: list[Ticket], res, lanes: int, pad: int
+                    ) -> None:
+        """Append-fsync the round's linearized record (DESIGN.md §16).
+
+        This is the durability point the ``durable-ack`` lint rule keys
+        on: every ``_publish`` / ticket-ack site in this file must be
+        dominated by this call.  No-op without a WAL (the ordering
+        obligation still structures the code); ``wal-append`` and
+        ``wal-fsync`` crash stages land here.
+        """
+        epoch = self._slots[self._cur][0] + 1
+        if self.wal is None:
+            # still honor a planned crash so schedules can kill an
+            # undurable pool and prove the acked prefix needs no WAL
+            if (self._crash_fires("wal-append")
+                    or self._crash_fires("wal-fsync")):
+                raise SimulatedCrash("wal-append", epoch)
+            return
+        record = WalRecord(
+            epoch=epoch,
+            ops=[[int(x) for x in op] for t in live for op in t.ops],
+            pad=int(pad),
+            clients=[t.client_id for t in live],
+            batch_ids=[t.batch_id for t in live],
+            results=[int(x) for x in res[:lanes]],
+            lanes=int(lanes),
+        )
+        if self._crash_fires("wal-append"):
+            # kill mid-append: a torn, checksum-invalid frame hits disk;
+            # reopen must truncate it (the round was never acked)
+            self.wal.append_torn(record)
+            raise SimulatedCrash("wal-append", epoch)
+        before_s = self.wal.stats.append_s
+        with _trace.span("wal.append", epoch=epoch, lanes=lanes):
+            self.wal.append(record)
+        if _trace.enabled():
+            _obs_registry().observe("wal.append_s",
+                                    self.wal.stats.append_s - before_s)
+        if self._crash_fires("wal-fsync"):
+            # record fully durable, epoch never published, nobody acked:
+            # recovery replay must be idempotent about it
+            raise SimulatedCrash("wal-fsync", epoch)
+
+    def _maybe_checkpoint(self, epoch: int, state) -> None:
+        """Cadence checkpoint + WAL truncation behind it (the checkpoint-
+        truncation invariant: every epoch is covered by the checkpoint XOR
+        the WAL tail)."""
+        if self.ckpt is None or self.ckpt_every <= 0:
+            return
+        self._rounds_since_ckpt += 1
+        if self._rounds_since_ckpt < self.ckpt_every:
+            return
+        self.checkpoint_now(epoch=epoch, state=state)
+
+    def checkpoint_now(self, *, epoch: int | None = None, state=None) -> None:
+        """Force one durable graph checkpoint of the published head (used
+        by the cadence path, the serve loop on shutdown, and benchmarks)."""
+        if self.ckpt is None:
+            return
+        if epoch is None or state is None:
+            epoch, state = self.snapshot_epoch()
+        kwargs = dict(epoch=epoch, state=state, ring=self.ring,
+                      linearization=self.linearization,
+                      epoch_log=self.epoch_log, next_batch_id=self._next_id,
+                      index_stamp=self.index_stamp)
+        if self._crash_fires("ckpt-mid-write"):
+            # tmp dir fully written, rename never happens: recovery must
+            # load the PREVIOUS published step
+            self.ckpt.save_torn(**kwargs)
+            raise SimulatedCrash("ckpt-mid-write", epoch)
+        self.ckpt.save_graph(blocking=True, **kwargs)
+        self._rounds_since_ckpt = 0
+        with self._mutex:
+            self.stats.ckpt_saves += 1
+            if self.wal is not None:
+                self.wal.truncate_through(epoch)
+                self.stats.wal_truncations = self.wal.stats.truncations
 
     def flush(self) -> int:
         """Pump until the queue drains; returns total batches applied.

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    R_RECOVERING,
     R_TABLE_FULL,
     EpochEvictedError,
     GraphState,
@@ -42,6 +43,7 @@ from repro.index import (
 from repro.obs import trace as _trace
 from repro.obs.metrics import StatsView
 from repro.obs.metrics import global_registry as _obs_registry
+from repro.runtime.fault import SimulatedCrash
 
 
 class ServeStats(StatsView):
@@ -79,6 +81,10 @@ class ServeStats(StatsView):
         "ingest_wait_max_s": ("gauge", 0.0),
         "ingest_queue_depth_max": ("gauge", 0),
         "ingest_epochs": ("gauge", 0),        # snapshot epochs published
+        # -- durability / degraded mode (DESIGN.md §16) ---------------------
+        "degraded_reads": ("gauge", 0),       # reads served off the pinned epoch
+        "rejected_writes": ("gauge", 0),      # R_RECOVERING typed rejections
+        "recoveries": ("gauge", 0),           # restart-from-recovery completions
         "wall_s": ("gauge", 0.0),
     }
 
@@ -154,7 +160,8 @@ class GraphCoServer:
                  index_landmarks: int | None = None, ingest: bool = False,
                  max_inflight: int = 8, max_coalesce_lanes: int = 256,
                  fault=None, on_conflict: str | None = None,
-                 retain_epochs: int = 64):
+                 retain_epochs: int = 64, wal_dir: str | None = None,
+                 ckpt_every: int = 0, heartbeat=None, failure_policy=None):
         self.mesh = mesh
         self.auto_grow = auto_grow
         self.query_engine = query_engine
@@ -172,6 +179,25 @@ class GraphCoServer:
         self.tt_calls = 0
         self.tt_evicted = 0
         self.epoch_diff_calls = 0
+        # durability + degraded mode (DESIGN.md §16): while recovering,
+        # reads pin to the last published epoch and writes get typed
+        # R_RECOVERING rejections; Heartbeat suspects and SimulatedCrash
+        # both funnel into the backoff-budgeted restart-from-recovery path
+        self.degraded = False
+        self.degraded_reads = 0
+        self.rejected_writes = 0
+        self.recoveries = 0
+        self.heartbeat = heartbeat
+        self.failure_policy = failure_policy
+        self._pinned = None            # (epoch, state) while degraded
+        self._capacity = int(capacity)
+        self._retain_epochs = int(retain_epochs)
+        self._max_inflight = int(max_inflight)
+        self._max_coalesce_lanes = int(max_coalesce_lanes)
+        self._fault = fault
+        self._wal_dir = wal_dir
+        self._ckpt_every = int(ckpt_every)
+        self._ckpt = None
         dense = make_graph(capacity)
         self._state = partition.shard_state(mesh, dense) if mesh is not None else dense
         self.pool = None
@@ -181,11 +207,20 @@ class GraphCoServer:
             def bump_grow():
                 self.grow_events += 1
 
+            self._bump_grow = bump_grow
+            wal = None
+            if wal_dir is not None:
+                from repro.runtime.recovery import GraphCheckpointer
+                from repro.runtime.wal import WriteAheadLog
+
+                wal = WriteAheadLog(f"{wal_dir}/wal.log")
+                self._ckpt = GraphCheckpointer(f"{wal_dir}/ckpt")
             self.pool = IngestPool(
                 self._state, mesh=mesh, auto_grow=auto_grow,
                 max_inflight=max_inflight,
                 max_coalesce_lanes=max_coalesce_lanes, fault=fault,
-                on_grow=bump_grow, retain_epochs=retain_epochs)
+                on_grow=bump_grow, retain_epochs=retain_epochs,
+                wal=wal, ckpt=self._ckpt, ckpt_every=ckpt_every)
         # default conflict policy: a pool-backed server resolves starved
         # query sessions wait-free against its published epoch ring
         # (DESIGN.md §13); a bare server keeps the capped-retry deviation
@@ -196,7 +231,10 @@ class GraphCoServer:
     def state(self):
         """Latest published state. With the ingest pool enabled this is the
         double-buffered snapshot epoch — readers never observe (or wait on)
-        a round mid-admission (DESIGN.md §12)."""
+        a round mid-admission (DESIGN.md §12). While DEGRADED, reads pin to
+        the epoch published before the failure (DESIGN.md §16)."""
+        if self.degraded and self._pinned is not None:
+            return self._pinned[1]
         return self.pool.snapshot() if self.pool is not None else self._state
 
     @state.setter
@@ -218,6 +256,12 @@ class GraphCoServer:
         return grow(state, new_capacity)
 
     def submit(self, ops: list) -> np.ndarray:
+        if self.degraded:
+            # typed rejection: every lane answers R_RECOVERING; the client
+            # retries after recovery instead of blocking on it (DESIGN.md §16)
+            self.rejected_writes += 1
+            with _trace.span("serve.reject_write", lanes=len(ops)):
+                return np.full((len(ops),), R_RECOVERING, np.int32)
         if self.pool is not None:
             # single-tenant surface on the multi-tenant pool: enqueue as one
             # anonymous client and drain — same results, one linearization
@@ -252,6 +296,19 @@ class GraphCoServer:
         if self.pool is None:
             raise RuntimeError("GraphCoServer(ingest=True) required for "
                                "multi-tenant submission")
+        if self.degraded:
+            # typed rejection ticket: never enqueued, resolved immediately
+            # with R_RECOVERING lanes (DESIGN.md §16)
+            from repro.runtime.ingest import Ticket, batch_footprint
+
+            footprint, exclusive = batch_footprint(ops)
+            self.rejected_writes += 1
+            with _trace.span("serve.reject_write", lanes=len(ops)):
+                return Ticket(-1, str(client_id), list(ops), footprint,
+                              exclusive, self.pool.clock(),
+                              status="rejected",
+                              results=np.full((len(ops),), R_RECOVERING,
+                                              np.int32))
         return self.pool.submit(client_id, ops)
 
     def pump(self) -> int:
@@ -262,9 +319,91 @@ class GraphCoServer:
         """Drain the ingest queue (DESIGN.md §12)."""
         return self.pool.flush() if self.pool is not None else 0
 
+    # -- durability / degraded mode (DESIGN.md §16) -------------------------
+    def worker_tick(self, worker: str = "ingest", now: float | None = None):
+        """Heartbeat tick for an in-process worker (the serve loop ticks
+        ``"ingest"`` every decode step)."""
+        if self.heartbeat is not None:
+            self.heartbeat.tick(worker, now)
+
+    def check_health(self, now: float | None = None) -> list:
+        """Suspect scan: a worker past the heartbeat timeout triggers the
+        backoff-budgeted restart-from-recovery path. Returns the suspects."""
+        if self.heartbeat is None:
+            return []
+        suspects = self.heartbeat.suspects(now)
+        if suspects and not self.degraded:
+            self.handle_crash()
+            # the restarted worker is live again: reset its heartbeat so one
+            # stale timestamp cannot re-trigger recovery every scan
+            for w in suspects:
+                self.heartbeat.tick(w, now)
+        return suspects
+
+    def enter_degraded(self) -> None:
+        """Pin the last published epoch and start rejecting writes."""
+        if self.pool is not None:
+            self._pinned = self.pool.snapshot_epoch()
+        else:
+            self._pinned = (0, self._state)
+        self.degraded = True
+        if _trace.enabled():
+            _obs_registry().set("serve.degraded", 1)
+            _trace.counter("serve.degraded", 1)
+
+    def recover_now(self) -> None:
+        """Restart-from-recovery: rebuild the pool from checkpoint + WAL
+        replay; reads un-pin, writes are accepted again (DESIGN.md §16)."""
+        if self.pool is None or self._wal_dir is None:
+            # nothing durable to recover from: just un-pin
+            self.degraded = False
+            self._pinned = None
+            return
+        from repro.runtime.recovery import recover, resume_pool
+        from repro.runtime.wal import WriteAheadLog
+
+        with _trace.span("serve.recover"):
+            old = self.pool
+            wal = WriteAheadLog(f"{self._wal_dir}/wal.log")
+            rec = recover(self._ckpt, wal, capacity=self._capacity,
+                          mesh=self.mesh, auto_grow=self.auto_grow,
+                          retain_epochs=self._retain_epochs)
+            self.pool = resume_pool(
+                rec, mesh=self.mesh, auto_grow=self.auto_grow,
+                max_inflight=self._max_inflight,
+                max_coalesce_lanes=self._max_coalesce_lanes,
+                fault=self._fault, on_grow=self._bump_grow,
+                retain_epochs=self._retain_epochs, wal=wal, ckpt=self._ckpt,
+                ckpt_every=self._ckpt_every)
+            # carry forward what recovery cannot know: tickets already
+            # resolved before the crash (clients hold references to them)
+            self.pool.tickets.update(old.tickets)
+            self.pool.index_stamp = old.index_stamp
+        self.degraded = False
+        self._pinned = None
+        self.recoveries += 1
+        if _trace.enabled():
+            _obs_registry().set("serve.degraded", 0)
+            _trace.counter("serve.degraded", 0)
+
+    def handle_crash(self, exc=None) -> float:
+        """One suspect/crash -> degrade -> backoff -> recover cycle.
+        Returns the backoff the FailurePolicy budgeted (0.0 without one);
+        raises once the restart budget is exhausted — a crash loop must
+        page a human, not spin."""
+        self.enter_degraded()
+        wait = 0.0
+        if self.failure_policy is not None:
+            wait = self.failure_policy.on_failure()
+        self.recover_now()
+        return wait
+
     def _fetch_epoch(self):
         """(epoch, state) pin source for wait-free resolution — the pool's
-        published slot when ingesting, None otherwise (DESIGN.md §13)."""
+        published slot when ingesting, None otherwise (DESIGN.md §13).
+        While degraded, sessions pin to the frozen pre-failure epoch."""
+        if self.degraded and self._pinned is not None:
+            return lambda: self._pinned
         return self.pool.snapshot_epoch if self.pool is not None else None
 
     def _note_session(self, stats: dict):
@@ -274,6 +413,8 @@ class GraphCoServer:
             self.epoch_resolved += 1
 
     def get_path(self, k: int, l: int, max_rounds: int = 64):
+        if self.degraded and self.mesh is None:
+            self.degraded_reads += 1   # the mesh path counts via get_paths
         if self.mesh is None:
             pr = get_path_session(lambda: self.state, k, l,
                                   max_rounds=max_rounds,
@@ -300,6 +441,8 @@ class GraphCoServer:
         server's ``on_conflict`` policy — pool-backed servers resolve
         wait-free against the published epoch ring (DESIGN.md §13).
         Returns ([(found, keys)] per pair, rounds)."""
+        if self.degraded and self._pinned is not None:
+            self.degraded_reads += 1
         st: dict = {}
         out, rounds = get_paths_session(lambda: self.state, pairs,
                                         max_rounds=max_rounds,
@@ -370,6 +513,12 @@ class GraphCoServer:
         else:
             return False
         self.index_refreshes += 1
+        if self.pool is not None:
+            # freshness stamp rides the next graph checkpoint: after
+            # recovery the server knows which epoch the on-disk index
+            # labels were built against (DESIGN.md §16)
+            self.pool.index_stamp = {"epoch": int(self.pool.epoch),
+                                     "refreshes": int(self.index_refreshes)}
         return True
 
     def get_reach(self, pairs: list, max_rounds: int = 64):
@@ -386,6 +535,11 @@ class GraphCoServer:
                             fetch_epoch=self._fetch_epoch(),
                             ring=self.pool.ring if self.pool is not None
                             else None)
+        if self.degraded:
+            # answered off the pinned pre-failure epoch: flag it so clients
+            # can tell a degraded answer from a live one (DESIGN.md §16)
+            res.degraded = True
+            self.degraded_reads += 1
         if self.index_enabled:   # a server without an index has no misses
             self.index_hits += res.from_index
             self.index_misses += res.fellback
@@ -399,6 +553,8 @@ class GraphCoServer:
         """Batched ``core.bfs.reachable_count`` endpoint: |reachable set|
         per source key, answered from the index when fresh (one [Q,L]@[L,V]
         label product) and by one fused multi-BFS otherwise."""
+        if self.degraded:
+            self.degraded_reads += 1
         counts, from_index = reach_counts_session(
             lambda: self.state, self.index if self.index_enabled else None,
             keys)
@@ -427,6 +583,10 @@ class GraphCoServer:
             "server.tt_calls": self.tt_calls,
             "server.tt_evicted": self.tt_evicted,
             "server.epoch_diff_calls": self.epoch_diff_calls,
+            "server.degraded": int(self.degraded),
+            "server.degraded_reads": self.degraded_reads,
+            "server.rejected_writes": self.rejected_writes,
+            "server.recoveries": self.recoveries,
         }
         if self.pool is not None:
             out.update(self.pool.registry.snapshot())
@@ -464,6 +624,8 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
     ring0 = ((graph.getpath_starved, graph.epoch_resolved, graph.tt_calls,
               graph.tt_evicted, graph.epoch_diff_calls)
              if graph is not None else (0, 0, 0, 0, 0))
+    rec0 = ((graph.degraded_reads, graph.rejected_writes, graph.recoveries)
+            if graph is not None else (0, 0, 0))
     pool = graph.pool if graph is not None else None
     if clients is not None and pool is None:
         raise RuntimeError("clients= stream requires GraphCoServer(ingest=True)")
@@ -497,7 +659,19 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
                     stats.graph_ops += len(ops)
             # one admission round per decode step: coalesced fused apply of
             # whatever non-conflicting batches are queued (DESIGN.md §12)
-            graph.pump()
+            try:
+                graph.pump()
+            except SimulatedCrash:
+                # worker died mid-round: degrade, spend one restart-budget
+                # slot, recover from checkpoint + WAL (DESIGN.md §16); the
+                # FailurePolicy raises past its budget — that propagates
+                graph.handle_crash()
+        if graph is not None:
+            # heartbeat: the ingest worker ticks every decode step; a
+            # missing tick past the timeout trips check_health into the
+            # same restart-from-recovery path (DESIGN.md §16)
+            graph.worker_tick("ingest")
+            graph.check_health()
         if graph is not None:
             # background index refresh between decode steps: co-serving
             # stays non-blocking — queries racing a stale index fall back
@@ -547,7 +721,12 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         stats.decode_steps += 1
         stats.decode_tokens += b
     if pool is not None:
-        graph.flush()                        # drain whatever is still queued
+        try:
+            graph.flush()                    # drain whatever is still queued
+        except SimulatedCrash:
+            graph.handle_crash()
+            graph.flush()
+        pool = graph.pool                    # recovery may have replaced it
         stats.ingest_batches = pool.stats.applied - ing0[0]
         stats.ingest_fused_calls = pool.stats.fused_calls - ing0[1]
         stats.ingest_retries = pool.stats.retries - ing0[2]
@@ -567,6 +746,9 @@ def serve(model, params, prompts: np.ndarray, *, max_new_tokens: int,
         stats.tt_calls = graph.tt_calls - ring0[2]
         stats.tt_evicted = graph.tt_evicted - ring0[3]
         stats.epoch_diff_calls = graph.epoch_diff_calls - ring0[4]
+        stats.degraded_reads = graph.degraded_reads - rec0[0]
+        stats.rejected_writes = graph.rejected_writes - rec0[1]
+        stats.recoveries = graph.recoveries - rec0[2]
     stats.wall_s = time.time() - t0
     _session.set(decode_steps=stats.decode_steps,
                  getpath_calls=stats.getpath_calls,

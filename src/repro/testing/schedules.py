@@ -31,6 +31,7 @@ Three layers:
 from __future__ import annotations
 
 import itertools
+import os
 import random
 from dataclasses import dataclass, field
 
@@ -53,6 +54,7 @@ from repro.core import (
 )
 from repro.core import partition
 from repro.core.graph import OPCODE_NAMES
+from repro.runtime.fault import SimulatedCrash
 from repro.runtime.ingest import IngestPool
 
 # ---------------------------------------------------------------------------
@@ -278,12 +280,31 @@ class ReadObs:
 
 
 @dataclass
+class CrashInfo:
+    """Everything the harness snapshotted at the instant a durability
+    crash stage killed the pool (DESIGN.md §16): the published prefix the
+    recovered process must reproduce bit-identically."""
+
+    stage: str                 # FaultInjector stage that fired
+    step_index: int            # schedule step the crash landed in
+    epoch_attempted: int       # epoch the dying round would have published
+    published_epoch: int       # last epoch visible to readers pre-crash
+    linearization: list        # published linearization prefix at crash
+    epoch_log: dict            # epoch -> prefix length map at crash
+    acked: list                # batch_ids acknowledged (status "applied")
+    head_fields: dict          # field -> np.ndarray of the published head
+    ring_states: dict          # epoch -> {field -> np.ndarray} over window
+
+
+@dataclass
 class Trace:
     schedule: Schedule
     pool: IngestPool
     capacity: int          # initial capacity the pool started from
     mesh: object
     reads: list = field(default_factory=list)
+    durable_dir: str | None = None   # WAL + checkpoint root (None = undurable)
+    crash: CrashInfo | None = None   # set when a durability stage killed the run
 
     @property
     def linearization(self):
@@ -321,7 +342,8 @@ def _hostile_epoch_read(pool: IngestPool, pairs, *, max_rounds=3) -> ReadObs:
 
 def run_schedule(schedule: Schedule, *, capacity=32, mesh=None, fault=None,
                  auto_grow=True, max_inflight=8, max_coalesce_lanes=256,
-                 pad_lanes=True, retain_epochs=64) -> Trace:
+                 pad_lanes=True, retain_epochs=64, durable_dir=None,
+                 ckpt_every=0) -> Trace:
     """Execute a schedule against a fresh IngestPool; returns its Trace.
 
     Reads are taken against the pool's PUBLISHED snapshot epoch — a frozen
@@ -330,38 +352,89 @@ def run_schedule(schedule: Schedule, *, capacity=32, mesh=None, fault=None,
     ``read_epoch``/``tt`` steps additionally exercise the retained epoch
     ring: their observations carry the pinned/addressed epoch and flow
     through the same prefix check (DESIGN.md §13).
+
+    ``durable_dir`` attaches a WAL (and, with ``ckpt_every`` > 0, cadence
+    checkpoints) under that directory. A ``FaultInjector`` durability
+    stage then kills the run mid-schedule: the trace comes back with
+    ``crash`` set to the published prefix snapshot, and
+    ``check_recovery_equivalent`` proves a recovered pool reproduces it
+    bit-identically (DESIGN.md §16).
     """
     dense = make_graph(capacity)
     state = partition.shard_state(mesh, dense) if mesh is not None else dense
+    wal = ckpt = None
+    if durable_dir is not None:
+        from repro.runtime.recovery import GraphCheckpointer
+        from repro.runtime.wal import WriteAheadLog
+
+        wal = WriteAheadLog(os.path.join(durable_dir, "wal.log"))
+        ckpt = GraphCheckpointer(os.path.join(durable_dir, "ckpt"))
     pool = IngestPool(state, mesh=mesh, auto_grow=auto_grow,
                       max_inflight=max_inflight,
                       max_coalesce_lanes=max_coalesce_lanes,
                       pad_lanes=pad_lanes, fault=fault,
-                      retain_epochs=retain_epochs)
-    trace = Trace(schedule, pool, capacity, mesh)
-    for step in schedule.steps:
-        if step[0] == "submit":
-            pool.submit(step[1], step[2])
-        elif step[0] == "pump":
-            pool.pump()
-        elif step[0] == "flush":
-            pool.flush()
-        elif step[0] == "read":
-            epoch, snap = pool.snapshot_epoch()
-            out, _ = get_paths_session(lambda: snap, step[1])
-            trace.reads.append(ReadObs(epoch, list(step[1]), out))
-        elif step[0] == "read_epoch":
-            trace.reads.append(_hostile_epoch_read(pool, step[1]))
-        elif step[0] == "tt":
-            lo, hi = pool.epoch_window()
-            epoch = max(lo, hi - int(step[1]))
-            snap = pool.state_at(epoch)
-            out, _ = get_paths_session(lambda: snap, step[2])
-            trace.reads.append(ReadObs(epoch, list(step[2]), out, mode="tt"))
-        else:  # pragma: no cover - schedule author error
-            raise ValueError(f"unknown step {step!r}")
-    pool.flush()           # every trace ends drained (checkable end state)
+                      retain_epochs=retain_epochs, wal=wal, ckpt=ckpt,
+                      ckpt_every=ckpt_every)
+    trace = Trace(schedule, pool, capacity, mesh, durable_dir=durable_dir)
+    step_index = 0
+    try:
+        for step_index, step in enumerate(schedule.steps):
+            if step[0] == "submit":
+                pool.submit(step[1], step[2])
+            elif step[0] == "pump":
+                pool.pump()
+            elif step[0] == "flush":
+                pool.flush()
+            elif step[0] == "read":
+                epoch, snap = pool.snapshot_epoch()
+                out, _ = get_paths_session(lambda: snap, step[1])
+                trace.reads.append(ReadObs(epoch, list(step[1]), out))
+            elif step[0] == "read_epoch":
+                trace.reads.append(_hostile_epoch_read(pool, step[1]))
+            elif step[0] == "tt":
+                lo, hi = pool.epoch_window()
+                epoch = max(lo, hi - int(step[1]))
+                snap = pool.state_at(epoch)
+                out, _ = get_paths_session(lambda: snap, step[2])
+                trace.reads.append(ReadObs(epoch, list(step[2]), out,
+                                           mode="tt"))
+            else:  # pragma: no cover - schedule author error
+                raise ValueError(f"unknown step {step!r}")
+        step_index = len(schedule.steps)
+        pool.flush()       # every trace ends drained (checkable end state)
+    except SimulatedCrash as exc:
+        # the process is "dead": snapshot the published prefix the
+        # recovered one must be proven bit-identical to
+        trace.crash = _capture_crash(pool, exc, step_index, mesh)
+        if wal is not None:
+            wal.close()
     return trace
+
+
+def _capture_crash(pool: IngestPool, exc: SimulatedCrash, step_index: int,
+                   mesh) -> CrashInfo:
+    """Freeze everything a pre-crash reader could have observed: the
+    published head, every retained ring epoch, the linearization prefix,
+    and the set of acknowledged batches."""
+    epoch, snap = pool.snapshot_epoch()
+    dense = partition.unshard(snap) if mesh is not None else snap
+    head = {f: np.asarray(getattr(dense, f)).copy() for f in dense._fields}
+    ring_states: dict = {}
+    lo, hi = pool.ring.window()
+    for e in range(lo, hi + 1):
+        s = pool.state_at(e)
+        if mesh is not None and getattr(s, "mesh", None) is not None:
+            s = partition.unshard(s)
+        ring_states[e] = {f: np.asarray(getattr(s, f)).copy()
+                          for f in s._fields}
+    acked = sorted(bid for bid, t in pool.tickets.items()
+                   if t.status == "applied")
+    return CrashInfo(stage=exc.stage, step_index=step_index,
+                     epoch_attempted=int(exc.epoch),
+                     published_epoch=int(epoch),
+                     linearization=list(pool.linearization),
+                     epoch_log=dict(pool.epoch_log), acked=acked,
+                     head_fields=head, ring_states=ring_states)
 
 
 # ---------------------------------------------------------------------------
@@ -522,6 +595,122 @@ def check_aborted_invisible(trace: Trace) -> None:
             assert not pool.locks.held(entity), \
                 f"aborted batch {t.batch_id} leaked lock on entity {entity}"
     check_trace_linearizable(trace)
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery equivalence (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+def recover_trace(trace: Trace):
+    """Recover a fresh state from the crashed trace's WAL + checkpoint —
+    what a restarted process would boot from. Returns a ``Recovered``."""
+    from repro.runtime.recovery import GraphCheckpointer, recover
+    from repro.runtime.wal import WriteAheadLog
+
+    assert trace.durable_dir is not None, "trace ran without durable_dir"
+    wal = WriteAheadLog(os.path.join(trace.durable_dir, "wal.log"))
+    ckpt = GraphCheckpointer(os.path.join(trace.durable_dir, "ckpt"))
+    return recover(ckpt, wal, capacity=trace.capacity, mesh=trace.mesh,
+                   auto_grow=trace.pool.auto_grow,
+                   retain_epochs=trace.pool.ring.retain)
+
+
+def check_recovery_equivalent(trace: Trace, recovered=None):
+    """Assert a recovered pool reproduces the pre-crash published prefix
+    bit-identically (DESIGN.md §16). Six obligations:
+
+    1. zero acknowledged-batch loss: every batch acked pre-crash is in the
+       recovered linearization;
+    2. the pre-crash published linearization is a PREFIX of the recovered
+       one (``wal-fsync``/``post-publish-pre-ack`` may legally extend it
+       by the durable-but-unacked round — never rewrite it);
+    3. bit-identity: the recovered state AT the pre-crash published epoch
+       equals the captured head, field for field;
+    4. ring equality: every pre-crash retained epoch still addressable
+       after recovery reconstructs bit-identically;
+    5. epoch_log agreement on every shared epoch;
+    6. serial-oracle prefix: replaying the recovered linearization through
+       the sequential reference engine reproduces the recovered head bits
+       (the crashed execution stays linearizable after resurrection).
+
+    Returns the ``Recovered`` (recovering first if not supplied).
+    """
+    crash = trace.crash
+    assert crash is not None, "trace did not crash — nothing to recover"
+    if recovered is None:
+        recovered = recover_trace(trace)
+
+    # (1) zero acknowledged-batch loss
+    rec_lin = list(recovered.linearization)
+    rec_set = set(rec_lin)
+    for bid in crash.acked:
+        assert bid in rec_set, \
+            (f"acknowledged batch {bid} lost by recovery at stage "
+             f"{crash.stage!r} (recovered {rec_lin})")
+
+    # (2) published prefix preserved verbatim
+    assert rec_lin[: len(crash.linearization)] == crash.linearization, \
+        (f"recovered linearization {rec_lin} rewrites the pre-crash "
+         f"published prefix {crash.linearization}")
+    assert recovered.epoch >= crash.published_epoch, \
+        (f"recovered epoch {recovered.epoch} behind published "
+         f"{crash.published_epoch}")
+
+    # (3) bit-identity at the pre-crash published epoch
+    dense = partition.unshard(recovered.state) if trace.mesh is not None \
+        else recovered.state
+    at_published = dense if recovered.epoch == crash.published_epoch \
+        else recovered.ring.state_at(crash.published_epoch)
+    for name, want in crash.head_fields.items():
+        np.testing.assert_array_equal(
+            np.asarray(getattr(at_published, name)), want,
+            err_msg=(f"recovered state diverges from the pre-crash "
+                     f"published head in field {name!r} "
+                     f"(stage {crash.stage!r})"))
+
+    # (4) retained ring epochs reconstruct bit-identically
+    rlo, rhi = recovered.ring.window()
+    shared = 0
+    for e, fields in crash.ring_states.items():
+        if not rlo <= e <= rhi:
+            continue
+        shared += 1
+        got = recovered.ring.state_at(e)
+        for name, want in fields.items():
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, name)), want,
+                err_msg=(f"ring epoch {e} field {name!r} diverges after "
+                         f"recovery (stage {crash.stage!r})"))
+    assert shared > 0, \
+        (f"no pre-crash epoch survived into the recovered window "
+         f"[{rlo}, {rhi}] — nothing was actually proven")
+
+    # (5) epoch_log agreement on shared epochs
+    for e, prefix in crash.epoch_log.items():
+        if e in recovered.epoch_log:
+            assert recovered.epoch_log[e] == prefix, \
+                (f"epoch {e} prefix {recovered.epoch_log[e]} != pre-crash "
+                 f"{prefix}")
+
+    # (6) serial-oracle prefix: recovered head == sequential replay of the
+    # recovered linearization (grow-on-overflow discipline included)
+    state = make_graph(trace.capacity)
+    for bid in rec_lin:
+        t = trace.pool.tickets[bid]
+        batch = make_op_batch(t.ops)
+        state2, res = apply_ops(state, batch)
+        res = np.asarray(res)
+        while trace.pool.auto_grow and (res == R_TABLE_FULL).any():
+            state = grow(state, 2 * state.capacity)
+            state2, res = apply_ops(state, batch)
+            res = np.asarray(res)
+        state = state2
+    for name in dense._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(dense, name)),
+            np.asarray(getattr(state, name)),
+            err_msg=(f"recovered state diverges from the serial replay of "
+                     f"its own linearization in field {name!r}"))
+    return recovered
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ FILE_RULES = [
     ("trace-purity", "trace_purity"),
     ("epoch-freshness", "epoch_freshness"),
     ("design-refs", "design_refs"),
+    ("durable-ack", "durable_ack"),
 ]
 KERNEL_BAD = sorted((FIX / "kernel_pkg_bad").glob("*.py"))
 KERNEL_SUP = sorted((FIX / "kernel_pkg_sup").glob("*.py"))

@@ -112,3 +112,59 @@ def test_failure_policy_budget():
     assert fp.on_failure() == 2.0
     with pytest.raises(RuntimeError):
         fp.on_failure()
+
+
+# -- durability: torn writes, blocking publish, surfaced failures -----------
+def test_crash_mid_write_restores_previous_step(tmp_path):
+    """A writer killed between tmp write and rename must leave the prior
+    checkpoint as latest; the stale tmp dir is swept on the next boot."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.arange(4)}, blocking=True)
+    # simulate the kill: full tmp dir on disk, rename never happens
+    ck._write(2, [np.arange(4) * 9],
+              {"step": 2, "n_leaves": 1, "extra": {}}, publish=False)
+    assert any(n.startswith(".tmp_step_") for n in os.listdir(tmp_path))
+    assert ck.latest_step() == 1
+    out, m = ck.restore({"w": jnp.zeros(4, jnp.int32)})
+    assert m["step"] == 1
+    assert list(np.asarray(out["w"])) == [0, 1, 2, 3]
+    # restart: a fresh Checkpointer sweeps the torn tmp, keeps step 1
+    ck2 = Checkpointer(str(tmp_path))
+    assert not any(n.startswith(".tmp_step_") for n in os.listdir(tmp_path))
+    assert ck2.latest_step() == 1
+
+
+def test_save_blocking_publishes_before_return(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, {"w": jnp.ones(2)}, blocking=True)
+    # on return the rename already happened: no tmp dir, step visible
+    names = os.listdir(tmp_path)
+    assert "step_000000003" in names
+    assert not any(n.startswith(".tmp_step_") for n in names)
+
+
+def test_background_write_failure_surfaces_on_wait(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path))
+
+    def boom(*a, **k):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(ck, "_write", boom)
+    ck.save(1, {"w": jnp.ones(2)})          # async: failure lands later
+    with pytest.raises(RuntimeError, match="background checkpoint write"):
+        ck.wait()
+    # the error is consumed: the checkpointer is usable again
+    monkeypatch.undo()
+    ck.save(2, {"w": jnp.ones(2)}, blocking=True)
+    assert ck.latest_step() == 2
+
+
+def test_restore_raw_loads_variable_leaf_count(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    leaves = [np.arange(3), np.eye(2), np.array([7])]
+    ck.save(4, leaves, blocking=True)
+    raw, manifest = ck.restore_raw()
+    assert manifest["step"] == 4
+    assert len(raw) == 3
+    for a, b in zip(raw, leaves):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,122 @@
+"""Fault primitives pinned in isolation (DESIGN.md §16).
+
+The chaos/recovery suites build on four small mechanisms; this file pins
+their exact contracts so a regression surfaces here — as one obvious
+failing assert — rather than as a flaky recovery test three layers up:
+
+  * ``FailurePolicy`` — exponential backoff sequence and hard budget;
+  * ``Heartbeat``    — suspect detection under an injected fake clock;
+  * ``StragglerDetector`` — EWMA baseline that stragglers cannot poison;
+  * ``FaultInjector`` — one-shot plan consumption, probe-delay arming,
+    and the ``SimulatedCrash`` it makes the ingest pool raise.
+"""
+import pytest
+
+from repro.runtime.fault import (
+    FailurePolicy,
+    FaultInjector,
+    Heartbeat,
+    SimulatedCrash,
+    StragglerDetector,
+)
+
+
+# -- FailurePolicy ----------------------------------------------------------
+def test_failure_policy_backoff_doubles_each_restart():
+    fp = FailurePolicy(max_restarts=5, backoff_s=0.5)
+    assert [fp.on_failure() for _ in range(5)] == [0.5, 1.0, 2.0, 4.0, 8.0]
+    assert fp.restarts == 5
+
+
+def test_failure_policy_budget_exhaustion_raises():
+    fp = FailurePolicy(max_restarts=2, backoff_s=1.0)
+    fp.on_failure()
+    fp.on_failure()
+    with pytest.raises(RuntimeError, match="restart budget exhausted"):
+        fp.on_failure()
+    # the failed attempt still counted: the policy stays exhausted
+    with pytest.raises(RuntimeError):
+        fp.on_failure()
+
+
+# -- Heartbeat --------------------------------------------------------------
+def test_heartbeat_suspects_with_fake_clock():
+    hb = Heartbeat(timeout_s=5.0)
+    hb.tick("ingest", now=100.0)
+    hb.tick("index", now=102.0)
+    assert hb.suspects(now=104.0) == []
+    assert hb.suspects(now=105.5) == ["ingest"]
+    assert sorted(hb.suspects(now=110.0)) == ["index", "ingest"]
+
+
+def test_heartbeat_retick_clears_suspicion():
+    hb = Heartbeat(timeout_s=5.0)
+    hb.tick("ingest", now=0.0)
+    assert hb.suspects(now=6.0) == ["ingest"]
+    hb.tick("ingest", now=6.0)      # the recovery path re-ticks survivors
+    assert hb.suspects(now=10.0) == []
+
+
+def test_heartbeat_boundary_is_strictly_greater():
+    hb = Heartbeat(timeout_s=5.0)
+    hb.tick("w", now=0.0)
+    assert hb.suspects(now=5.0) == []       # exactly at timeout: alive
+    assert hb.suspects(now=5.0001) == ["w"]
+
+
+# -- StragglerDetector ------------------------------------------------------
+def test_straggler_flagged_without_poisoning_baseline():
+    sd = StragglerDetector(factor=3.0, alpha=0.1)
+    for _ in range(20):
+        assert not sd.observe(0.1)
+    base = sd.ewma_s
+    # a burst of 10x stragglers is flagged AND leaves the baseline intact,
+    # so the next normal step is not mis-classified
+    for _ in range(5):
+        assert sd.observe(1.0)
+    assert sd.flagged == 5
+    assert sd.ewma_s == base
+    assert not sd.observe(0.11)
+
+
+def test_straggler_first_observation_seeds_baseline():
+    sd = StragglerDetector(factor=3.0)
+    assert not sd.observe(2.0)      # nothing to compare against yet
+    assert sd.ewma_s == 2.0
+    assert not sd.observe(2.5)      # within factor of the seed
+
+
+# -- FaultInjector + SimulatedCrash -----------------------------------------
+def test_injector_plan_entry_fires_once():
+    fi = FaultInjector(plan=[("c0", "admit")])
+    assert not fi.should_die("c1", "admit")     # wrong client
+    assert not fi.should_die("c0", "apply")     # wrong stage
+    assert fi.should_die("c0", "admit")
+    assert fi.fired == [("c0", "admit")]
+    assert not fi.should_die("c0", "admit")     # consumed — one-shot
+    assert fi.plan == []
+
+
+def test_injector_delay_arms_at_nth_probe():
+    key = ("*", "wal-fsync")
+    fi = FaultInjector(plan=[key], delays={key: 3})
+    probes = [fi.should_die(*key) for _ in range(5)]
+    assert probes == [False, False, False, True, False]
+    assert fi.fired == [key]
+
+
+def test_injector_durability_stages_use_sentinel_client():
+    # the four §16 kill stages are probed with client "*": an entry
+    # planned for a named client must never fire there
+    fi = FaultInjector(plan=[("c0", "post-publish-pre-ack")])
+    assert not fi.should_die("*", "post-publish-pre-ack")
+    assert fi.plan == [("c0", "post-publish-pre-ack")]
+
+
+def test_simulated_crash_carries_stage_and_epoch():
+    exc = SimulatedCrash("wal-append", epoch=7)
+    assert isinstance(exc, RuntimeError)
+    assert exc.stage == "wal-append"
+    assert exc.epoch == 7
+    assert "wal-append" in str(exc)
+    assert SimulatedCrash("ckpt-mid-write").epoch == -1
